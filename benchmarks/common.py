@@ -1,0 +1,61 @@
+"""Shared benchmark scaffolding: a tiny trainable problem + timing setup."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import flatten_util
+
+from repro.core import costmodel
+from repro.core.async_engine import PSEngine, SimConfig
+from repro.core.easgd import EASGDConfig
+from repro.data.synthetic import make_classification_dataset
+from repro.models import cnn
+
+
+def make_mlp_problem(seed: int = 0, n_train: int = 4096, n_test: int = 1024,
+                     d_in: int = 64, batch: int = 64, noise: float = 1.6):
+    """A LeNet-stand-in classification problem small enough for this CPU
+    but hard enough that optimizer schedules separate. Returns
+    (w0_flat, grad_fn, err_fn, nbytes)."""
+    x, y = make_classification_dataset(n_train + n_test, shape=(d_in,),
+                                       noise=noise, seed=seed)
+    xtr, ytr = x[:n_train], y[:n_train]
+    xte, yte = x[n_train:], y[n_train:]
+    params = cnn.mlp_init(jax.random.PRNGKey(seed), d_in=d_in, d_hidden=64,
+                          depth=2)
+    flat, unravel = flatten_util.ravel_pytree(params)
+
+    @jax.jit
+    def loss_flat(w, xb, yb):
+        return cnn.xent_loss(cnn.mlp_apply(unravel(w), xb), yb)
+
+    gfn = jax.jit(jax.grad(loss_flat))
+
+    @jax.jit
+    def err_flat(w):
+        return 1.0 - cnn.accuracy(cnn.mlp_apply(unravel(w), xte), yte)
+
+    rngs = {}
+
+    def grad_fn(w, step, worker):
+        rng = rngs.setdefault(worker, np.random.RandomState(1000 + worker))
+        idx = rng.randint(0, n_train, size=batch)
+        return np.asarray(gfn(jnp.asarray(w, jnp.float32), xtr[idx], ytr[idx]),
+                          np.float64)
+
+    def err_fn(w):
+        return float(err_flat(jnp.asarray(w, jnp.float32)))
+
+    return np.asarray(flat, np.float64), grad_fn, err_fn
+
+
+def default_engine(seed=0, n_workers=4, t_compute=2e-3, **problem_kw):
+    w0, grad_fn, err_fn = make_mlp_problem(seed=seed, **problem_kw)
+    easgd = EASGDConfig(eta=0.05, rho=0.05, mu=0.9)
+    sim = SimConfig(n_workers=n_workers, t_compute=t_compute, seed=seed)
+    return PSEngine(grad_fn, err_fn, w0, easgd, sim)
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.3f},{derived}")

@@ -1,0 +1,54 @@
+"""Paper Fig 12 / §6.2: partitioning the chip into P groups (divide-and-
+conquer). Paper: AlexNet/CIFAR on KNL — 1/4/8/16 parts give 1605/1025/823/
+490 s to equal accuracy (≈3.3× at 16 parts), limited by MCDRAM capacity
+(16 parts × (249 MB weights + 687 MB data) ≈ 15 GB ≈ MCDRAM).
+
+We reproduce the sweep with the DES partition model on the paper's KNL
+constants, then project the same divide-and-conquer onto a TPU v5e pod
+(pods = NUMA groups — the DESIGN.md mapping).
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row
+from repro.core import costmodel
+from repro.core.des import partition_sweep_time
+
+ALEXNET_BYTES = 249e6
+CIFAR_BYTES = 687e6
+MCDRAM = 16e9
+
+
+def run(quick: bool = False):
+    # per-epoch single-group compute time calibrated to the paper's 1-part
+    # case (1605 s to target accuracy)
+    t1 = 1605.0
+    knl_internal = costmodel.Network("KNL on-chip", 2e-6, 1 / 100e9)
+    base = None
+    for parts in (1, 4, 8, 16, 32):
+        t = partition_sweep_time(
+            parts, t_compute_1=t1, weight_bytes=ALEXNET_BYTES,
+            fast_mem_bytes=MCDRAM, data_bytes=CIFAR_BYTES, net=knl_internal)
+        if base is None:
+            base = t
+        csv_row(f"fig12/knl/{parts}_parts", t * 1e6,
+                f"t={t:.0f}s;speedup={base/t:.2f}x")
+    # paper's observed points for comparison
+    for parts, t_paper in ((1, 1605), (4, 1025), (8, 823), (16, 490)):
+        csv_row(f"fig12/paper_reference/{parts}_parts", 0.0, f"{t_paper}s")
+
+    # TPU projection: pods as groups (gemma3-4b train_4k per-step compute)
+    w_bytes = 3.9e9 * 4
+    for pods in (1, 2, 4, 8):
+        t = partition_sweep_time(
+            pods, t_compute_1=2.0, weight_bytes=w_bytes,
+            fast_mem_bytes=float("inf"), data_bytes=0.0,
+            net=costmodel.TPU_DCI)
+        csv_row(f"fig12/tpu_pods/{pods}", t * 1e6, f"t_step_eff={t:.3f}s")
+
+
+def main(quick: bool = False):
+    run(quick)
+
+
+if __name__ == "__main__":
+    main()

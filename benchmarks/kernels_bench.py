@@ -1,0 +1,71 @@
+"""Microbenchmarks of the Pallas kernel oracles on CPU (wall time) + the
+analytic TPU projection of each kernel's HBM-bound runtime.
+
+(The Pallas kernels themselves validate in interpret mode; wall-clock here
+measures the XLA oracle path — the kernels' TPU benefit is reported via the
+bandwidth model, since this container has no TPU.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.core import costmodel
+from repro.kernels import ref
+from repro.utils.timing import time_fn
+
+
+def run(quick: bool = False):
+    key = jax.random.PRNGKey(0)
+    chip = costmodel.TPU_V5E
+
+    # fused elastic update: bandwidth floor = 5 reads + 3 writes
+    n = 1 << 20
+    ks = jax.random.split(key, 5)
+    bufs = [jax.random.normal(k, (n,)) for k in ks]
+    fn = jax.jit(lambda *b: ref.elastic_update_ref(
+        *b, eta=0.01, rho=0.01, mu=0.9, n_workers=2))
+    t = time_fn(fn, *bufs, iters=5)
+    ideal_tpu = 8 * n * 4 / chip.hbm_bandwidth
+    naive_tpu = 18 * n * 4 / chip.hbm_bandwidth   # unfused: each eq re-reads
+    csv_row("kernels/elastic_update_oracle", t * 1e6,
+            f"tpu_ideal={ideal_tpu*1e6:.1f}us;"
+            f"tpu_unfused={naive_tpu*1e6:.1f}us;"
+            f"fusion_win={naive_tpu/ideal_tpu:.2f}x")
+
+    # flash attention: HBM O(S·D) vs naive O(S^2)
+    B, S, H, D = 1, 1024 if quick else 2048, 4, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.bfloat16)
+    from repro.models.attention import blocked_attention
+    fa = jax.jit(lambda q, k, v: blocked_attention(q, k, v, causal=True))
+    t = time_fn(fa, q, k, v, iters=3)
+    flash_bytes = 4 * B * S * H * D * 2
+    naive_bytes = flash_bytes + 2 * B * H * S * S * 4
+    csv_row("kernels/flash_attention_oracle", t * 1e6,
+            f"S={S};tpu_hbm_flash={flash_bytes/chip.hbm_bandwidth*1e6:.1f}us;"
+            f"tpu_hbm_naive={naive_bytes/chip.hbm_bandwidth*1e6:.1f}us")
+
+    # ssd intra-chunk
+    BH, S2, P_, N, L = 8, 512 if quick else 1024, 64, 128, 128
+    ks = jax.random.split(key, 4)
+    a = -jax.nn.softplus(jax.random.normal(ks[0], (BH, S2)))
+    x = jax.random.normal(ks[1], (BH, S2, P_))
+    b = jax.random.normal(ks[2], (BH, S2, N))
+    c = jax.random.normal(ks[3], (BH, S2, N))
+    fs = jax.jit(lambda a, x, b, c: ref.ssd_intra_ref(a, x, b, c, chunk=L))
+    t = time_fn(fs, a, x, b, c, iters=3)
+    flops = 2 * BH * S2 * L * (N + P_)
+    csv_row("kernels/ssd_intra_oracle", t * 1e6,
+            f"tpu_mxu={flops/costmodel.TPU_V5E.peak_flops*1e6:.2f}us")
+
+
+def main(quick: bool = False):
+    run(quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Roofline table from the dry-run JSONL (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun.jsonl and emits, per (arch × shape × mesh):
+  compute/memory/collective terms (s), dominant bottleneck, MODEL_FLOPS,
+  MODEL_FLOPS/HLO_FLOPS, roofline fraction, fits-16GB.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import csv_row
+
+DEFAULT_PATH = os.environ.get("DRYRUN_JSONL", "results/dryrun.jsonl")
+
+
+def load(path=DEFAULT_PATH):
+    rows = {}
+    if not os.path.exists(path):
+        return rows
+    for line in open(path):
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if r.get("ok"):
+            rows[(r["arch"], r["shape"], r["mesh_kind"])] = r
+    return rows
+
+
+def run(quick: bool = False, path=DEFAULT_PATH):
+    rows = load(path)
+    if not rows:
+        csv_row("roofline/missing", 0.0, f"no dry-run results at {path}")
+        return
+    for (arch, shape, mesh), r in sorted(rows.items()):
+        rl = r["roofline"]
+        csv_row(
+            f"roofline/{arch}/{shape}/{mesh}",
+            rl["bound_s"] * 1e6,
+            f"dom={rl['dominant']};c={rl['compute_s']:.2e};"
+            f"m={rl['memory_s']:.2e};n={rl['collective_s']:.2e};"
+            f"useful={r.get('useful_flops_ratio', 0):.2f};"
+            f"frac={r.get('roofline_fraction', 0):.3f};"
+            f"peakGiB={r.get('peak_bytes_per_device', 0)/2**30:.1f};"
+            f"fits={r.get('fits_16gb')}")
+
+
+def main(quick: bool = False):
+    run(quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark driver: one module per paper table/figure (+ kernels +
+roofline). Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig6_8,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = (
+    "fig6_8_convergence",   # Figs 6 & 8: the nine algorithms, error vs time
+    "table3_breakdown",     # Table 3 / Fig 11: breakdown + 5.3x
+    "fig10_packing",        # Fig 10: packed vs per-layer communication
+    "fig12_partitioning",   # Fig 12: chip partitioning sweep
+    "table4_weakscaling",   # Table 4: weak scaling to 4352 cores
+    "kernels_bench",        # Pallas kernel oracles + TPU projections
+    "roofline",             # §Roofline table from the dry-run JSONL
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    failures = []
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# === benchmarks.{name} ===", flush=True)
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main(quick=args.quick)
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(name)
+            print(f"# {name} FAILED:\n{traceback.format_exc()}", flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}", flush=True)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

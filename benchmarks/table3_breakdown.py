@@ -1,0 +1,58 @@
+"""Paper Table 3 / Fig 11: per-part time breakdown of the EASGD variants and
+the end-to-end speedup of Sync EASGD3 over Original EASGD.
+
+The paper's multi-GPU box is modeled with its own constants: PCIe-switch
+links for CPU↔GPU and GPU↔GPU, measured fwd/bwd per batch, and the paper's
+iteration counts (Original EASGD needs 5× the iterations of the sync
+variants at equal accuracy because only one worker trains per iteration —
+its Table 3: 5000 vs 1000). Claims checked:
+  * communication share: Original ≈ 87%, Sync EASGD3 ≈ 14%
+  * end-to-end speedup Sync EASGD3 vs Original ≈ 5.3×
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import csv_row
+from repro.core import costmodel
+from repro.core.des import (
+    GPU_BOX, breakdown_original_easgd, breakdown_sync_easgd,
+)
+
+
+def run(quick: bool = False):
+    box = GPU_BOX
+    # paper Table 3 setup: MNIST/LeNet on 4 GPUs; |W| = LeNet ~ 1.7 MB but
+    # paper's AlexNet-sized runs use 249 MB — we report LeNet (their Table 3)
+    rows = {}
+    rows["original_easgd"] = breakdown_original_easgd(box, iters=5000)
+    rows["sync_easgd1"] = breakdown_sync_easgd(box, iters=1000,
+                                               weights_on="cpu",
+                                               overlap=False)
+    rows["sync_easgd2"] = breakdown_sync_easgd(box, iters=1000,
+                                               weights_on="gpu",
+                                               overlap=False)
+    rows["sync_easgd3"] = breakdown_sync_easgd(box, iters=1000,
+                                               weights_on="gpu",
+                                               overlap=True)
+
+    for name, r in rows.items():
+        csv_row(f"table3/{name}", 1e6 * r.total_s / r.iters,
+                f"total={r.total_s:.2f}s;comm_ratio={r.comm_ratio:.2f}")
+
+    speedup = rows["original_easgd"].total_s / rows["sync_easgd3"].total_s
+    csv_row("table3/speedup_sync3_vs_original", 0.0,
+            f"{speedup:.2f}x (paper: 5.3x)")
+    csv_row("table3/comm_ratio_original", 0.0,
+            f"{rows['original_easgd'].comm_ratio:.2f} (paper: 0.87)")
+    csv_row("table3/comm_ratio_sync3", 0.0,
+            f"{rows['sync_easgd3'].comm_ratio:.2f} (paper: 0.14)")
+    return rows, speedup
+
+
+def main(quick: bool = False):
+    run(quick=quick)
+
+
+if __name__ == "__main__":
+    main()

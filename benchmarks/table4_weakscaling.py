@@ -1,0 +1,63 @@
+"""Paper Table 4: weak scaling of GoogleNet/VGG on ImageNet, 68→4352 cores
+(1→64 KNL nodes). Paper results: GoogleNet 91.6% @ 64 nodes; VGG 80.2%.
+
+Model: per-node compute constant (weak scaling); communication = packed
+tree/ring all-reduce of the weights over Cray Aries (α–β). The SAME model
+projects our Sync-EASGD TPU fleet: intra-pod gradient all-reduce over ICI +
+cross-pod elastic exchange over DCI every τ steps.
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row
+from repro.core import costmodel
+from repro.core.des import weak_scaling_efficiency
+
+ARIES = costmodel.Network("Cray Aries", 1.5e-6, 1 / 8e9)
+GOOGLENET_BYTES = 53e6 * 4 / 4      # ~53 MB fp32 weights
+VGG_BYTES = 575e6                    # paper: VGG-19 575 MB
+
+# per-iteration compute times calibrated from Table 4's single-node rows
+T_GOOGLENET = 1533.0 / 300
+T_VGG = 1318.0 / 80
+
+PAPER = {
+    "googlenet": {2: .964, 4: .953, 8: .934, 16: .940, 32: .923, 64: .916},
+    "vgg": {2: .915, 4: .890, 8: .865, 16: .807, 32: .785, 64: .802},
+}
+
+
+def run(quick: bool = False):
+    # Straggler-limited weak scaling: σ is CALIBRATED from the paper's
+    # 2-node efficiency alone, then the 4..64-node curve is PREDICTED.
+    from repro.core.des import jitter_from_two_node_eff
+    for name, (t_c, w) in (("googlenet", (T_GOOGLENET, GOOGLENET_BYTES)),
+                           ("vgg", (T_VGG, VGG_BYTES))):
+        sigma = jitter_from_two_node_eff(PAPER[name][2])
+        csv_row(f"table4/{name}/calibrated_sigma", 0.0, f"{sigma:.4f}")
+        for nodes in (1, 2, 4, 8, 16, 32, 64):
+            eff = weak_scaling_efficiency(
+                nodes, t_compute=t_c, weight_bytes=w, net=ARIES,
+                jitter_sigma=sigma, overlap=True)
+            ref = PAPER[name].get(nodes)
+            csv_row(f"table4/{name}/{nodes}_nodes", 0.0,
+                    f"eff={eff:.3f}" + (f";paper={ref:.3f}" if ref else ""))
+
+    # TPU fleet projection: Sync EASGD cross-pod exchange, gemma3-27b,
+    # weights 27e9*4B packed, τ ∈ {1, 4}; 2..64 pods over DCI.
+    w = 27e9 * 4.0
+    t_step = 3.0
+    for tau in (1, 4):
+        for pods in (2, 4, 8, 16, 64):
+            t_comm = costmodel.t_allreduce_best(w, pods, costmodel.TPU_DCI) \
+                / tau
+            eff = t_step / max(t_step, t_comm)
+            csv_row(f"table4/tpu_gemma27b/tau{tau}/{pods}_pods", 0.0,
+                    f"eff={eff:.3f}")
+
+
+def main(quick: bool = False):
+    run(quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Serve a small model with batched requests through the continuous-
+batching engine (the same decode step the dry-run lowers at 32k/500k).
+
+    PYTHONPATH=src python examples/serve.py --arch mamba2-780m
+"""
+import warnings
+
+warnings.filterwarnings("ignore")
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import transformer as tfm
+from repro.models.common import init_params
+from repro.runtime.serve import BatchingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-780m")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch).reduced
+    params = init_params(tfm.model_defs(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype)
+    eng = BatchingEngine(cfg, params, batch=args.slots, max_len=64)
+
+    rng = np.random.RandomState(0)
+    pending = [list(rng.randint(0, cfg.vocab_size, size=rng.randint(3, 8)))
+               for _ in range(args.requests)]
+    t0 = time.time()
+    done_count = 0
+    submitted = {}
+    while done_count < args.requests:
+        while pending:
+            rid = eng.submit(pending[0])
+            if rid is None:
+                break                      # no free slot — decode to drain
+            submitted[rid] = pending.pop(0)
+        finished = eng.step(stop_len=args.gen)
+        for rid in finished:
+            done_count += 1
+            print(f"req {rid}: prompt={submitted[rid][:4]}… -> "
+                  f"{eng.outputs[rid]}")
+    dt = time.time() - t0
+    total_tokens = sum(len(v) for v in eng.outputs.values())
+    print(f"\nserved {args.requests} requests, {total_tokens} tokens "
+          f"in {dt:.1f}s ({total_tokens/dt:.1f} tok/s on 1 CPU core; "
+          f"the dry-run lowers this same step at batch 128 × 32k context)")
+
+
+if __name__ == "__main__":
+    main()

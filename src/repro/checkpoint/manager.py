@@ -1,0 +1,135 @@
+"""Checkpoint/restart: atomic, async, keep-N, preemption-safe.
+
+EASGD makes checkpointing cheap at scale: the durable state is the CENTER
+weight + step (small, slowly-moving); per-pod local weights are best-effort
+(a restarted pod may re-seed from the center — that is EASGD's own
+semantics, see ft/elastic_scale.py). We still checkpoint the full
+ElasticState for exact resume.
+
+Layout:  <dir>/step_<N>/ {meta.json, arrays.npz}  written to a tmp dir and
+renamed (atomic on POSIX). ``save_async`` hands the (host-fetched) state to
+a background thread so the train loop never blocks on disk.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._last_error: Optional[BaseException] = None
+
+    # -- write ---------------------------------------------------------------
+    def save(self, step: int, state: Any, extra: Optional[dict] = None):
+        """Blocking atomic save."""
+        state = jax.device_get(state)
+        self._write(step, state, extra or {})
+
+    def save_async(self, step: int, state: Any, extra: Optional[dict] = None):
+        """Non-blocking: fetch to host now, write on a background thread."""
+        self.wait()
+        state = jax.device_get(state)   # snapshot before training mutates it
+        self._thread = threading.Thread(
+            target=self._write_safe, args=(step, state, extra or {}),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._last_error is not None:
+            err, self._last_error = self._last_error, None
+            raise err
+
+    def _write_safe(self, step, state, extra):
+        try:
+            self._write(step, state, extra)
+        except BaseException as e:  # surfaced on next wait()
+            self._last_error = e
+
+    def _write(self, step: int, state, extra: dict):
+        leaves, treedef = jax.tree_util.tree_flatten(state)
+        tmp = os.path.join(self.dir, f".tmp_step_{step}_{os.getpid()}")
+        final = os.path.join(self.dir, f"step_{step:012d}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)})
+        meta = {
+            "step": step,
+            "time": time.time(),
+            "n_leaves": len(leaves),
+            "treedef": str(treedef),
+            "extra": extra,
+        }
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)           # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:012d}"),
+                          ignore_errors=True)
+
+    # -- read ----------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in sorted(os.listdir(self.dir)):
+            if name.startswith("step_"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None):
+        """Restore into the structure of ``template`` (values replaced).
+        Returns (state, meta)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:012d}")
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        leaves_t, treedef = jax.tree_util.tree_flatten(template)
+        assert len(leaves_t) == meta["n_leaves"], (
+            f"checkpoint has {meta['n_leaves']} leaves, template has "
+            f"{len(leaves_t)} — architecture mismatch")
+        leaves = []
+        for i, t in enumerate(leaves_t):
+            arr = data[f"leaf_{i}"]
+            assert arr.shape == tuple(t.shape), (
+                f"leaf {i}: checkpoint {arr.shape} vs template {t.shape}")
+            leaves.append(jax.numpy.asarray(arr, dtype=t.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves), meta

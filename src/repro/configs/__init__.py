@@ -1,0 +1,51 @@
+"""Architecture registry: the 10 assigned archs + the paper's own models."""
+from __future__ import annotations
+
+from repro.configs.base import ALL_SHAPES, QUADRATIC_SHAPES, SHAPES, ArchSpec
+
+from repro.configs import (
+    gemma3_4b,
+    qwen15_4b,
+    phi3_mini,
+    gemma3_27b,
+    qwen2_vl_72b,
+    mamba2_780m,
+    musicgen_medium,
+    recurrentgemma_2b,
+    grok1_314b,
+    deepseek_v2_236b,
+)
+
+ARCHS = {
+    s.arch_id: s
+    for s in (
+        gemma3_4b.SPEC,
+        qwen15_4b.SPEC,
+        phi3_mini.SPEC,
+        gemma3_27b.SPEC,
+        qwen2_vl_72b.SPEC,
+        mamba2_780m.SPEC,
+        musicgen_medium.SPEC,
+        recurrentgemma_2b.SPEC,
+        grok1_314b.SPEC,
+        deepseek_v2_236b.SPEC,
+    )
+}
+
+
+def get(arch_id: str) -> ArchSpec:
+    try:
+        return ARCHS[arch_id]
+    except KeyError:
+        raise ValueError(
+            f"unknown arch '{arch_id}'; have: {sorted(ARCHS)}"
+        ) from None
+
+
+def cells():
+    """All (arch, shape) dry-run cells; 40 assigned minus documented skips."""
+    out = []
+    for aid, spec in ARCHS.items():
+        for shape_id in ALL_SHAPES:
+            out.append((aid, shape_id, spec.supports(shape_id)))
+    return out

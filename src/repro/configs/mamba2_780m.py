@@ -1,0 +1,43 @@
+"""mamba2-780m [ssm]: 48L d_model=1536 attn-free, ssm_state=128, SSD.
+[arXiv:2405.21060; unverified]"""
+from repro.configs.base import ALL_SHAPES, ArchSpec
+from repro.models.common import ModelConfig, SSMConfig
+
+FULL = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    n_layers=48,
+    d_model=1536,
+    n_heads=1,                  # unused (attn-free)
+    n_kv_heads=1,
+    d_ff=0,
+    vocab_size=50280,
+    pattern=("ssm",),
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, d_conv=4, chunk=256),
+    tie_embeddings=True,
+    fsdp=True,
+)
+
+REDUCED = ModelConfig(
+    name="mamba2-reduced",
+    family="ssm",
+    n_layers=4,
+    d_model=64,
+    n_heads=1,
+    n_kv_heads=1,
+    d_ff=0,
+    vocab_size=512,
+    pattern=("ssm",),
+    ssm=SSMConfig(d_state=16, head_dim=16, expand=2, d_conv=4, chunk=16),
+    tie_embeddings=True,
+    loss_chunk=64,
+)
+
+SPEC = ArchSpec(
+    arch_id="mamba2-780m",
+    config=FULL,
+    reduced=REDUCED,
+    shapes=ALL_SHAPES,          # long_500k RUNS: O(1)/token recurrence
+    notes="SSD chunked scan (chunk 256); heads=d_inner/64=48 shard over "
+          "`model`; decode state is O(1) in context length.",
+)

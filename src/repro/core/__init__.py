@@ -1,0 +1,21 @@
+"""Core: the paper's contribution — EASGD family + communication co-design."""
+from repro.core.easgd import (
+    EASGDConfig,
+    sgd_update,
+    msgd_update,
+    easgd_worker_update,
+    measgd_worker_update,
+    center_update_from_sum,
+    center_update_from_mean,
+    center_update_single,
+    fused_elastic_step_flat,
+)
+from repro.core.elastic import (
+    ElasticConfig,
+    ElasticState,
+    init as elastic_init,
+    apply_gradients as elastic_apply_gradients,
+    state_specs as elastic_state_specs,
+)
+from repro.core.packing import Packer, packed_apply
+from repro.core import collectives, compression, costmodel

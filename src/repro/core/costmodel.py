@@ -1,0 +1,176 @@
+"""α–β communication model (paper Table 2) + TPU v5e roofline constants.
+
+The paper models a message of n words as costing (α + n·β) seconds — α the
+latency, β the reciprocal bandwidth. All schedule comparisons in the paper
+(round-robin Θ(P) vs tree Θ(log P); per-layer vs packed) are instances of
+this model; we reuse it for the discrete-event simulator, the collective-
+algorithm chooser, and the weak-scaling projections.
+
+Hardware constants:
+ * the paper's 2017 interconnects (Table 2) — used when reproducing the
+   paper's own numbers;
+ * TPU v5e (the target platform) — used for the roofline analysis. Values
+   fixed by the assignment: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class Network:
+    name: str
+    alpha: float   # seconds per message
+    beta: float    # seconds per byte
+
+
+# Paper Table 2 (β given per 4-byte word there; stored per byte here).
+MELLANOX_FDR = Network("Mellanox 56Gb/s FDR IB", 0.7e-6, 0.2e-9 / 4)
+INTEL_QDR = Network("Intel 40Gb/s QDR IB", 1.2e-6, 0.3e-9 / 4)
+INTEL_10GBE = Network("Intel 10GbE NE020", 7.2e-6, 0.9e-9 / 4)
+
+# TPU v5e ICI: ~50 GB/s per link; α ≈ 1 µs per collective step (hop latency
+# + launch). DCI (cross-pod, data-center network) modeled ~4x slower with
+# higher latency — the motivation for EASGD's reduced cross-pod traffic.
+TPU_ICI = Network("TPU v5e ICI", 1.0e-6, 1.0 / 50e9)
+TPU_DCI = Network("TPU v5e cross-pod DCI", 10.0e-6, 1.0 / 12.5e9)
+
+
+@dataclasses.dataclass(frozen=True)
+class Chip:
+    name: str
+    peak_flops: float      # FLOP/s (bf16 for TPU)
+    hbm_bandwidth: float   # bytes/s
+    hbm_bytes: float       # capacity
+    link_bandwidth: float  # bytes/s per ICI link
+
+
+TPU_V5E = Chip(
+    name="TPU v5e",
+    peak_flops=197e12,
+    hbm_bandwidth=819e9,
+    hbm_bytes=16 * 1024**3,
+    link_bandwidth=50e9,
+)
+
+# 2017 hardware, for reproducing the paper's own tables.
+KNL_7250 = Chip("Intel KNL 7250", 6e12 / 2, 475e9, 384 * 1024**3, 56e9 / 8)
+K80_HALF = Chip("NVIDIA K80 (half)", 4.37e12 / 2, 240e9, 12 * 1024**3, 16e9)
+
+
+# ---------------------------------------------------------------------------
+# collective schedule costs (n = message bytes, p = participants)
+# ---------------------------------------------------------------------------
+
+def t_msg(n: float, net: Network) -> float:
+    """Point-to-point message cost: α + nβ."""
+    return net.alpha + n * net.beta
+
+
+def t_round_robin(n: float, p: int, net: Network) -> float:
+    """Paper's Original-EASGD schedule: master exchanges with each worker in
+    rank order — P sequential messages, Θ(P)."""
+    return p * t_msg(n, net)
+
+
+def t_tree_allreduce(n: float, p: int, net: Network) -> float:
+    """Tree reduce + broadcast: 2·⌈log2 P⌉ rounds of full-size messages."""
+    if p <= 1:
+        return 0.0
+    return 2 * math.ceil(math.log2(p)) * t_msg(n, net)
+
+
+def t_butterfly_allreduce(n: float, p: int, net: Network) -> float:
+    """Recursive-doubling all-reduce: ⌈log2 P⌉ rounds of full-size messages."""
+    if p <= 1:
+        return 0.0
+    return math.ceil(math.log2(p)) * t_msg(n, net)
+
+
+def t_ring_allreduce(n: float, p: int, net: Network) -> float:
+    """Bandwidth-optimal ring: 2(P−1) steps of n/P bytes."""
+    if p <= 1:
+        return 0.0
+    return 2 * (p - 1) * t_msg(n / p, net)
+
+
+def t_allreduce_best(n: float, p: int, net: Network) -> float:
+    """What a tuned library (NCCL / XLA) would pick: min(tree, ring).
+
+    Small n → latency-bound → tree/butterfly; large n → bandwidth-bound →
+    ring. This switch is exactly why the paper's packed buffer matters: many
+    small messages can never reach the ring's bandwidth regime.
+    """
+    return min(t_butterfly_allreduce(n, p, net), t_ring_allreduce(n, p, net))
+
+
+def t_per_layer(layer_bytes: list[float], p: int, net: Network,
+                schedule=t_allreduce_best) -> float:
+    """Per-layer communication (paper Fig. 10 'unpacked'): one collective
+    per tensor."""
+    return sum(schedule(n, p, net) for n in layer_bytes)
+
+
+def t_packed(layer_bytes: list[float], p: int, net: Network,
+             schedule=t_allreduce_best) -> float:
+    """Packed single-buffer communication (paper Fig. 10 'packed')."""
+    return schedule(sum(layer_bytes), p, net)
+
+
+# ---------------------------------------------------------------------------
+# roofline terms (assignment formulas)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Lower bound on step time if the three resources fully overlap."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def serial_s(self) -> float:
+        """Upper bound: no overlap at all."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+
+def roofline(hlo_flops: float, hlo_bytes: float, collective_bytes: float,
+             chips: int, chip: Chip = TPU_V5E) -> RooflineTerms:
+    """Three-term roofline per the assignment:
+
+      compute    = HLO_FLOPs / (chips × peak)
+      memory     = HLO_bytes / (chips × HBM bw)
+      collective = collective_bytes / (chips × link bw)
+
+    FLOPs/bytes arguments are WHOLE-PROGRAM totals (all chips); if you have
+    per-chip numbers multiply by ``chips`` first.
+    """
+    return RooflineTerms(
+        compute_s=hlo_flops / (chips * chip.peak_flops),
+        memory_s=hlo_bytes / (chips * chip.hbm_bandwidth),
+        collective_s=collective_bytes / (chips * chip.link_bandwidth),
+    )
+
+
+def model_flops_train(n_params_active: float, n_tokens: float) -> float:
+    """MODEL_FLOPS = 6·N·D (fwd 2ND + bwd 4ND), N = active params."""
+    return 6.0 * n_params_active * n_tokens
+
+
+def model_flops_infer(n_params_active: float, n_tokens: float) -> float:
+    """Forward-only: 2·N·D."""
+    return 2.0 * n_params_active * n_tokens

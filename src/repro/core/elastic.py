@@ -1,0 +1,343 @@
+"""Multi-pod Sync EASGD — the paper's technique as a first-class JAX module.
+
+Mapping (DESIGN.md §2): each **pod** is one EASGD worker. Inside a pod the
+gradient is reduced synchronously over the `data` axis (fast ICI — GSPMD does
+this automatically from the batch sharding). Across pods, workers exchange
+*weights, not gradients*, every ``tau`` steps through the elastic-averaging
+rules (paper eqs. 1–2 / 5–6), using the paper's three co-design techniques:
+
+ 1. **Packed single-buffer exchange** (paper §5.2): inside ``shard_map`` each
+    device flattens its *local shards* of every parameter into one contiguous
+    buffer and issues a SINGLE cross-pod all-reduce. Packing in shard-space
+    is a pure local reshape — no resharding traffic — while guaranteeing one
+    collective (one α) instead of one per tensor.
+ 2. **Device-resident weights** (paper §6.1.2): all state lives in HBM; the
+    step never round-trips the host.
+ 3. **Compute/communication overlap** (paper §6.1.3): the exchange reads only
+    the *start-of-step* weights W_t — by construction it has no data
+    dependency on the current forward/backward, so XLA's latency-hiding
+    scheduler overlaps the cross-pod collective with compute.
+    ``overlap=False`` inserts an optimization barrier to reproduce the
+    non-overlapped baseline (Sync EASGD1/2).
+
+Representation: every worker-local tensor carries a leading ``pod`` dimension
+of size ``n_pods`` sharded on the mesh's ``pod`` axis (size 1 and unsharded
+on a single-pod mesh — same code path). The center weight W̄ has no pod dim
+(replicated across pods, sharded over data/model like the params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import compression as compression_lib
+from repro.core.easgd import EASGDConfig
+from repro.utils.pytree import tree_map
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticConfig:
+    easgd: EASGDConfig = EASGDConfig()
+    mode: str = "sync_easgd"        # "sync_easgd" | "msgd" (plain DP baseline)
+    packed: bool = True             # paper §5.2: single-buffer exchange
+    compression: str = "none"       # none | bf16 | sign_ef (cross-pod only)
+    overlap: bool = True            # paper §6.1.3 (Sync EASGD3)
+    momentum_dtype: Any = jnp.float32
+    center_dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert self.mode in ("sync_easgd", "msgd"), self.mode
+        compression_lib.get(self.compression)  # validate
+
+
+class ElasticState(NamedTuple):
+    step: jnp.ndarray       # () int32
+    params: Any             # pytree, leaves (n_pods, …) — local W⁽ⁱ⁾
+    momentum: Any           # pytree, leaves (n_pods, …) — V⁽ⁱ⁾
+    center: Any             # pytree, leaves (…) — W̄ (None for msgd)
+    ef_error: Any           # pytree like params (compression only) or None
+
+
+def n_pods_of(state: ElasticState) -> int:
+    leaf = jax.tree_util.tree_leaves(state.params)[0]
+    return leaf.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init(params, cfg: ElasticConfig, n_pods: int = 1) -> ElasticState:
+    """Broadcast a single parameter pytree into per-pod local weights
+    (paper Alg. 4 lines 4–7: broadcast W, create local + global copies)."""
+    pod = lambda x: jnp.broadcast_to(x[None], (n_pods,) + x.shape)
+    params_pod = tree_map(pod, params)
+    momentum = tree_map(
+        lambda x: jnp.zeros((n_pods,) + x.shape, cfg.momentum_dtype), params
+    )
+    if cfg.mode == "msgd":
+        center = None
+    else:
+        center = tree_map(lambda x: x.astype(cfg.center_dtype), params)
+    if cfg.compression != "none" and cfg.mode != "msgd":
+        ef = tree_map(
+            lambda x: jnp.zeros((n_pods,) + x.shape, jnp.float32), params
+        )
+    else:
+        ef = None
+    return ElasticState(jnp.zeros((), jnp.int32), params_pod, momentum,
+                        center, ef)
+
+
+def init_abstract(params_abs, cfg: ElasticConfig, n_pods: int = 1):
+    """ShapeDtypeStruct version of ``init`` (for the dry-run / AOT path)."""
+    return jax.eval_shape(lambda p: init(p, cfg, n_pods), params_abs)
+
+
+# ---------------------------------------------------------------------------
+# state sharding specs
+# ---------------------------------------------------------------------------
+
+def state_specs(param_specs, cfg: ElasticConfig, pod_axis: str | None):
+    """PartitionSpecs for an ElasticState given per-param specs (no pod dim).
+
+    Local (per-pod) tensors get a leading pod-axis entry; the center is
+    replicated across pods (no pod dim in its shape).
+    """
+    def podded(spec: P) -> P:
+        return P(pod_axis, *spec)
+
+    params = tree_map(podded, param_specs)
+    center = None if cfg.mode == "msgd" else param_specs
+    ef = params if (cfg.compression != "none" and cfg.mode != "msgd") else None
+    return ElasticState(P(), params, params, center, ef)
+
+
+# ---------------------------------------------------------------------------
+# flat (packed) math — shared with kernels/ref and tests
+# ---------------------------------------------------------------------------
+
+def _pack_local(tree, pods: int | None = None):
+    """Flatten a pytree of local shards into one contiguous fp32 buffer.
+
+    Inside shard_map this is a per-device reshape+concat: zero communication.
+    This IS the paper's 'single-layer layout' (§5.2) adapted to shard-space.
+    With ``pods`` set, the leading pod dim stays OUTER: result (pods, n).
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    if pods is None:
+        return jnp.concatenate(
+            [l.reshape(-1).astype(jnp.float32) for l in leaves]
+        )
+    return jnp.concatenate(
+        [l.reshape(pods, -1).astype(jnp.float32) for l in leaves], axis=1
+    )
+
+
+def _unpack_local(buf, template, pods: int | None = None):
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    out, off = [], 0
+    for l in leaves:
+        if pods is None:
+            size = l.size
+            chunk = lax.slice_in_dim(buf, off, off + size)
+        else:
+            size = l.size // pods
+            chunk = lax.slice_in_dim(buf, off, off + size, axis=1)
+        out.append(chunk.reshape(l.shape).astype(l.dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# the update — one optimizer step given per-pod gradients
+# ---------------------------------------------------------------------------
+
+def _momentum_only(state: ElasticState, grads, cfg: ElasticConfig):
+    """Between exchanges (step % τ ≠ 0) and for mode='msgd': eqs 3–4."""
+    e = cfg.easgd
+    v_new = tree_map(
+        lambda v, g: (e.mu * v.astype(jnp.float32)
+                      - e.eta * g.astype(jnp.float32)).astype(v.dtype),
+        state.momentum, grads,
+    )
+    p_new = tree_map(
+        lambda w, v: (w.astype(jnp.float32) + v.astype(jnp.float32)
+                      ).astype(w.dtype),
+        state.params, v_new,
+    )
+    return state._replace(step=state.step + 1, params=p_new, momentum=v_new)
+
+
+def _elastic_tensors(state, grads, cfg, mean_w):
+    """Per-tensor eqs 5–6 + eq 2 given the cross-pod mean of W_t."""
+    e = cfg.easgd
+    n_pods = n_pods_of(state)
+    v_new = tree_map(
+        lambda v, g: (e.mu * v.astype(jnp.float32)
+                      - e.eta * g.astype(jnp.float32)).astype(v.dtype),
+        state.momentum, grads,
+    )
+    p_new = tree_map(
+        lambda w, v, c: (
+            w.astype(jnp.float32) + v.astype(jnp.float32)
+            - e.eta * e.rho * (w.astype(jnp.float32)
+                               - c.astype(jnp.float32)[None])
+        ).astype(w.dtype),
+        state.params, v_new, state.center,
+    )
+    a = e.alpha * n_pods
+    c_new = tree_map(
+        lambda c, m: (c.astype(jnp.float32)
+                      + a * (m.astype(jnp.float32) - c.astype(jnp.float32))
+                      ).astype(c.dtype),
+        state.center, mean_w,
+    )
+    return state._replace(step=state.step + 1, params=p_new, momentum=v_new,
+                          center=c_new)
+
+
+def _exchange_unpacked(state, grads, cfg):
+    """Per-tensor cross-pod mean: one collective per parameter (the paper's
+    'multiple rounds of communication for different layers' baseline).
+    GSPMD may still combine small all-reduces; the packed path below makes
+    the single message structural."""
+    mean_w = tree_map(lambda w: jnp.mean(w.astype(jnp.float32), axis=0),
+                      state.params)
+    return _elastic_tensors(state, grads, cfg, mean_w)
+
+
+def _exchange_packed(state, grads, cfg, mesh, param_specs, pod_axis):
+    """Packed single-buffer exchange inside shard_map (paper §5.2 + §6.1).
+
+    Every device: (a) locally flattens its shards of W_t into one buffer,
+    (b) optionally compresses the delta vs W̄, (c) ONE psum over the pod
+    axis, (d) fused elementwise update of W, V, W̄ (eqs 5–6, 2).
+    """
+    e = cfg.easgd
+    comp = compression_lib.get(cfg.compression)
+    n_pods = n_pods_of(state)
+    pod_in_mesh = pod_axis is not None and pod_axis in mesh.axis_names
+
+    specs = state_specs(param_specs, cfg,
+                        pod_axis if (n_pods > 1 and pod_in_mesh) else None)
+    grads_spec = specs.params
+    out_specs = ElasticState(
+        step=P(), params=specs.params, momentum=specs.momentum,
+        center=specs.center, ef_error=specs.ef_error,
+    )
+
+    def body(step, params, momentum, center, ef, g):
+        # local shards; pod-dim is size n_pods/|pod axis| locally (=1 on the
+        # production mesh). The pod dim stays outer in the packed buffers.
+        local_pods = jax.tree_util.tree_leaves(params)[0].shape[0]
+        w2 = _pack_local(params, local_pods)      # (local_pods, n_local)
+        g2 = _pack_local(g, local_pods)
+        v2 = _pack_local(momentum, local_pods)
+        c2 = _pack_local(center)[None]            # (1, n_local)
+
+        # --- the ONE cross-pod message (paper's tree reduction) -----------
+        delta = (w2 - c2)
+        if cfg.compression != "none":
+            ef_flat = _pack_local(ef, local_pods)
+            payload, ef_new2 = jax.vmap(comp.encode)(delta, ef_flat)
+            # sum over local pods, keeping int8 payloads int8 ON THE WIRE
+            # (±1 signs summed over ≤127 pods cannot overflow int8; casting
+            # to f32 before the psum would quadruple the cross-pod bytes)
+            payload = tree_map(lambda x: jnp.sum(x, axis=0, dtype=x.dtype
+                                                 if x.dtype == jnp.int8
+                                                 else None), payload)
+            if pod_in_mesh:
+                payload = tree_map(lambda x: lax.psum(x, pod_axis), payload)
+            payload = tree_map(lambda x: x.astype(jnp.float32) / n_pods,
+                               payload)
+            mean_delta = comp.decode_mean(payload)
+            ef_new = _unpack_local(ef_new2, ef, local_pods)
+        else:
+            d = jnp.sum(delta, axis=0)
+            if pod_in_mesh:
+                d = lax.psum(d, pod_axis)
+            mean_delta = d / n_pods
+            ef_new = ef
+        mean_w = c2[0] + mean_delta
+
+        # --- fused elementwise update (eqs 5–6 + 2) ------------------------
+        v_new = e.mu * v2 - e.eta * g2
+        w_new = w2 + v_new - e.eta * e.rho * (w2 - c2)
+        c_new = c2[0] + e.alpha * n_pods * (mean_w - c2[0])
+
+        return (
+            step + 1,
+            _unpack_local(w_new, params, local_pods),
+            _unpack_local(v_new, momentum, local_pods),
+            _unpack_local(c_new, center),
+            ef_new,
+        )
+
+    in_specs = (P(), specs.params, specs.momentum, specs.center,
+                specs.ef_error if cfg.compression != "none" else P(),
+                grads_spec)
+    shmapped = jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs,
+        out_specs=(P(), out_specs.params, out_specs.momentum,
+                   out_specs.center,
+                   out_specs.ef_error if cfg.compression != "none" else P()),
+        check_vma=False,
+    )
+    ef_in = state.ef_error if cfg.compression != "none" else jnp.zeros((), jnp.float32)
+    step, p_new, v_new, c_new, ef_new = shmapped(
+        state.step, state.params, state.momentum, state.center, ef_in, grads
+    )
+    if cfg.compression == "none":
+        ef_new = state.ef_error
+    return ElasticState(step, p_new, v_new, c_new, ef_new)
+
+
+def apply_gradients(state: ElasticState, grads, cfg: ElasticConfig,
+                    mesh=None, param_specs=None,
+                    pod_axis: str | None = "pod") -> ElasticState:
+    """One optimizer step. ``grads`` is a pytree like ``state.params``
+    (leading pod dim), already mean-reduced over the intra-pod data axis
+    (GSPMD does that from the batch sharding).
+    """
+    if cfg.mode == "msgd":
+        # plain synchronous momentum SGD: grads are averaged over pods too,
+        # so all pods stay identical (pure DP baseline).
+        n_pods = n_pods_of(state)
+        if n_pods > 1:
+            gmean = tree_map(
+                lambda g: jnp.broadcast_to(
+                    jnp.mean(g.astype(jnp.float32), axis=0, keepdims=True),
+                    g.shape).astype(g.dtype),
+                grads,
+            )
+        else:
+            gmean = grads
+        return _momentum_only(state, gmean, cfg)
+
+    if not cfg.overlap:
+        # Sync EASGD1/2 baseline: force the exchange to wait for the
+        # gradients (kills the paper's §6.1.3 overlap).
+        state_params, grads = lax.optimization_barrier((state.params, grads))
+        state = state._replace(params=state_params)
+
+    def do_exchange(st, g):
+        if cfg.packed and mesh is not None and param_specs is not None:
+            return _exchange_packed(st, g, cfg, mesh, param_specs, pod_axis)
+        return _exchange_unpacked(st, g, cfg)
+
+    tau = cfg.easgd.tau
+    if tau <= 1:
+        return do_exchange(state, grads)
+    return lax.cond(
+        state.step % tau == 0,
+        lambda s, g: do_exchange(s, g),
+        lambda s, g: _momentum_only(s, g, cfg),
+        state, grads,
+    )

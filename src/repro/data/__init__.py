@@ -1,0 +1,4 @@
+from repro.data.synthetic import (
+    SyntheticLMStream, make_classification_dataset, teacher_dataset,
+)
+from repro.data.pipeline import ShardedPipeline, PipelineState

@@ -1,0 +1,3 @@
+from repro.ft.elastic_scale import rescale_pods, pod_join, pod_leave
+from repro.ft.straggler import StragglerPolicy, BoundedStaleness
+from repro.ft.watchdog import Watchdog

@@ -1,0 +1,66 @@
+"""Elastic pod scaling — EASGD-native fault tolerance (DESIGN.md §8).
+
+EASGD's center weight W̄ is the durable state: a worker's contribution
+enters through the elastic mean, so pods can leave (failure/preemption) or
+join (capacity) BETWEEN exchange rounds without a global barrier:
+
+ * pod_leave: drop the pod's local (W, V) rows; the center is untouched —
+   at most τ local steps of that pod's progress are lost.
+ * pod_join:  the new pod seeds its local weights FROM the center (the
+   same thing Alg. 4 lines 4-7 do at init) with zero momentum.
+
+This is the principled version of checkpoint-restart: the restarted/new
+worker starts from the consensus point, exactly like EASGD's theory assumes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.elastic import ElasticState
+
+
+def pod_leave(state: ElasticState, pod_index: int) -> ElasticState:
+    """Remove one pod's local replica (n_pods -> n_pods-1)."""
+    take = lambda x: jnp.concatenate(
+        [x[:pod_index], x[pod_index + 1:]], axis=0)
+    new = state._replace(
+        params=jax.tree_util.tree_map(take, state.params),
+        momentum=jax.tree_util.tree_map(take, state.momentum),
+    )
+    if state.ef_error is not None:
+        new = new._replace(
+            ef_error=jax.tree_util.tree_map(take, state.ef_error))
+    return new
+
+
+def pod_join(state: ElasticState) -> ElasticState:
+    """Add one pod seeded from the center (n_pods -> n_pods+1)."""
+    def add_from_center(local, center):
+        row = center.astype(local.dtype)[None]
+        return jnp.concatenate([local, row], axis=0)
+
+    params = jax.tree_util.tree_map(add_from_center, state.params,
+                                    state.center)
+    momentum = jax.tree_util.tree_map(
+        lambda v: jnp.concatenate([v, jnp.zeros_like(v[:1])], axis=0),
+        state.momentum)
+    new = state._replace(params=params, momentum=momentum)
+    if state.ef_error is not None:
+        new = new._replace(ef_error=jax.tree_util.tree_map(
+            lambda e: jnp.concatenate([e, jnp.zeros_like(e[:1])], axis=0),
+            state.ef_error))
+    return new
+
+
+def rescale_pods(state: ElasticState, new_n_pods: int) -> ElasticState:
+    """Resize to ``new_n_pods`` (shrink drops highest pods; grow seeds from
+    the center)."""
+    cur = jax.tree_util.tree_leaves(state.params)[0].shape[0]
+    while cur > new_n_pods:
+        state = pod_leave(state, cur - 1)
+        cur -= 1
+    while cur < new_n_pods:
+        state = pod_join(state)
+        cur += 1
+    return state

@@ -1,0 +1,55 @@
+"""Straggler mitigation policies.
+
+The paper's asynchronous variants (Async/Hogwild EASGD) tolerate stragglers
+by construction — a slow worker simply contributes later. For the
+deterministic Sync EASGD path we provide BOUNDED STALENESS: a pod that
+misses the exchange deadline is excluded from this round's elastic mean
+(its weights rejoin next round). Mathematically this is Hogwild EASGD's
+partial update, made deterministic per round via an explicit participation
+mask — the center update becomes
+    W̄ ← W̄ + ηρ Σ_{i ∈ alive} (W⁽ⁱ⁾ − W̄).
+
+These policies drive both the discrete-event simulator (benchmarks) and the
+host-level training driver; the mask plugs into the jitted step as data.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Base: everyone always participates."""
+    n_pods: int
+
+    def participation(self, step: int, delays_s) -> np.ndarray:
+        return np.ones((self.n_pods,), np.float32)
+
+
+@dataclasses.dataclass
+class BoundedStaleness(StragglerPolicy):
+    """Exclude pods slower than ``deadline_factor`` × median round time."""
+    deadline_factor: float = 1.5
+    min_quorum: float = 0.5
+
+    def participation(self, step: int, delays_s) -> np.ndarray:
+        delays = np.asarray(delays_s, np.float64)
+        deadline = np.median(delays) * self.deadline_factor
+        mask = (delays <= deadline).astype(np.float32)
+        if mask.mean() < self.min_quorum:   # keep quorum: admit fastest half
+            order = np.argsort(delays)
+            mask = np.zeros_like(mask)
+            mask[order[: max(1, int(np.ceil(self.n_pods * self.min_quorum)))]] = 1
+        return mask
+
+
+def masked_center_mean(w_pods, center_flat, mask):
+    """Mean over participating pods only (for the host-driven exchange).
+    w_pods: (P, N); mask: (P,) 0/1. Returns the masked mean of W."""
+    m = jnp.asarray(mask, jnp.float32)[:, None]
+    denom = jnp.maximum(m.sum(), 1.0)
+    return center_flat + (m * (w_pods - center_flat[None])).sum(0) / denom

@@ -1,0 +1,4 @@
+from repro.kernels import ops, ref
+from repro.kernels.ops import (
+    flash_attention, elastic_update, ssd_intra_chunk, fused_cross_entropy,
+)

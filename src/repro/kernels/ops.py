@@ -1,0 +1,74 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only — the
+kernel bodies execute in Python for correctness validation); on a real TPU
+backend it flips to compiled Mosaic automatically.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import elastic_update as _eu
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_chunk as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=None):
+    """q: (B, S, H, D); k, v: (B, S, KVH, D). GQA is expanded head-wise
+    before the kernel (K/V stay small in HBM; expansion happens once)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    B, S, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, v.shape[-1])
+    out = _fa.flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=interpret)
+    return out.reshape(B, H, S, -1).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("eta", "rho", "mu", "n_workers", "block",
+                                   "interpret"))
+def elastic_update(w, v, g, c, mean_w, *, eta, rho, mu, n_workers,
+                   block=128 * 1024, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    n = w.shape[0]
+    while n % block:
+        block //= 2
+    return _eu.fused_elastic_update(w, v, g, c, mean_w, eta=eta, rho=rho,
+                                    mu=mu, n_workers=n_workers, block=block,
+                                    interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_intra_chunk(a, x, b, c, *, chunk=256, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _ssd.ssd_intra_chunk(a, x, b, c, chunk=chunk, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_t", "block_v", "interpret"))
+def fused_cross_entropy(h, w, targets, *, block_t=256, block_v=2048,
+                        interpret=None):
+    from repro.kernels import fused_ce as _ce
+    if interpret is None:
+        interpret = _default_interpret()
+    return _ce.fused_cross_entropy(h, w, targets, block_t=block_t,
+                                   block_v=block_v, interpret=interpret)

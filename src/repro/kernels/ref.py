@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.easgd import EASGDConfig, fused_elastic_step_flat
+from repro.models.attention import blocked_attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q,k,v: (BH, S, D) — same-heads attention via the blocked oracle."""
+    out = blocked_attention(q[:, :, None].swapaxes(1, 2).swapaxes(1, 1),
+                            k[:, :, None], v[:, :, None],
+                            causal=causal, window=window)
+    return out[:, :, 0]
+
+
+def flash_attention_dense_ref(q, k, v, *, causal=True, window=0):
+    """Direct dense (S×S) reference — independent of the blocked code."""
+    BH, S, D = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(D))
+    i = jnp.arange(S)
+    m = jnp.ones((S, S), bool)
+    if causal:
+        m &= i[:, None] >= i[None, :]
+    if window:
+        m &= i[:, None] - i[None, :] < window
+    s = jnp.where(m[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def elastic_update_ref(w, v, g, c, mean_w, *, eta, rho, mu, n_workers):
+    cfg = EASGDConfig(eta=eta, rho=rho, mu=mu)
+    w32, v32, g32, c32, m32 = (x.astype(jnp.float32)
+                               for x in (w, v, g, c, mean_w))
+    w2, v2, c2 = fused_elastic_step_flat(w32, v32, g32, c32, m32,
+                                         n_workers, cfg)
+    return w2.astype(w.dtype), v2.astype(v.dtype), c2.astype(c.dtype)
+
+
+def fused_ce_ref(h, w, targets):
+    """Dense reference: loss_t = logsumexp(h·W) − (h·W)[target]."""
+    logits = jnp.einsum("td,dv->tv", h.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[:, None], axis=1)[:, 0]
+    return lse - tgt
+
+
+def ssd_intra_ref(a, x, b, c, *, chunk: int):
+    """Intra-chunk SSD: per chunk, Y[i] = Σ_{j≤i} (C_i·B_j) e^{cum_i−cum_j} X_j."""
+    BH, S = a.shape
+    L = min(chunk, S)
+    nc = S // L
+    a_ = a.reshape(BH, nc, L).astype(jnp.float32)
+    x_ = x.reshape(BH, nc, L, -1).astype(jnp.float32)
+    b_ = b.reshape(BH, nc, L, -1).astype(jnp.float32)
+    c_ = c.reshape(BH, nc, L, -1).astype(jnp.float32)
+    cum = jnp.cumsum(a_, axis=2)
+    g = jnp.einsum("hcln,hcmn->hclm", c_, b_)
+    dec = jnp.exp(cum[..., :, None] - cum[..., None, :])
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    m = jnp.where(mask[None, None], g * dec, 0.0)
+    y = jnp.einsum("hclm,hcmp->hclp", m, x_)
+    return y.reshape(BH, S, -1).astype(x.dtype)

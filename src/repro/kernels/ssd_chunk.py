@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: Mamba-2 SSD intra-chunk block.
+
+The chunked SSD forward (models/ssm._ssd_chunked) is dominated by the
+intra-chunk quadratic part: per chunk, per head,
+    Y_intra = (tril(C·Bᵀ ∘ exp(segsum(a)))) · X
+Those are (L×N)·(N×L) and (L×L)·(L×P) matmuls — MXU food — with an (L×L)
+decay mask that should never leave VMEM. This kernel computes one chunk's
+intra-chunk output per grid cell with the (L,L) tile resident in VMEM;
+the (cheap, sequential) inter-chunk state pass stays in JAX.
+
+Grid: (batch·heads, n_chunks). Layout: X (BH, S, P); B,C (BH, S, N)
+pre-broadcast per head; a (BH, S) log-decay. L must be a multiple of 8
+(TPU sublane); N, P multiples of 128 preferred.
+
+Oracle: kernels/ref.ssd_intra_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_intra_kernel(a_ref, x_ref, b_ref, c_ref, y_ref, *, L: int):
+    a = a_ref[0].astype(jnp.float32)                 # (L,)
+    x = x_ref[0].astype(jnp.float32)                 # (L, P)
+    b = b_ref[0].astype(jnp.float32)                 # (L, N)
+    c = c_ref[0].astype(jnp.float32)                 # (L, N)
+
+    cum = jnp.cumsum(a)                              # (L,)
+    g = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())))   # (L, L)
+    dec = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    m = jnp.where(ii >= jj, g * jnp.exp(dec), 0.0)
+    y = jax.lax.dot_general(m, x, (((1,), (0,)), ((), ())))   # (L, P)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_intra_chunk(a, x, b, c, *, chunk: int, interpret=True):
+    """a: (BH, S) log-decay; x: (BH, S, P); b, c: (BH, S, N).
+    Returns intra-chunk Y (BH, S, P) (inter-chunk term handled outside)."""
+    BH, S = a.shape
+    P = x.shape[-1]
+    N = b.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+    kernel = functools.partial(_ssd_intra_kernel, L=L)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, L), lambda h, i: (h, i)),
+            pl.BlockSpec((1, L, P), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, L, N), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, L, N), lambda h, i: (h, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, L, P), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+        interpret=interpret,
+    )(a, x, b, c)

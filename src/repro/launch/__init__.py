@@ -1,0 +1,7 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers.
+
+NOTE: ``repro.launch.dryrun`` must be imported/executed FIRST in a fresh
+process (it sets XLA_FLAGS before jax initializes); do not import it from
+library code.
+"""
+from repro.launch.mesh import make_production_mesh, make_host_mesh, n_pods_of

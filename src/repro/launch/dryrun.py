@@ -1,0 +1,287 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
+extract the roofline terms from the compiled artifact.
+
+MUST be run as a script/module so the XLA_FLAGS lines above execute before
+any jax import (jax locks the device count on first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b \
+        --shape train_4k --mesh pod --out results/dryrun.jsonl
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Per cell we record:
+  * compiled.memory_analysis()  — per-device bytes (proves it fits 16 GB)
+  * compiled.cost_analysis()    — HLO FLOPs / bytes accessed (per device)
+  * collective bytes parsed from the optimized HLO (launch.hloparse)
+  * the three roofline terms + MODEL_FLOPS = 6·N_active·D (core.costmodel)
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import costmodel
+from repro.core.easgd import EASGDConfig
+from repro.core.elastic import ElasticConfig
+from repro.launch import hloparse
+from repro.launch.mesh import make_production_mesh, n_pods_of
+from repro.models import transformer as tfm
+from repro.models.common import abstract_params
+from repro.runtime.serve import build_serve_steps, _extra_kwargs
+from repro.runtime.train import build_train_step, make_batch_defs
+
+
+def count_params(cfg):
+    """(total, active) parameter counts from the abstract defs."""
+    defs = tfm.model_defs(cfg)
+    total = active = 0
+    leaves = jax.tree_util.tree_leaves(
+        defs, is_leaf=lambda x: hasattr(x, "logical"))
+    for d in leaves:
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n
+        if cfg.moe is not None and "experts" in d.logical:
+            active += n * cfg.moe.top_k / cfg.moe.n_experts
+        else:
+            active += n
+    return int(total), int(active)
+
+
+def make_elastic_config(spec, *, overrides=None) -> ElasticConfig:
+    kw = dict(
+        easgd=EASGDConfig(eta=0.01, rho=0.01, mu=0.9, tau=1),
+        mode="sync_easgd",
+        packed=True,
+        overlap=True,
+        momentum_dtype=spec.momentum_dtype,
+        center_dtype=spec.center_dtype,
+    )
+    kw.update(overrides or {})
+    return ElasticConfig(**kw)
+
+
+def lower_cell(arch_id: str, shape_id: str, mesh, *, elastic_overrides=None,
+               cfg_override=None, microbatches_override=None):
+    """Lower (but don't compile) one cell. Returns (lowered, meta)."""
+    spec = configs.get(arch_id)
+    cfg = cfg_override or spec.config
+    shape = configs.SHAPES[shape_id]
+    n_pods = n_pods_of(mesh)
+    meta = dict(arch=arch_id, shape=shape_id,
+                mesh="x".join(map(str, mesh.devices.shape)),
+                n_devices=int(mesh.devices.size))
+
+    if shape["kind"] == "train":
+        gb, seq = shape["global_batch"], shape["seq"]
+        assert gb % n_pods == 0
+        ecfg = make_elastic_config(spec, overrides=elastic_overrides)
+        per_pod = gb // n_pods
+        data_size = dict(zip(mesh.axis_names,
+                             mesh.devices.shape)).get("data", 1)
+        # the per-microbatch batch must still divide the data axis, or the
+        # batch dim replicates and per-device compute multiplies
+        mb = microbatches_override or spec.train_microbatches
+        while mb > 1 and (per_pod % mb or (per_pod // mb) % data_size):
+            mb //= 2
+        build = build_train_step(cfg, ecfg, mesh, n_pods=n_pods,
+                                 per_pod_batch=per_pod, seq=seq,
+                                 microbatches=mb)
+        batch = make_batch_defs(cfg, n_pods, per_pod, seq)
+        meta["microbatches"] = mb
+        lowered = build.step.lower(build.abstract_state, batch)
+        meta["tokens"] = gb * seq
+        meta["step"] = "train_step"
+    elif shape["kind"] == "prefill":
+        b, seq = shape["global_batch"], shape["seq"]
+        build = build_serve_steps(cfg, mesh, batch=b, max_len=seq)
+        tokens = jax.ShapeDtypeStruct((b, seq), jnp.int32)
+        extras = _extra_kwargs(cfg, b, seq)
+        lowered = build.prefill.lower(build.abstract_params, tokens, extras)
+        meta["tokens"] = b * seq
+        meta["step"] = "prefill"
+    else:  # decode
+        b, seq = shape["global_batch"], shape["seq"]
+        build = build_serve_steps(cfg, mesh, batch=b, max_len=seq)
+        token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+        extras = _extra_kwargs(cfg, b, 1)
+        lowered = build.decode.lower(build.abstract_params,
+                                     build.abstract_caches, token, pos,
+                                     extras)
+        meta["tokens"] = b  # one new token per sequence
+        meta["step"] = "decode_step"
+    return lowered, meta, cfg
+
+
+def analyze(compiled, meta, cfg, chips: int):
+    rec = dict(meta)
+    # --- memory ------------------------------------------------------------
+    try:
+        ma = compiled.memory_analysis()
+        for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+            v = getattr(ma, field, None)
+            if v is not None:
+                rec[field] = int(v)
+        live = (rec.get("argument_size_in_bytes", 0)
+                + rec.get("temp_size_in_bytes", 0)
+                + rec.get("output_size_in_bytes", 0)
+                - rec.get("alias_size_in_bytes", 0))
+        rec["peak_bytes_per_device"] = int(live)
+        rec["fits_16gb"] = bool(live < 16 * 1024**3)
+    except Exception as e:  # pragma: no cover
+        rec["memory_analysis_error"] = repr(e)
+
+    # --- cost (XLA's own numbers — NOT loop-aware, kept for reference) -----
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["xla_cost_flops"] = float(ca.get("flops", 0.0))
+        rec["xla_cost_bytes"] = float(ca.get("bytes accessed", 0.0))
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis_error"] = repr(e)
+
+    # --- loop-aware HLO walk: flops, bytes, collectives ---------------------
+    try:
+        text = compiled.as_text()
+        # on the multipod mesh, device ids 0..255 = pod0, 256..511 = pod1:
+        # collectives whose replica groups span the stride cross pods (DCI)
+        pod_stride = 256 if chips == 512 else 0
+        costs = hloparse.parse_costs(text, pod_stride=pod_stride)
+        rec["hlo_flops_per_device"] = float(costs.flops)
+        rec["hlo_bytes_per_device"] = float(costs.bytes)
+        rec["collective_bytes_by_type"] = costs.bytes_by_collective
+        rec["collective_counts"] = costs.counts_by_collective
+        rec["collective_bytes_per_device"] = int(costs.collective_bytes)
+        rec["cross_pod_bytes_per_device"] = int(costs.cross_pod_bytes)
+        rec["hlo_text_bytes"] = len(text)
+        del text
+    except Exception as e:  # pragma: no cover
+        rec["hlo_parse_error"] = repr(e)
+
+    # --- roofline ------------------------------------------------------------
+    n_total, n_active = count_params(cfg)
+    rec["n_params"] = n_total
+    rec["n_params_active"] = n_active
+    rec["param_bytes"] = int(n_total * jnp.dtype(cfg.param_dtype).itemsize)
+    flops_fn = (costmodel.model_flops_train if meta["step"] == "train_step"
+                else costmodel.model_flops_infer)
+    rec["model_flops"] = flops_fn(n_active, meta["tokens"])
+
+    hlo_flops = rec.get("hlo_flops_per_device", 0.0) * chips
+    hlo_bytes = rec.get("hlo_bytes_per_device", 0.0) * chips
+    coll_bytes = rec.get("collective_bytes_per_device", 0) * chips
+    rl = costmodel.roofline(hlo_flops, hlo_bytes, coll_bytes, chips)
+    rec["roofline"] = dict(
+        compute_s=rl.compute_s, memory_s=rl.memory_s,
+        collective_s=rl.collective_s, dominant=rl.dominant,
+        bound_s=rl.bound_s,
+        # cross-pod portion over the slow DCI links (multipod mesh only)
+        cross_pod_s=(rec.get("cross_pod_bytes_per_device", 0)
+                     * costmodel.TPU_DCI.beta),
+    )
+    rec["useful_flops_ratio"] = (
+        rec["model_flops"] / hlo_flops if hlo_flops else 0.0)
+    # roofline fraction: ideal model-flops time / achievable bound
+    ideal_s = rec["model_flops"] / (chips * costmodel.TPU_V5E.peak_flops)
+    rec["roofline_fraction"] = ideal_s / rl.bound_s if rl.bound_s else 0.0
+    return rec
+
+
+def run_cell(arch_id, shape_id, mesh_kind, out_path=None,
+             elastic_overrides=None, variant="baseline", cfg_override=None,
+             microbatches_override=None):
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    chips = int(mesh.devices.size)
+    t0 = time.time()
+    rec = dict(arch=arch_id, shape=shape_id, mesh_kind=mesh_kind,
+               variant=variant)
+    try:
+        lowered, meta, cfg = lower_cell(
+            arch_id, shape_id, mesh, elastic_overrides=elastic_overrides,
+            cfg_override=cfg_override,
+            microbatches_override=microbatches_override)
+        rec.update(meta)
+        rec["lower_s"] = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t1
+        rec.update(analyze(compiled, meta, cfg, chips))
+        rec["ok"] = True
+        del compiled, lowered
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = repr(e)
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = time.time() - t0
+    if out_path:
+        with open(out_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod",
+                                                      "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if args.skip_done and os.path.exists(args.out):
+        for line in open(args.out):
+            try:
+                r = json.loads(line)
+                if r.get("ok"):
+                    done.add((r["arch"], r["shape"], r["mesh_kind"]))
+            except json.JSONDecodeError:
+                pass
+
+    cells = []
+    if args.all:
+        for aid, shape_id, supported in configs.cells():
+            if supported:
+                cells.append((aid, shape_id))
+    else:
+        assert args.arch and args.shape
+        cells.append((args.arch, args.shape))
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    for aid, shape_id in cells:
+        for mk in meshes:
+            if (aid, shape_id, mk) in done:
+                print(f"SKIP {aid} {shape_id} {mk} (done)", flush=True)
+                continue
+            print(f"=== {aid} × {shape_id} × {mk} ===", flush=True)
+            rec = run_cell(aid, shape_id, mk, args.out)
+            if rec["ok"]:
+                rl = rec["roofline"]
+                print(f"  ok  compile={rec['compile_s']:.0f}s "
+                      f"peak={rec.get('peak_bytes_per_device', 0)/2**30:.2f}GiB "
+                      f"dom={rl['dominant']} "
+                      f"terms=({rl['compute_s']:.2e},{rl['memory_s']:.2e},"
+                      f"{rl['collective_s']:.2e})s "
+                      f"frac={rec['roofline_fraction']:.2f}", flush=True)
+            else:
+                print(f"  FAIL {rec['error']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,389 @@
+"""Loop-aware cost extraction from optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so for
+scan-heavy programs (layers, microbatches, attention blocks) its FLOPs and
+bytes are under-counted by the product of trip counts (verified: a
+10-iteration scan of matmuls reports 10× fewer flops than its unrolled
+twin). Collective bytes aren't reported at all. This module walks the HLO
+text and produces trip-count-aware totals:
+
+ * ``flops``            — 2·M·N·K for every dot (+ conv), × loop trips
+ * ``bytes``            — operands+results of every instruction (HBM-traffic
+                          proxy; fusion bodies are internal and skipped)
+ * ``collective bytes`` — result sizes of all-reduce / all-gather /
+                          reduce-scatter / all-to-all / collective-permute
+
+Trip counts come from the while condition's comparison constant. Validated
+against cost_analysis on loop-free graphs (tests/test_hloparse.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops whose "bytes" are bookkeeping, not HBM traffic
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "copy-start",
+    "copy-done",
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# op token: first lowercase word directly followed by '(' in the RHS —
+# result types (even nested tuples) never contain `word(` sequences.
+_OP_RE = re.compile(r"(?:^|\s)([a-z][a-z0-9\-]*)(?:\.\d+)?\(")
+_COMP_START_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)[\s(].*\{\s*$")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_ATTR_COMP_RE = re.compile(
+    r"(?:to_apply|calls|condition|body|branch_computations)="
+    r"\s*\{?%?([\w.\-]+(?:\s*,\s*%?[\w.\-]+)*)\}?")
+_DIMS_RE = {
+    "lhs_contracting": re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}"),
+    "lhs_batch": re.compile(r"lhs_batch_dims=\{([0-9,]*)\}"),
+}
+
+
+def _shapes_of(type_str):
+    """[(dtype, [dims...]), ...] for a (possibly tuple) HLO type string."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _tensor_bytes(type_str) -> int:
+    total = 0
+    for dt, dims in _shapes_of(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _prod(xs):
+    n = 1
+    for x in xs:
+        n *= x
+    return n
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float
+    bytes: float
+    collective_bytes: float
+    bytes_by_collective: dict
+    counts_by_collective: dict
+    while_trip_counts: dict
+    cross_pod_bytes: float = 0.0     # collectives whose replica groups span
+                                     # pods (device ids ≥ pod_stride apart)
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,{} ]*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[([0-9,]+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+
+
+def _crosses_pods(line: str, pod_stride: int) -> bool:
+    """True if any replica group contains device ids in different pods.
+    Handles both explicit groups ({{0,256},{1,257}}) and the iota form
+    ([2,256]<=[512] or <=[2,16,16]T(1,0,2))."""
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        import numpy as _np
+        gshape = [int(x) for x in m.group(1).split(",")]
+        ishape = [int(x) for x in m.group(2).split(",")]
+        ids = _np.arange(int(_np.prod(ishape))).reshape(ishape)
+        if m.group(3):
+            ids = ids.transpose([int(x) for x in m.group(3).split(",")])
+        ids = ids.reshape(gshape)
+        per_group = ids.reshape(gshape[0], -1)
+        pods = per_group // pod_stride
+        return bool((pods.max(axis=1) != pods.min(axis=1)).any())
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return False
+    for grp in m.group(1).split("}"):
+        ids = [int(x) for x in re.findall(r"\d+", grp)]
+        if ids and (max(ids) // pod_stride) != (min(ids) // pod_stride):
+            return True
+    return False
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: list
+    line: str
+
+
+def _split_computations(text: str) -> dict:
+    comps: dict[str, list] = {}
+    cur = None
+    depth = 0
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_START_RE.match(line)
+            if m and "{" in line:
+                cur = m.group(1)
+                comps[cur] = []
+                depth = line.count("{") - line.count("}")
+                if depth <= 0:
+                    cur = None
+        else:
+            depth += line.count("{") - line.count("}")
+            if depth <= 0:
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _parse_instrs(lines):
+    out = []
+    for ln in lines:
+        if "=" not in ln:
+            continue
+        lhs, _, rhs = ln.partition("=")
+        lhs = lhs.replace("ROOT", "").strip().lstrip("%")
+        if not lhs or " " in lhs:
+            continue
+        m = _OP_RE.search(rhs)
+        if not m:
+            continue
+        op = m.group(1)
+        type_str = rhs[: m.start()]
+        args = rhs[m.end(): rhs.find(")", m.end())]
+        operands = re.findall(r"%?([\w.\-]+)", args)
+        out.append(_Instr(lhs, type_str, op, operands, rhs))
+    return out
+
+
+def _dot_flops(instr: _Instr, symbols: dict) -> float:
+    """2 × prod(result dims) × prod(contracting dims)."""
+    res_shapes = _shapes_of(instr.type_str)
+    if not res_shapes:
+        return 0.0
+    out_elems = _prod(res_shapes[0][1])
+    m = _DIMS_RE["lhs_contracting"].search(instr.line)
+    if not m:
+        return 2.0 * out_elems  # dot without attrs — degenerate
+    lhs_name = instr.operands[0] if instr.operands else None
+    lhs_dims = symbols.get(lhs_name, (None, []))[1]
+    k = 1
+    if m.group(1):
+        for di in m.group(1).split(","):
+            di = int(di)
+            if di < len(lhs_dims):
+                k *= lhs_dims[di]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(instr: _Instr, symbols: dict) -> float:
+    res = _shapes_of(instr.type_str)
+    if not res or len(instr.operands) < 2:
+        return 0.0
+    out_elems = _prod(res[0][1])
+    rhs = symbols.get(instr.operands[1], (None, []))[1]
+    # kernel: spatial... × in_ch × out_ch (out_ch excluded from the multiply)
+    k = _prod(rhs[:-1]) if rhs else 1
+    return 2.0 * out_elems * k
+
+
+def parse_costs(hlo_text: str, pod_stride: int = 0) -> HloCosts:
+    comps = _split_computations(hlo_text)
+    instrs = {name: _parse_instrs(lines) for name, lines in comps.items()}
+
+    # symbol tables (per computation): name -> (dtype, dims) of first shape
+    symbols = {}
+    for name, ins in instrs.items():
+        tab = {}
+        for i in ins:
+            shp = _shapes_of(i.type_str)
+            tab[i.name] = shp[0] if shp else (None, [])
+        symbols[name] = tab
+
+    # sub-computation references per computation
+    refs = defaultdict(list)        # comp -> [(kind, callee)]
+    whiles = defaultdict(list)      # comp -> [(cond, body)]
+    for name, ins in instrs.items():
+        for i in ins:
+            if i.op == "while":
+                m = re.search(r"condition=\s*%?([\w.\-]+)", i.line)
+                m2 = re.search(r"body=\s*%?([\w.\-]+)", i.line)
+                if m and m2:
+                    whiles[name].append((m.group(1), m2.group(1)))
+            elif i.op in ("call", "fusion", "conditional", "map", "reduce",
+                          "sort", "scatter", "reduce-window", "custom-call",
+                          "async-start"):
+                for mm in _ATTR_COMP_RE.finditer(i.line):
+                    for callee in re.split(r"\s*,\s*", mm.group(1)):
+                        refs[name].append((i.op, callee.lstrip("%")))
+
+    def trip_count(cond_name: str) -> int:
+        """Trip count from the while condition: resolve the ROOT's constant
+        operand. The ROOT is either a raw ``compare(gte, const)`` or a
+        ``fusion(gte, const)`` wrapping the compare (XLA:CPU wraps it)."""
+        ins = instrs.get(cond_name, [])
+        if not ins:
+            return 1
+        by_name = {i.name: i for i in ins}
+        root = ins[-1]
+        if root.op in ("compare", "fusion", "call"):
+            vals = []
+            for opn in root.operands:
+                src = by_name.get(opn)
+                if src is not None and src.op == "constant":
+                    m = _CONST_RE.search(src.line)
+                    if m:
+                        vals.append(int(m.group(1)))
+            if len(vals) == 1:
+                return vals[0]
+            m = _CONST_RE.search(root.line)
+            if m:
+                return int(m.group(1))
+            if vals:
+                return max(vals)
+        # fallback: a single scalar constant instruction in the condition
+        consts = [int(_CONST_RE.search(i.line).group(1)) for i in ins
+                  if i.op == "constant" and _CONST_RE.search(i.line)]
+        if len(consts) == 1:
+            return consts[0]
+        return max(consts) if consts else 1
+
+    def sym_bytes(comp, opname):
+        dt, dims = symbols[comp].get(opname, (None, []))
+        if dt is None:
+            return 0
+        return _prod(dims) * _DTYPE_BYTES[dt]
+
+    trip_counts = {}
+    memo = {}
+
+    def cost_of(comp: str, depth=0, inside_fusion=False):
+        key = (comp, inside_fusion)
+        if key in memo:
+            return memo[key]
+        if depth > 60 or comp not in instrs:
+            z = (0.0, 0.0, defaultdict(float), defaultdict(int), 0.0)
+            return z
+        flops = 0.0
+        byts = 0.0
+        cross = 0.0
+        coll = defaultdict(float)
+        coll_n = defaultdict(int)
+        for i in instrs[comp]:
+            if i.op == "dot":
+                flops += _dot_flops(i, symbols[comp])
+            elif i.op == "convolution":
+                flops += _conv_flops(i, symbols[comp])
+            is_coll = None
+            for ct in COLLECTIVES:
+                if i.op == ct or i.op == ct + "-start":
+                    is_coll = ct
+                    break
+            if is_coll:
+                b = _tensor_bytes(i.type_str)
+                coll[is_coll] += b
+                coll_n[is_coll] += 1
+                if pod_stride and _crosses_pods(i.line, pod_stride):
+                    cross += b
+            if not inside_fusion and i.op not in _FREE_OPS \
+                    and i.op != "while":
+                byts += _tensor_bytes(i.type_str)
+                for opn in i.operands:
+                    byts += sym_bytes(comp, opn)
+        # recurse
+        for kind, callee in refs.get(comp, []):
+            f2, b2, c2, n2, x2 = cost_of(callee, depth + 1,
+                                         inside_fusion or kind == "fusion")
+            flops += f2
+            byts += 0.0 if kind == "fusion" else b2
+            cross += x2
+            for k in c2:
+                coll[k] += c2[k]
+                coll_n[k] += n2[k]
+        for cond, body in whiles.get(comp, []):
+            tc = trip_count(cond)
+            trip_counts[body] = tc
+            f2, b2, c2, n2, x2 = cost_of(body, depth + 1, inside_fusion)
+            flops += f2 * tc
+            byts += b2 * tc
+            cross += x2 * tc
+            for k in c2:
+                coll[k] += c2[k] * tc
+                coll_n[k] += n2[k] * tc
+        memo[key] = (flops, byts, coll, coll_n, cross)
+        return memo[key]
+
+    # entry = computations never referenced
+    referenced = set()
+    for name in comps:
+        for _, callee in refs.get(name, []):
+            referenced.add(callee)
+        for cond, body in whiles.get(name, []):
+            referenced.add(cond)
+            referenced.add(body)
+    entries = [n for n in comps if n not in referenced]
+    flops = byts = cross = 0.0
+    coll = defaultdict(float)
+    coll_n = defaultdict(int)
+    for e in entries:
+        f2, b2, c2, n2, x2 = cost_of(e)
+        flops += f2
+        byts += b2
+        cross += x2
+        for k in c2:
+            coll[k] += c2[k]
+            coll_n[k] += n2[k]
+
+    return HloCosts(
+        flops=flops,
+        bytes=byts,
+        collective_bytes=sum(coll.values()),
+        bytes_by_collective=dict(coll),
+        counts_by_collective=dict(coll_n),
+        while_trip_counts=trip_counts,
+        cross_pod_bytes=cross,
+    )
+
+
+# ---------------------------------------------------------------------------
+# backwards-compatible collective-only view
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_type: dict
+    count_by_type: dict
+    total_bytes: int
+    while_trip_counts: dict
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    c = parse_costs(hlo_text)
+    return CollectiveStats(
+        bytes_by_type=c.bytes_by_collective,
+        count_by_type=c.counts_by_collective,
+        total_bytes=int(c.collective_bytes),
+        while_trip_counts=c.while_trip_counts,
+    )
+
+
+def _tensor_bytes_public(type_str: str) -> int:
+    return _tensor_bytes(type_str)

@@ -1,0 +1,32 @@
+"""Production mesh definitions.
+
+Single pod: (data=16, model=16) = 256 chips (one TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips — the `pod` axis carries
+the EASGD elastic exchange (slow cross-pod links), `data`/`model` stay
+inside a pod (fast ICI).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before the first jax call).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_data: int = 2, n_model: int = 2, n_pods: int = 0):
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    if n_pods:
+        return jax.make_mesh((n_pods, n_data, n_model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def n_pods_of(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1)

@@ -1,0 +1,113 @@
+"""Training driver: data pipeline → jitted Sync-EASGD step → checkpoints,
+with preemption watchdog and elastic-restart support.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-4b \
+        --reduced --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/run1
+
+On this CPU container use --reduced; on a real cluster drop it and point
+--mesh at the production topology.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.core.easgd import EASGDConfig
+from repro.core.elastic import ElasticConfig
+from repro.data import ShardedPipeline, SyntheticLMStream
+from repro.ft import Watchdog
+from repro.launch.mesh import make_host_mesh, n_pods_of
+from repro.runtime.train import build_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="global batch (sequences)")
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--n-pods", type=int, default=1)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--eta", type=float, default=0.02)
+    ap.add_argument("--rho", type=float, default=0.01)
+    ap.add_argument("--tau", type=int, default=1)
+    ap.add_argument("--compression", default="none")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    spec = configs.get(args.arch)
+    cfg = spec.reduced if args.reduced else spec.config
+    n_dev = jax.device_count()
+    mesh = make_host_mesh(n_data=max(1, n_dev // max(args.n_pods, 1)),
+                          n_model=1,
+                          n_pods=args.n_pods if args.n_pods > 1 else 0)
+    n_pods = n_pods_of(mesh) if args.n_pods > 1 else args.n_pods
+
+    ecfg = ElasticConfig(
+        easgd=EASGDConfig(eta=args.eta, rho=args.rho, mu=0.9, tau=args.tau),
+        compression=args.compression,
+        momentum_dtype=spec.momentum_dtype,
+        center_dtype=spec.center_dtype,
+    )
+    per_pod = args.batch // n_pods
+    build = build_train_step(cfg, ecfg, mesh, n_pods=n_pods,
+                             per_pod_batch=per_pod, seq=args.seq,
+                             microbatches=args.microbatches)
+    state = build.init_state()
+
+    pipe = ShardedPipeline(
+        lambda shard, n: SyntheticLMStream(cfg.vocab_size, args.seq, per_pod,
+                                           seed=13, shard=shard, n_shards=n),
+        n_pods=n_pods).start()
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start_step = 0
+    if ckpt and ckpt.latest_step() is not None:
+        state, meta = ckpt.restore(state)
+        start_step = meta["extra"]["data_step"]
+        pipe.restore(start_step)
+        print(f"resumed from step {start_step}")
+
+    wd = Watchdog().start_heartbeat()
+    t0 = time.time()
+    losses = []
+    step = start_step
+    try:
+        for step in range(start_step, args.steps):
+            if wd.should_stop.is_set():
+                print("preemption signal — checkpoint + clean exit")
+                break
+            batch = {k: jax.numpy.asarray(v) for k, v in pipe.next().items()}
+            state, metrics = build.step(state, batch)
+            losses.append(float(metrics["loss"]))
+            if step % args.log_every == 0:
+                print(f"step {step:5d} loss {losses[-1]:.4f} "
+                      f"acc {float(metrics['accuracy']):.3f} "
+                      f"({time.time()-t0:.1f}s)", flush=True)
+            if ckpt and step and step % args.ckpt_every == 0:
+                ckpt.save_async(step, state, extra={"data_step": step + 1})
+    finally:
+        pipe.stop()
+        if ckpt:
+            ckpt.wait()
+            ckpt.save(step, state, extra={"data_step": step + 1})
+        wd.close()
+    if len(losses) > 10:
+        first = np.mean(losses[:5])
+        last = np.mean(losses[-5:])
+        print(f"loss {first:.4f} -> {last:.4f} "
+              f"({'improved' if last < first else 'NOT improved'})")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.models.common import (
+    ModelConfig, MoEConfig, MLAConfig, SSMConfig, RGLRUConfig,
+    ParamDef, init_params, abstract_params, partition_specs, make_rules,
+)
+from repro.models import transformer, attention, ffn, moe, mla, ssm, rglru, cnn

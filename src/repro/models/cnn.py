@@ -1,0 +1,127 @@
+"""Small CNNs for reproducing the paper's own experiments.
+
+The paper trains LeNet on MNIST (Table 3 / Fig 8-11: 4-GPU EASGD variants)
+and AlexNet on CIFAR (Fig 12-13: KNL partitioning). We implement both
+(LeNet-5 faithful; AlexNet scaled to 32×32 as in the paper's CIFAR runs) and
+use them with the async engine + synthetic datasets for the convergence
+reproductions. Pure jnp — small enough to train on this CPU.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _conv(x, w, b, stride=1, padding="SAME"):
+    out = lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b[None, None, None]
+
+
+def _init(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * math.sqrt(2.0 / fan_in)
+
+
+# ---------------------------------------------------------------------------
+# LeNet-5 (28x28x1, 10 classes) — the paper's MNIST model
+# ---------------------------------------------------------------------------
+
+def lenet_init(key, n_classes=10):
+    ks = jax.random.split(key, 8)
+    return {
+        "c1w": _init(ks[0], (5, 5, 1, 6), 25), "c1b": jnp.zeros(6),
+        "c2w": _init(ks[1], (5, 5, 6, 16), 150), "c2b": jnp.zeros(16),
+        "f1w": _init(ks[2], (7 * 7 * 16, 120), 784), "f1b": jnp.zeros(120),
+        "f2w": _init(ks[3], (120, 84), 120), "f2b": jnp.zeros(84),
+        "f3w": _init(ks[4], (84, n_classes), 84), "f3b": jnp.zeros(n_classes),
+    }
+
+
+def lenet_apply(p, x):
+    """x: (B, 28, 28, 1) -> logits (B, 10)."""
+    h = jnp.tanh(_conv(x, p["c1w"], p["c1b"]))
+    h = lax.reduce_window(h, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                          "SAME")
+    h = jnp.tanh(_conv(h, p["c2w"], p["c2b"]))
+    h = lax.reduce_window(h, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                          "SAME")
+    h = h.reshape(h.shape[0], -1)
+    h = jnp.tanh(h @ p["f1w"] + p["f1b"])
+    h = jnp.tanh(h @ p["f2w"] + p["f2b"])
+    return h @ p["f3w"] + p["f3b"]
+
+
+# ---------------------------------------------------------------------------
+# AlexNet-for-CIFAR (32x32x3, 10 classes) — the paper's CIFAR model
+# ---------------------------------------------------------------------------
+
+def alexnet_init(key, n_classes=10):
+    ks = jax.random.split(key, 10)
+    return {
+        "c1w": _init(ks[0], (3, 3, 3, 64), 27), "c1b": jnp.zeros(64),
+        "c2w": _init(ks[1], (3, 3, 64, 192), 576), "c2b": jnp.zeros(192),
+        "c3w": _init(ks[2], (3, 3, 192, 384), 1728), "c3b": jnp.zeros(384),
+        "c4w": _init(ks[3], (3, 3, 384, 256), 3456), "c4b": jnp.zeros(256),
+        "c5w": _init(ks[4], (3, 3, 256, 256), 2304), "c5b": jnp.zeros(256),
+        "f1w": _init(ks[5], (4 * 4 * 256, 1024), 4096), "f1b": jnp.zeros(1024),
+        "f2w": _init(ks[6], (1024, 512), 1024), "f2b": jnp.zeros(512),
+        "f3w": _init(ks[7], (512, n_classes), 512), "f3b": jnp.zeros(n_classes),
+    }
+
+
+def alexnet_apply(p, x):
+    """x: (B, 32, 32, 3) -> logits."""
+    pool = partial(lax.reduce_window, init_value=-jnp.inf, computation=lax.max,
+                   window_dimensions=(1, 2, 2, 1), window_strides=(1, 2, 2, 1),
+                   padding="SAME")
+    h = jax.nn.relu(_conv(x, p["c1w"], p["c1b"]))
+    h = pool(h)
+    h = jax.nn.relu(_conv(h, p["c2w"], p["c2b"]))
+    h = pool(h)
+    h = jax.nn.relu(_conv(h, p["c3w"], p["c3b"]))
+    h = jax.nn.relu(_conv(h, p["c4w"], p["c4b"]))
+    h = jax.nn.relu(_conv(h, p["c5w"], p["c5b"]))
+    h = pool(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ p["f1w"] + p["f1b"])
+    h = jax.nn.relu(h @ p["f2w"] + p["f2b"])
+    return h @ p["f3w"] + p["f3b"]
+
+
+# ---------------------------------------------------------------------------
+# small MLP (fast CPU convergence experiments)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_in=64, d_hidden=128, n_classes=10, depth=2):
+    ks = jax.random.split(key, depth + 1)
+    p = {}
+    d = d_in
+    for i in range(depth):
+        p[f"w{i}"] = _init(ks[i], (d, d_hidden), d)
+        p[f"b{i}"] = jnp.zeros(d_hidden)
+        d = d_hidden
+    p["w_out"] = _init(ks[-1], (d, n_classes), d)
+    p["b_out"] = jnp.zeros(n_classes)
+    return p
+
+
+def mlp_apply(p, x, depth=2):
+    h = x
+    for i in range(depth):
+        h = jax.nn.relu(h @ p[f"w{i}"] + p[f"b{i}"])
+    return h @ p["w_out"] + p["b_out"]
+
+
+def xent_loss(logits, labels):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+    return jnp.mean(logz - ll)
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

@@ -1,0 +1,281 @@
+"""Model substrate: configs, parameter definitions, init, sharding specs.
+
+Parameters are declared as ``ParamDef`` pytrees (shape + logical axes +
+init rule). From one declaration we derive:
+  * concrete initialized params        (``init_params``)
+  * ShapeDtypeStruct abstract params   (``abstract_params`` — dry-run path,
+    no allocation)
+  * PartitionSpecs                     (``partition_specs`` via logical→mesh
+    axis rules)
+keeping shapes, init and sharding impossible to drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# sub-configs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    d_expert: int = 0            # per-expert FFN width
+    capacity_factor: float = 1.25
+    dispatch_groups: int = 16    # grouped dispatch (matches data-axis size;
+                                 # makes routing cumsums shard-local)
+    aux_loss_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 Multi-head Latent Attention."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 SSD."""
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    """RecurrentGemma RG-LRU recurrent block."""
+    width: int = 2560            # lru width (= d_model for recurrentgemma)
+    d_conv: int = 4
+    c: float = 8.0               # power in a_t = a^(c·r_t)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    # layer pattern, cycled over n_layers. entries: "attn" (global),
+    # "local" (sliding window attn), "ssm", "rglru", "moe" (attn+moe ffn),
+    # "moe_local"…  The ffn kind is inferred: "moe*" → MoE, else dense.
+    pattern: tuple = ("attn",)
+    window: int = 1024           # sliding window for "local" layers
+    rope_theta: float = 10_000.0
+    rope_theta_global: float = 0.0   # 0 -> same as rope_theta
+    mrope_sections: Optional[tuple] = None   # qwen2-vl (t, h, w) rotary split
+    qkv_bias: bool = False
+    qk_norm: bool = False        # gemma3
+    act: str = "silu"            # silu (swiglu) | gelu (geglu)
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    # precisions
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    # distribution hints
+    fsdp: bool = False           # shard params over 'data' too (ZeRO-3 style)
+    # modality stubs
+    patch_embed_tokens: int = 0  # vlm: leading positions fed by patch embeds
+    # loss
+    loss_chunk: int = 32768      # cross-entropy token chunking (vocab memory)
+    remat: str = "full"          # full | dots | none  (per-layer policy)
+    # perf knobs (hillclimb levers; defaults are the measured baseline)
+    attn_q_block: int = 512
+    attn_kv_block: int = 1024
+    moe_ep: bool = True          # experts over `data` (EP) vs replicated+TP
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def layer_kinds(self) -> tuple:
+        """Concrete per-layer kind list, cycling ``pattern``."""
+        reps = math.ceil(self.n_layers / len(self.pattern))
+        return tuple((self.pattern * reps)[: self.n_layers])
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def remainder_kinds(self) -> tuple:
+        r = self.n_layers % len(self.pattern)
+        return tuple(self.pattern[:r])
+
+
+# ---------------------------------------------------------------------------
+# parameter definitions
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    logical: tuple               # logical axis name per dim
+    init: str = "normal"         # normal | zeros | ones | embed
+    scale: float = 1.0           # fan-in handled at call site via scale
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key, dtype):
+    """Materialize a ParamDef pytree into arrays (truncated-normal/zeros)."""
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dtype))
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            std = d.scale / math.sqrt(max(fan_in, 1))
+            out.append(
+                (jax.random.truncated_normal(k, -2.0, 2.0, d.shape,
+                                              jnp.float32) * std).astype(dtype)
+            )
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(defs, dtype):
+    """ShapeDtypeStruct pytree — the dry-run path (no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=_is_def
+    )
+
+
+def partition_specs(defs, rules: dict):
+    """Map each ParamDef's logical axes to mesh axes via ``rules``.
+
+    ``rules`` maps logical axis name -> mesh axis name (or None). A mesh
+    axis is used at most once per param (first logical dim wins) and only
+    when the dim size divides the mesh axis size (callers bake sizes into
+    the rules via ``make_rules``).
+
+    Selective FSDP (``rules["_fsdp_axis"]``): after TP assignment, the
+    largest still-unsharded eligible dim additionally shards over the data
+    axis — EXCEPT vocab-carrying params (a 2D-sharded embedding table makes
+    the token gather pathological under SPMD: 'involuntary full
+    rematerialization'). This bounds per-device weight residency for the
+    100B+ archs while keeping gathers clean.
+    """
+    fsdp_axis = rules.get("_fsdp_axis")
+
+    def spec(d: ParamDef) -> P:
+        used = set()
+        axes = []
+        for dim, logical in zip(d.shape, d.logical):
+            ax = rules.get(logical)
+            if ax is None or ax in used:
+                axes.append(None)
+                continue
+            size = rules.get(("_axis_size", ax), 0)
+            if size and dim % size != 0:
+                axes.append(None)
+                continue
+            axes.append(ax)
+            used.add(ax)
+        if fsdp_axis and fsdp_axis not in used \
+                and "vocab" not in d.logical:
+            dsize = rules.get(("_axis_size", fsdp_axis), 0)
+            cands = [
+                (dim, i) for i, (dim, logical)
+                in enumerate(zip(d.shape, d.logical))
+                if axes[i] is None and logical not in ("layers", "conv")
+                and dsize and dim % dsize == 0
+            ]
+            if cands:
+                _, i = max(cands)
+                axes[i] = fsdp_axis
+        return P(*axes)
+
+    return jax.tree_util.tree_map(spec, defs, is_leaf=_is_def)
+
+
+def make_rules(cfg: ModelConfig, mesh_axes: dict) -> dict:
+    """Logical-axis → mesh-axis rules for a model on a mesh.
+
+    mesh_axes: {"data": size, "model": size} (pod handled outside via vmap).
+    TP axes go on 'model'; FSDP (when cfg.fsdp) additionally shards the
+    d_model ("embed") dim of weight matrices over 'data'.
+    """
+    model_size = mesh_axes.get("model", 1)
+    data_size = mesh_axes.get("data", 1)
+    rules = {
+        "vocab": "model",
+        "ff": "model",
+        "expert_ff": "model",
+        # EP over the DATA axis (2-axis EP layout): expert weights live
+        # E-sharded on `data` + f-sharded on `model`; the dispatch buffer's
+        # G→E reshard IS the token all-to-all. (E on `model` makes the
+        # combine gather all-gather the whole buffer — measured 1000×
+        # worse.) Non-divisible expert counts (grok: 8) replicate E and
+        # 2D-shard (d×f) instead.
+        "experts": "data" if (cfg.moe and cfg.moe_ep and cfg.moe.n_experts % max(data_size, 1) == 0) else None,
+        "q_heads": "model",
+        "kv_heads": "model",
+        "heads_x_dim": "model",
+        "inner": "model",        # ssm/rglru inner channels
+        "embed": None,           # fsdp handled by the _fsdp_axis post-pass
+        "embed_out": None,
+        "layers": None,
+        "head_dim": None,
+        "state": None,
+        "conv": None,
+        "lora": None,
+        ("_axis_size", "model"): model_size,
+        ("_axis_size", "data"): data_size,
+    }
+    if cfg.fsdp:
+        rules["_fsdp_axis"] = "data"
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# numerics helpers shared by blocks
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]

@@ -1,0 +1,140 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Queries and keys/values are low-rank compressed:
+  c_q  = RMSNorm(x · W_dq)            (q_lora_rank)
+  q    = c_q · W_uq  -> split [q_nope | q_pe];  q_pe gets RoPE
+  c_kv | k_pe = x · W_dkv             (kv_lora_rank + rope_dim)
+  c_kv = RMSNorm(c_kv);  k_pe gets RoPE (shared across heads)
+  k    = [c_kv · W_uk | k_pe],  v = c_kv · W_uv
+
+The decode cache stores ONLY (c_kv, k_pe) — kv_lora+rope floats per token
+(576 for DeepSeek-V2) instead of 2·H·D. Decode uses the absorbed form:
+  score_t = (q_nope · W_ukᵀ) · c_kv_t + q_pe · k_pe_t
+  out     = (Σ p_t c_kv_t) · W_uv
+so per-step FLOPs never expand the cache into per-head keys.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sctx
+from repro.models.common import ModelConfig, ParamDef, rms_norm, softcap
+from repro.models.attention import (
+    apply_rope, blocked_attention, flash_attention_train, NEG_INF,
+)
+
+
+def mla_defs(cfg: ModelConfig) -> dict:
+    a = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk = a.qk_nope_head_dim + a.qk_rope_head_dim
+    return {
+        "w_dq": ParamDef((d, a.q_lora_rank), ("embed", "lora")),
+        "q_norm": ParamDef((a.q_lora_rank,), ("lora",), init="zeros"),
+        "w_uq": ParamDef((a.q_lora_rank, H, qk), ("lora", "q_heads", "head_dim")),
+        "w_dkv": ParamDef((d, a.kv_lora_rank + a.qk_rope_head_dim),
+                          ("embed", "lora")),
+        "kv_norm": ParamDef((a.kv_lora_rank,), ("lora",), init="zeros"),
+        "w_uk": ParamDef((a.kv_lora_rank, H, a.qk_nope_head_dim),
+                         ("lora", "q_heads", "head_dim")),
+        "w_uv": ParamDef((a.kv_lora_rank, H, a.v_head_dim),
+                         ("lora", "q_heads", "head_dim")),
+        "wo": ParamDef((H, a.v_head_dim, d), ("q_heads", "head_dim",
+                                              "embed_out")),
+    }
+
+
+def _q_proj(cfg, p, x, positions):
+    a = cfg.mla
+    cd = cfg.compute_dtype
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"].astype(cd)),
+                  p["q_norm"])
+    q = sctx.shard(jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"].astype(cd)),
+                   "batch", "seq", "heads", "head_dim")
+    q_nope = q[..., : a.qk_nope_head_dim]
+    q_pe = apply_rope(q[..., a.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _kv_compress(cfg, p, x, positions):
+    a = cfg.mla
+    cd = cfg.compute_dtype
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(cd))
+    c_kv = rms_norm(ckv_full[..., : a.kv_lora_rank], p["kv_norm"])
+    k_pe = ckv_full[..., a.kv_lora_rank:][:, :, None, :]     # (B,S,1,rope)
+    k_pe = apply_rope(k_pe, positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_pe
+
+
+def mla_block(cfg: ModelConfig, p, x, positions, *, cache=None,
+              cache_pos=None, **_unused):
+    """Same interface as attention.attention_block. Cache holds the
+    COMPRESSED representation: {ckv: (B,Sc,rank), kpe: (B,Sc,rope)}."""
+    a = cfg.mla
+    cd = cfg.compute_dtype
+    H = cfg.n_heads
+    B, S, _ = x.shape
+
+    q_nope, q_pe = _q_proj(cfg, p, x, positions)
+
+    if cache is not None and S == 1:
+        # ---- absorbed decode ------------------------------------------------
+        c_kv_t, k_pe_t = _kv_compress(cfg, p, x, positions)
+        bidx = jnp.arange(B)[:, None]
+        slot = cache_pos[..., None]
+        ckv = cache["ckv"].at[bidx, slot].set(c_kv_t.astype(cache["ckv"].dtype))
+        kpe = cache["kpe"].at[bidx, slot].set(k_pe_t.astype(cache["kpe"].dtype))
+        Sc = ckv.shape[1]
+        valid = jnp.arange(Sc)[None, :] <= cache_pos[:, None]
+
+        # absorb W_uk into q:  (B,1,H,nope) x (rank,H,nope) -> (B,H,rank)
+        q_abs = jnp.einsum("bshk,rhk->bhr", q_nope, p["w_uk"].astype(cd))
+        scale = 1.0 / math.sqrt(a.qk_nope_head_dim + a.qk_rope_head_dim)
+        # cache stays in storage dtype; fp32 accumulation on the MXU
+        s = (jnp.einsum("bhr,bsr->bhs", q_abs.astype(ckv.dtype), ckv,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bshk,btk->bht", q_pe.astype(kpe.dtype), kpe,
+                          preferred_element_type=jnp.float32)) * scale
+        s = jnp.where(valid[:, None, :], s, NEG_INF)
+        prob = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhs,bsr->bhr", prob.astype(ckv.dtype), ckv,
+                         preferred_element_type=jnp.float32)
+        out = jnp.einsum("bhr,rhv->bhv", ctx.astype(cd),
+                         p["w_uv"].astype(cd))[:, None]       # (B,1,H,v)
+        new_cache = {"ckv": ckv, "kpe": kpe}
+    else:
+        # ---- training / prefill: expand and use the blocked kernel --------
+        c_kv, k_pe = _kv_compress(cfg, p, x, positions)
+        k_nope = sctx.shard(
+            jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"].astype(cd)),
+            "batch", "seq", "heads", "head_dim")
+        v = sctx.shard(jnp.einsum("bsr,rhv->bshv", c_kv, p["w_uv"].astype(cd)),
+                       "batch", "seq", "heads", "head_dim")
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe[:, :, None, :],
+                                      k_nope.shape[:3] + (a.qk_rope_head_dim,))],
+            axis=-1,
+        )
+        q = jnp.concatenate([q_nope, q_pe], axis=-1)
+        if cache is None:
+            out = flash_attention_train(q, k, v, causal=True,
+                                        q_block=cfg.attn_q_block,
+                                        kv_block=cfg.attn_kv_block)
+        else:
+            out = blocked_attention(q, k, v, causal=True)
+        new_cache = cache
+        if cache is not None:
+            Sc = cache["ckv"].shape[1]
+            ckv = cache["ckv"].at[:, :S].set(
+                c_kv[:, :Sc].astype(cache["ckv"].dtype))
+            kpe = cache["kpe"].at[:, :S].set(
+                k_pe[:, :Sc].astype(cache["kpe"].dtype))
+            new_cache = {"ckv": ckv, "kpe": kpe}
+
+    out = sctx.shard(out.astype(cd), "batch", "seq", "heads", "head_dim")
+    y = sctx.shard(jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(cd)),
+                   "batch", "seq", "embed")
+    return y, new_cache

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bounded grouped dispatch,
+optional shared experts (DeepSeek-V2 style), load-balance aux loss.
+
+Dispatch design (DESIGN.md §5): tokens are processed in ``dispatch_groups``
+groups sized to match the data-parallel axis, so the routing cumsum (the
+position-in-expert rank) is local to a shard — no cross-shard prefix scan.
+The dispatch buffer is (G, E, C, d): G sharded over `data`, E over `model`
+(when E % model == 0, else experts replicate and d_ff shards). GSPMD turns
+the buffer resharding into the expert-parallel all-to-all and the combine
+scatter into a reduce over `model`.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import sctx
+from repro.models.common import ModelConfig, ParamDef, act_fn
+
+
+def _effective_groups(T: int, G: int) -> int:
+    g = min(G, T)
+    while T % g:
+        g -= 1
+    return max(g, 1)
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d, E, f = cfg.d_model, m.n_experts, m.d_expert
+    defs = {
+        "router": ParamDef((d, E), ("embed", "router_experts")),
+        "we_gate": ParamDef((E, d, f), ("experts", "embed", "expert_ff")),
+        "we_up": ParamDef((E, d, f), ("experts", "embed", "expert_ff")),
+        "we_down": ParamDef((E, f, d), ("experts", "expert_ff", "embed_out")),
+    }
+    if m.n_shared:
+        fs = m.n_shared * f
+        defs.update({
+            "ws_gate": ParamDef((d, fs), ("embed", "ff")),
+            "ws_up": ParamDef((d, fs), ("embed", "ff")),
+            "ws_down": ParamDef((fs, d), ("ff", "embed_out")),
+        })
+    return defs
+
+
+def moe_block(cfg: ModelConfig, p, x):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    m = cfg.moe
+    cd = cfg.compute_dtype
+    act = act_fn(cfg.act)
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.n_experts, m.top_k
+    G = _effective_groups(T, m.dispatch_groups)
+    Tg = T // G
+    C = max(1, math.ceil(Tg * k * m.capacity_factor / E))
+
+    xg = x.reshape(G, Tg, d)
+
+    # ---- routing (fp32) ----------------------------------------------------
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = lax.top_k(probs, k)                      # (G, Tg, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * Σ_e f_e · p̄_e
+    me = probs.mean(axis=(0, 1))                            # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0 / (T * k))
+    aux = E * jnp.sum(me * ce) * m.aux_loss_weight
+
+    # ---- grouped dispatch ---------------------------------------------------
+    ids = top_e.reshape(G, Tg * k)                          # slot -> expert
+    oh = jax.nn.one_hot(ids, E, dtype=jnp.float32)          # (G, Tg*k, E)
+    pos = (jnp.cumsum(oh, axis=1) - 1.0)                    # rank within expert
+    pos = jnp.take_along_axis(pos, ids[..., None], axis=-1)[..., 0]
+    pos = pos.astype(jnp.int32)                             # (G, Tg*k)
+    keep = (pos < C)
+    slot = jnp.where(keep, ids * C + pos, 0)
+
+    x_slots = jnp.repeat(xg, k, axis=1).astype(cd)          # (G, Tg*k, d)
+    gidx = jnp.arange(G)[:, None]
+    buf = jnp.zeros((G, E * C, d), cd).at[gidx, slot].add(
+        x_slots * keep[..., None].astype(cd))
+    # 2-axis EP: resharding the buffer from token-major (G over data) to
+    # expert-major (E over data) IS the dispatch all-to-all.
+    buf = sctx.shard(buf.reshape(G, E, C, d),
+                     "groups", "experts_dp" if cfg.moe_ep else "experts_off",
+                     "cap", "embed")
+
+    # ---- expert FFN (E over `data`, d_expert over `model`) ------------------
+    h = act(sctx.shard(
+        jnp.einsum("gecd,edf->gecf", buf, p["we_gate"].astype(cd)),
+        "groups", "experts_dp" if cfg.moe_ep else "experts_off",
+        "cap", "ff")) * \
+        jnp.einsum("gecd,edf->gecf", buf, p["we_up"].astype(cd))
+    out = jnp.einsum("gecf,efd->gecd", h, p["we_down"].astype(cd))
+    # combine all-to-all: back to token-major so the slot gather is local
+    out = sctx.shard(out.reshape(G, E * C, d), "groups", "cap", "embed")
+
+    # ---- combine -------------------------------------------------------------
+    y_slots = jnp.take_along_axis(out, slot[..., None], axis=1)
+    w = (top_p.reshape(G, Tg * k) * keep.astype(jnp.float32)).astype(cd)
+    y = (y_slots * w[..., None]).reshape(G, Tg, k, d).sum(axis=2)
+    y = y.reshape(B, S, d)
+
+    # ---- shared experts (always-on dense path) ------------------------------
+    if m.n_shared:
+        g = act(sctx.shard(
+            jnp.einsum("bsd,df->bsf", x, p["ws_gate"].astype(cd)),
+            "batch", "seq", "ff"))
+        u = sctx.shard(jnp.einsum("bsd,df->bsf", x, p["ws_up"].astype(cd)),
+                       "batch", "seq", "ff")
+        y = y + jnp.einsum("bsf,fd->bsd", g * u, p["ws_down"].astype(cd))
+
+    return sctx.shard(y, "batch", "seq", "embed"), aux

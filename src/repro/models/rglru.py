@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = σ(W_a x_t + b_a)                  (recurrence gate)
+    i_t = σ(W_x x_t + b_x)                  (input gate)
+    log a_t = −c · r_t · softplus(Λ)        (so a_t = σ(Λ)^{c·r_t} ∈ (0,1))
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill evaluates the diagonal recurrence with an associative scan
+(log-depth on TPU); decode is the O(1) step. The recurrent block follows
+Griffin: two branches (GeLU gate ∥ conv1d→RG-LRU), multiplied, projected.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import sctx
+from repro.models.common import ModelConfig, ParamDef
+
+
+def rglru_defs(cfg: ModelConfig) -> dict:
+    g = cfg.rglru
+    d, w = cfg.d_model, g.width
+    return {
+        "w_y": ParamDef((d, w), ("embed", "inner")),       # gate branch
+        "w_x": ParamDef((d, w), ("embed", "inner")),       # recurrent branch
+        "conv_w": ParamDef((g.d_conv, w), ("conv", "inner")),
+        "conv_b": ParamDef((w,), ("inner",), init="zeros"),
+        "wa": ParamDef((w, w), ("inner", "inner2")),
+        "ba": ParamDef((w,), ("inner",), init="zeros"),
+        "wi": ParamDef((w, w), ("inner", "inner2")),
+        "bi": ParamDef((w,), ("inner",), init="zeros"),
+        "lam": ParamDef((w,), ("inner",), init="ones"),    # Λ
+        "w_out": ParamDef((w, d), ("inner", "embed_out")),
+    }
+
+
+def _causal_conv(x, w, b):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(K))
+    return out + b[None, None]
+
+
+def _rglru_gates(cfg, p, x):
+    g = cfg.rglru
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ p["wa"].astype(jnp.float32)
+                       + p["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(x32 @ p["wi"].astype(jnp.float32)
+                       + p["bi"].astype(jnp.float32))
+    log_a = -g.c * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x32)
+    return a, gated_in
+
+
+def rglru_scan(cfg, p, x):
+    """x: (B,S,w) -> h: (B,S,w) via associative scan over time."""
+    a, b = _rglru_gates(cfg, p, x)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_step(cfg, p, x_t, h_prev):
+    """x_t: (B,w); h_prev: (B,w) -> (y_t, h_t)."""
+    a, b = _rglru_gates(cfg, p, x_t[:, None])
+    h = a[:, 0] * h_prev + b[:, 0]
+    return h, h
+
+
+def rglru_block(cfg: ModelConfig, p, x, positions=None, *, cache=None,
+                cache_pos=None, **_unused):
+    """Griffin recurrent block. cache = {conv: (B,K-1,w), state: (B,w)}."""
+    g = cfg.rglru
+    cd = cfg.compute_dtype
+    B_, S, _ = x.shape
+
+    y_gate = jax.nn.gelu(sctx.shard(
+        jnp.einsum("bsd,dw->bsw", x, p["w_y"].astype(cd)),
+        "batch", "seq", "inner"))
+    xr = sctx.shard(jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(cd)),
+                    "batch", "seq", "inner")
+
+    if cache is not None and S == 1:
+        conv_hist = jnp.concatenate([cache["conv"], xr], axis=1)
+        conv_out = jnp.einsum("bkw,kw->bw", conv_hist.astype(cd),
+                              p["conv_w"].astype(cd)) + p["conv_b"].astype(cd)
+        h, state = rglru_step(cfg, p, conv_out, cache["state"])
+        h = h[:, None]
+        new_cache = {"conv": conv_hist[:, 1:], "state": state}
+    else:
+        conv_out = _causal_conv(xr.astype(cd), p["conv_w"].astype(cd),
+                                p["conv_b"].astype(cd))
+        h = rglru_scan(cfg, p, conv_out)
+        new_cache = cache
+        if cache is not None:
+            K = g.d_conv
+            new_cache = {"conv": xr[:, -(K - 1):].astype(cache["conv"].dtype),
+                         "state": h[:, -1].astype(jnp.float32)}
+
+    out = h.astype(cd) * y_gate
+    return jnp.einsum("bsw,wd->bsd", out, p["w_out"].astype(cd)), new_cache

@@ -1,0 +1,35 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; the runtime installs a constraint function
+here (active during tracing) and blocks call ``shard(x, *logical_axes)`` at
+layout-critical points (projection outputs, block boundaries, FFN hidden,
+logits chunks). Without these constraints the SPMD partitioner may choose
+replicated activations (measured: one unconstrained QKV projection cost
+18.5 GiB/device on the gemma3-4b probe).
+
+Logical activation axes: "batch", "seq", "embed", "heads", "kv_heads",
+"head_dim", "ff", "vocab", "experts", "groups", "inner".
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+_ctx = contextvars.ContextVar("activation_sharding", default=None)
+
+
+def shard(x, *logical):
+    """Apply the installed constraint (no-op when none installed)."""
+    fn = _ctx.get()
+    if fn is None:
+        return x
+    return fn(x, logical)
+
+
+@contextlib.contextmanager
+def use(fn):
+    token = _ctx.set(fn)
+    try:
+        yield
+    finally:
+        _ctx.reset(token)

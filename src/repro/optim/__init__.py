@@ -1,0 +1,5 @@
+from repro.optim.sgd import sgd, momentum_sgd
+from repro.optim.adam import adam
+from repro.optim.schedule import (
+    constant, linear_warmup_cosine, step_decay, Schedule,
+)

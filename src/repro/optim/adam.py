@@ -1,0 +1,44 @@
+"""Adam (for the non-EASGD baseline runs and examples)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: object
+    v: object
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0):
+    def init(params):
+        z = lambda: jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamState(jnp.zeros((), jnp.int32), z(), z())
+
+    def update(grads, state, params):
+        t = state.step + 1
+        lr_t = lr(state.step) if callable(lr) else lr
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state.m, grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) *
+            jnp.square(g.astype(jnp.float32)), state.v, grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            step_ = lr_t * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                step_ = step_ + lr_t * weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, m, v)
+        return new_params, AdamState(t, m, v)
+
+    return init, update

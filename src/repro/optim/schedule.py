@@ -1,0 +1,37 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    fn: object
+
+    def __call__(self, step):
+        return self.fn(step)
+
+
+def constant(lr: float) -> Schedule:
+    return Schedule(lambda step: jnp.asarray(lr, jnp.float32))
+
+
+def linear_warmup_cosine(peak_lr: float, warmup: int, total: int,
+                         floor: float = 0.0) -> Schedule:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (peak_lr - floor) * 0.5 * (1 + jnp.cos(math.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return Schedule(fn)
+
+
+def step_decay(lr: float, decay: float, every: int) -> Schedule:
+    def fn(step):
+        k = jnp.asarray(step, jnp.float32) // every
+        return lr * (decay ** k)
+    return Schedule(fn)

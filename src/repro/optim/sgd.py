@@ -1,0 +1,58 @@
+"""SGD / momentum SGD as (init, update) transform pairs (no optax).
+
+These are the *inner* optimizers of the EASGD family (the paper's worker
+update). ``core.elastic`` hard-codes the momentum form for the fused packed
+step; these standalone versions serve the async engine, the CNN repro
+experiments and the examples.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+
+
+def sgd(lr):
+    def init(params):
+        return SGDState(jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        lr_t = lr(state.step) if callable(lr) else lr
+        new_params = jax.tree_util.tree_map(
+            lambda p, g: p - lr_t * g.astype(p.dtype), params, grads)
+        return new_params, SGDState(state.step + 1)
+
+    return init, update
+
+
+class MomentumState(NamedTuple):
+    step: jnp.ndarray
+    velocity: object
+
+
+def momentum_sgd(lr, mu: float = 0.9, nesterov: bool = False):
+    """Paper eqs (3)-(4): V ← μV − ηΔW; W ← W + V."""
+    def init(params):
+        v = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return MomentumState(jnp.zeros((), jnp.int32), v)
+
+    def update(grads, state, params):
+        lr_t = lr(state.step) if callable(lr) else lr
+        v = jax.tree_util.tree_map(
+            lambda v_, g: mu * v_ - lr_t * g.astype(v_.dtype),
+            state.velocity, grads)
+        if nesterov:
+            new_params = jax.tree_util.tree_map(
+                lambda p, v_, g: p + mu * v_ - lr_t * g.astype(p.dtype),
+                params, v, grads)
+        else:
+            new_params = jax.tree_util.tree_map(
+                lambda p, v_: p + v_.astype(p.dtype), params, v)
+        return new_params, MomentumState(state.step + 1, v)
+
+    return init, update

@@ -1,0 +1,3 @@
+from repro.runtime.train import TrainBuild, build_train_step, make_batch_defs
+from repro.runtime.serve import ServeBuild, build_serve_steps, BatchingEngine
+from repro.runtime import sharding

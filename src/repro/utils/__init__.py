@@ -1,0 +1,13 @@
+from repro.utils.pytree import (
+    tree_size,
+    tree_bytes,
+    tree_zeros_like,
+    tree_add,
+    tree_sub,
+    tree_scale,
+    tree_dot,
+    tree_norm,
+    tree_cast,
+    tree_map,
+)
+from repro.utils.timing import Timer, now

@@ -1,0 +1,57 @@
+"""Pytree arithmetic helpers used across the framework.
+
+These are deliberately tiny: the framework builds its own optimizer /
+elastic-averaging machinery (no optax dependency), so pointwise pytree
+algebra shows up everywhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+tree_map = jax.tree_util.tree_map
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar elements in a pytree of arrays."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays (or ShapeDtypeStructs)."""
+    return sum(
+        int(x.size) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def tree_zeros_like(tree):
+    return tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return tree_map(lambda x: x * s, a)
+
+
+def tree_dot(a, b):
+    """Sum of elementwise products across two pytrees (fp32 accumulate)."""
+    parts = tree_map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    return jax.tree_util.tree_reduce(jnp.add, parts)
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_cast(tree, dtype):
+    return tree_map(lambda x: x.astype(dtype), tree)

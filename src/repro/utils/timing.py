@@ -1,0 +1,40 @@
+"""Wall-clock timing helpers (block_until_ready-aware)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def now() -> float:
+    return time.perf_counter()
+
+
+class Timer:
+    """Context manager measuring wall time, sync'ing JAX async dispatch."""
+
+    def __init__(self, sync_tree=None):
+        self._sync_tree = sync_tree
+        self.elapsed = 0.0
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        if self._sync_tree is not None:
+            jax.block_until_ready(self._sync_tree)
+        self.elapsed = time.perf_counter() - self._t0
+        return False
+
+
+def time_fn(fn, *args, iters: int = 3, warmup: int = 1):
+    """Time a jitted fn: returns best-of-iters seconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best

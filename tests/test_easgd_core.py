@@ -1,0 +1,188 @@
+"""EASGD update-rule invariants + packed/unpacked equivalence + compression.
+
+Property tests (hypothesis) cover the algebraic identities the paper's
+method relies on; exact-match tests pin the packed shard_map implementation
+to the per-tensor reference.
+"""
+import warnings
+
+warnings.filterwarnings("ignore")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    EASGDConfig, ElasticConfig, Packer,
+    elastic_apply_gradients, elastic_init,
+)
+from repro.core import compression, easgd
+from repro.core.elastic import n_pods_of
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-6):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=rtol, atol=atol)
+
+
+@st.composite
+def small_tree(draw):
+    n = draw(st.integers(1, 4))
+    tree = {}
+    for i in range(n):
+        shape = tuple(draw(st.lists(st.integers(1, 5), min_size=0,
+                                    max_size=3)))
+        tree[f"p{i}"] = np.asarray(
+            draw(st.lists(st.floats(-2, 2, width=32),
+                          min_size=int(np.prod(shape) or 1),
+                          max_size=int(np.prod(shape) or 1))),
+            np.float32).reshape(shape)
+    return tree
+
+
+@settings(max_examples=25, deadline=None)
+@given(small_tree())
+def test_packer_roundtrip(tree):
+    tree = {k: jnp.asarray(v) for k, v in tree.items()}
+    pk = Packer(tree, align=8)
+    back = pk.unpack(pk.pack(tree))
+    tree_allclose(tree, back)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.001, 0.5), st.floats(0.0, 0.99))
+def test_rho_zero_is_momentum_sgd(eta, mu):
+    """ρ=0 degenerates eqs 5-6 to plain momentum SGD (eqs 3-4)."""
+    cfg = EASGDConfig(eta=eta, rho=0.0, mu=mu)
+    w = {"a": jnp.ones((3, 2))}
+    v = {"a": jnp.zeros((3, 2))}
+    g = {"a": jnp.full((3, 2), 0.3)}
+    c = {"a": jnp.full((3, 2), 7.0)}   # center shouldn't matter at ρ=0
+    w1, v1 = easgd.measgd_worker_update(w, v, g, c, cfg)
+    w2, v2 = easgd.msgd_update(w, v, g, cfg)
+    tree_allclose(w1, w2)
+    tree_allclose(v1, v2)
+
+
+def test_center_update_forms_agree():
+    """Eq 2 via sum, via mean, and via P sequential single-worker updates
+    agree (single-worker form composes only to first order — use the exact
+    sum/mean pair)."""
+    cfg = EASGDConfig(eta=0.1, rho=0.2)
+    P_ = 4
+    rng = np.random.RandomState(0)
+    ws = [jnp.asarray(rng.randn(5), jnp.float32) for _ in range(P_)]
+    center = jnp.asarray(rng.randn(5), jnp.float32)
+    s = easgd.center_update_from_sum(center, sum(ws), P_, cfg)
+    m = easgd.center_update_from_mean(center, sum(ws) / P_, P_, cfg)
+    tree_allclose(s, m)
+
+
+def test_fused_flat_matches_tensor_rules():
+    cfg = EASGDConfig(eta=0.05, rho=0.1, mu=0.9)
+    rng = np.random.RandomState(1)
+    n, P_ = 64, 3
+    w, v, g, c = (jnp.asarray(rng.randn(n), jnp.float32) for _ in range(4))
+    mean_w = jnp.asarray(rng.randn(n), jnp.float32)
+    w2, v2, c2 = easgd.fused_elastic_step_flat(w, v, g, c, mean_w, P_, cfg)
+    v_ref = cfg.mu * v - cfg.eta * g
+    w_ref = w + v_ref - cfg.eta * cfg.rho * (w - c)
+    c_ref = c + cfg.alpha * P_ * (mean_w - c)
+    tree_allclose((w2, v2, c2), (w_ref, v_ref, c_ref))
+
+
+@pytest.mark.parametrize("compression_name", ["none", "bf16", "sign_ef"])
+def test_packed_unpacked_equivalence(compression_name):
+    """The packed shard_map exchange == per-tensor reference (exact for
+    'none'; compression changes numerics by design, so only 'none' is
+    exact)."""
+    cfg_kw = dict(easgd=EASGDConfig(eta=0.05, rho=0.1, mu=0.9))
+    params = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4) / 10,
+              "b": jnp.ones((4,))}
+    st_ = elastic_init(ElasticConfig(**cfg_kw), 0) if False else None
+    cfg_u = ElasticConfig(packed=False, **cfg_kw)
+    cfg_p = ElasticConfig(packed=True, compression=compression_name,
+                          **cfg_kw)
+    state = elastic_init(params, cfg_u, n_pods=2)
+    grads = jax.tree_util.tree_map(
+        lambda x: jnp.full_like(x, 0.2).at[0].set(-0.1), state.params)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from jax.sharding import PartitionSpec as P
+    pspecs = {"w": P(), "b": P()}
+    out_u = elastic_apply_gradients(state, grads, cfg_u)
+    state_p = elastic_init(params, cfg_p, n_pods=2)
+    out_p = elastic_apply_gradients(state_p, grads, cfg_p, mesh=mesh,
+                                    param_specs=pspecs, pod_axis=None)
+    if compression_name == "none":
+        tree_allclose(out_u.params, out_p.params)
+        tree_allclose(out_u.center, out_p.center)
+    else:
+        # compressed exchange must still move the center toward the mean
+        for k in params:
+            assert np.all(np.isfinite(np.asarray(out_p.params[k])))
+
+
+def test_tau_period():
+    """τ=3: center only updates on steps 0, 3, 6, ..."""
+    cfg = ElasticConfig(easgd=EASGDConfig(eta=0.1, rho=0.1, mu=0.0, tau=3),
+                        packed=False)
+    params = {"w": jnp.ones((2, 2))}
+    state = elastic_init(params, cfg, n_pods=2)
+    grads = {"w": jnp.stack([jnp.full((2, 2), 1.0),
+                             jnp.full((2, 2), -0.4)])}
+    centers = []
+    for _ in range(6):
+        state = elastic_apply_gradients(state, grads, cfg)
+        centers.append(np.asarray(state.center["w"]).copy())
+    # steps 1,2 (no exchange): center frozen; step 3 (step%3==0): moves
+    assert np.allclose(centers[1], centers[0])
+    assert np.allclose(centers[2], centers[1])
+    assert not np.allclose(centers[3], centers[2])
+
+
+def test_sign_ef_error_feedback_converges():
+    """With error feedback, the compressed mean tracks the true mean: the
+    accumulated EF error stays bounded while the center approaches the
+    workers' mean."""
+    cfg = ElasticConfig(easgd=EASGDConfig(eta=0.2, rho=0.5, mu=0.0),
+                        packed=True, compression="sign_ef")
+    params = {"w": jnp.zeros((16,))}
+    state = elastic_init(params, cfg, n_pods=2)
+    # workers pinned apart by antisymmetric gradients; center should stay ~0
+    grads = {"w": jnp.stack([jnp.ones(16), -jnp.ones(16)])}
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from jax.sharding import PartitionSpec as P
+    for _ in range(10):
+        state = elastic_apply_gradients(state, grads, cfg, mesh=mesh,
+                                        param_specs={"w": P()},
+                                        pod_axis=None)
+    assert np.all(np.abs(np.asarray(state.center["w"])) < 1.0)
+    assert np.all(np.isfinite(np.asarray(state.ef_error["w"])))
+
+
+def test_consensus_contraction():
+    """Pure elastic dynamics (zero grads): workers and center contract
+    toward each other (the EASGD stability condition)."""
+    cfg = ElasticConfig(easgd=EASGDConfig(eta=0.5, rho=0.5, mu=0.0),
+                        packed=False)
+    params = {"w": jnp.zeros((8,))}
+    state = elastic_init(params, cfg, n_pods=3)
+    # spread the workers out
+    spread = jnp.stack([jnp.full((8,), -1.0), jnp.zeros((8,)),
+                        jnp.full((8,), 1.0)])
+    state = state._replace(params={"w": spread})
+    zeros = {"w": jnp.zeros_like(spread)}
+    def spread_of(s):
+        return float(jnp.max(jnp.abs(
+            s.params["w"] - s.center["w"][None])))
+    s0 = spread_of(state)
+    for _ in range(5):
+        state = elastic_apply_gradients(state, zeros, cfg)
+    assert spread_of(state) < s0
