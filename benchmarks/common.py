@@ -57,5 +57,26 @@ def default_engine(seed=0, n_workers=4, t_compute=2e-3, **problem_kw):
     return PSEngine(grad_fn, err_fn, w0, easgd, sim)
 
 
+_JSON_ROWS = None  # when a list, csv_row also records rows for --json output
+
+
+def begin_json_capture():
+    global _JSON_ROWS
+    _JSON_ROWS = []
+
+
+def end_json_capture() -> list:
+    global _JSON_ROWS
+    rows, _JSON_ROWS = _JSON_ROWS, None
+    return rows or []
+
+
+def json_capture_active() -> bool:
+    return _JSON_ROWS is not None
+
+
 def csv_row(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.3f},{derived}")
+    if _JSON_ROWS is not None:
+        _JSON_ROWS.append(
+            {"name": name, "us_per_call": us_per_call, "derived": derived})

@@ -44,6 +44,7 @@ def run_model(quick: bool = False):
 def run_measured(quick: bool = False):
     import jax
     import jax.numpy as jnp
+    from repro.utils.jaxcompat import shard_map
     from repro.utils.timing import time_fn
 
     n_dev = jax.device_count()
@@ -57,12 +58,12 @@ def run_measured(quick: bool = False):
     from jax.sharding import PartitionSpec as P
     from functools import partial
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=(P("x"),) * len(arrs),
+    @partial(shard_map, mesh=mesh, in_specs=(P("x"),) * len(arrs),
              out_specs=(P("x"),) * len(arrs), check_vma=False)
     def per_layer(*xs):
         return tuple(jax.lax.psum(x, "x") for x in xs)
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=P("x"), out_specs=P("x"),
+    @partial(shard_map, mesh=mesh, in_specs=P("x"), out_specs=P("x"),
              check_vma=False)
     def one_packed(x):
         return jax.lax.psum(x, "x")

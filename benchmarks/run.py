@@ -2,13 +2,22 @@
 roofline). Prints ``name,us_per_call,derived`` CSV rows.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig6_8,...]
+                                            [--json]
+
+``--json`` additionally writes one ``BENCH_<name>.json`` per module at the
+repo root (rows + status + wall time) so the perf trajectory across PRs is
+machine-readable.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
+
+from benchmarks import common
 
 MODULES = (
     "fig6_8_convergence",   # Figs 6 & 8: the nine algorithms, error vs time
@@ -20,11 +29,15 @@ MODULES = (
     "roofline",             # §Roofline table from the dry-run JSONL
 )
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<name>.json per module at repo root")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -34,13 +47,25 @@ def main() -> None:
             continue
         t0 = time.time()
         print(f"# === benchmarks.{name} ===", flush=True)
+        if args.json:
+            common.begin_json_capture()
+        ok = True
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
             mod.main(quick=args.quick)
             print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
         except Exception:
+            ok = False
             failures.append(name)
             print(f"# {name} FAILED:\n{traceback.format_exc()}", flush=True)
+        if args.json:
+            rec = {"module": name, "ok": ok, "quick": args.quick,
+                   "elapsed_s": round(time.time() - t0, 3),
+                   "rows": common.end_json_capture()}
+            path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(f"# wrote {path}", flush=True)
     if failures:
         print(f"# FAILURES: {failures}", flush=True)
         sys.exit(1)

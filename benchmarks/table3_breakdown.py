@@ -8,16 +8,26 @@ variants at equal accuracy because only one worker trains per iteration —
 its Table 3: 5000 vs 1000). Claims checked:
   * communication share: Original ≈ 87%, Sync EASGD3 ≈ 14%
   * end-to-end speedup Sync EASGD3 vs Original ≈ 5.3×
+
+Plus a SCHEDULE SWEEP over the shared ``repro.comm`` registry: the same
+Sync-EASGD3 configuration priced under every registered exchange schedule,
+reproducing the round-robin-vs-tree gap (§5.1) under otherwise identical
+conditions. The comm-fraction breakdown is written as JSON
+(``BENCH_table3_schedule_sweep.json`` at the repo root) so the trajectory
+is machine-readable across PRs.
 """
 from __future__ import annotations
 
-import dataclasses
+import json
+import os
 
-from benchmarks.common import csv_row
-from repro.core import costmodel
+from benchmarks.common import csv_row, json_capture_active
+from repro.comm import schedules as comm_schedules
 from repro.core.des import (
     GPU_BOX, breakdown_original_easgd, breakdown_sync_easgd,
 )
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def run(quick: bool = False):
@@ -50,8 +60,41 @@ def run(quick: bool = False):
     return rows, speedup
 
 
+def schedule_sweep(iters: int = 1000, json_path: str | None = None) -> dict:
+    """Sync EASGD3 (weights on GPU, overlap) under EVERY registered exchange
+    schedule — same box, same iteration count, only the wire schedule moves.
+    Writes the per-part/comm-fraction breakdown as JSON."""
+    box = GPU_BOX
+    sweep = {}
+    for name in comm_schedules.names():
+        r = breakdown_sync_easgd(box, iters=iters, weights_on="gpu",
+                                 overlap=True, schedule=name)
+        sweep[name] = {
+            "total_s": r.total_s,
+            "us_per_iter": 1e6 * r.total_s / r.iters,
+            "comm_ratio": r.comm_ratio,
+            "parts_s": dict(r.parts),
+        }
+        csv_row(f"table3/sweep/{name}", sweep[name]["us_per_iter"],
+                f"comm_ratio={r.comm_ratio:.3f}")
+    gap = sweep["round_robin"]["total_s"] / sweep["tree"]["total_s"]
+    csv_row("table3/sweep/round_robin_vs_tree", 0.0,
+            f"{gap:.2f}x slower (the paper's §5.1 schedule gap)")
+    out = {"box": "GPU_BOX", "iters": iters, "schedules": sweep,
+           "round_robin_vs_tree": gap}
+    # written only on explicit request or under run.py --json, so a plain
+    # CSV benchmark run never clobbers the committed trajectory record
+    if json_path or json_capture_active():
+        path = json_path or os.path.join(REPO_ROOT,
+                                         "BENCH_table3_schedule_sweep.json")
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+    return out
+
+
 def main(quick: bool = False):
     run(quick=quick)
+    schedule_sweep(iters=100 if quick else 1000)
 
 
 if __name__ == "__main__":

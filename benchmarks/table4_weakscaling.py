@@ -9,6 +9,7 @@ cross-pod elastic exchange over DCI every τ steps.
 from __future__ import annotations
 
 from benchmarks.common import csv_row
+from repro.comm import schedules as comm_schedules
 from repro.core import costmodel
 from repro.core.des import weak_scaling_efficiency
 
@@ -43,16 +44,29 @@ def run(quick: bool = False):
                     f"eff={eff:.3f}" + (f";paper={ref:.3f}" if ref else ""))
 
     # TPU fleet projection: Sync EASGD cross-pod exchange, gemma3-27b,
-    # weights 27e9*4B packed, τ ∈ {1, 4}; 2..64 pods over DCI.
+    # weights 27e9*4B packed, τ ∈ {1, 4}; 2..64 pods over DCI. Priced
+    # through the shared repro.comm registry (psum = tuned-library best).
     w = 27e9 * 4.0
     t_step = 3.0
     for tau in (1, 4):
         for pods in (2, 4, 8, 16, 64):
-            t_comm = costmodel.t_allreduce_best(w, pods, costmodel.TPU_DCI) \
-                / tau
+            t_comm = comm_schedules.get("psum").cost(
+                w, pods, costmodel.TPU_DCI) / tau
             eff = t_step / max(t_step, t_comm)
             csv_row(f"table4/tpu_gemma27b/tau{tau}/{pods}_pods", 0.0,
                     f"eff={eff:.3f}")
+
+    # SCHEDULE SWEEP: the same τ=1 projection under every registered
+    # schedule — at DCI bandwidth the round-robin baseline collapses while
+    # ring stays bandwidth-bound (the paper's §5.1 argument at fleet scale).
+    for name in comm_schedules.names():
+        for pods in (2, 8, 64):
+            t_comm = comm_schedules.get(name).cost(w, pods,
+                                                   costmodel.TPU_DCI)
+            eff = t_step / max(t_step, t_comm)
+            frac = t_comm / (t_comm + t_step)
+            csv_row(f"table4/tpu_gemma27b/sweep/{name}/{pods}_pods", 0.0,
+                    f"eff={eff:.3f};comm_frac_noverlap={frac:.3f}")
 
 
 def main(quick: bool = False):

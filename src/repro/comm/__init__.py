@@ -1,0 +1,21 @@
+"""repro.comm — the unified cross-pod exchange stack.
+
+Single import point for communication schedules: each registered
+``Schedule`` carries BOTH the runnable shard_map implementation and the α–β
+cost function, so one definition is simultaneously runnable (runtime),
+simulatable (DES engines) and benchmarkable (table3/table4 sweeps).
+``ExchangePlan`` composes schedule × packing × compression × overlap into
+the single ``exchange(weights) -> mean_weights`` callable the Sync-EASGD
+runtime consumes. See DESIGN.md §comm for the paper mapping.
+"""
+from repro.comm.schedules import (
+    SCHEDULES,
+    Schedule,
+    choose,
+    get,
+    hierarchical_allreduce,
+    names,
+    register,
+    shard_map_allreduce,
+)
+from repro.comm.plan import ExchangePlan, make_plan

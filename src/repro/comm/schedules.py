@@ -1,0 +1,281 @@
+"""The exchange-schedule registry: ONE definition per schedule, carrying BOTH
+the runnable ``shard_map`` implementation AND the α–β cost function.
+
+This is the single source of truth for how cross-pod exchanges move bytes.
+A schedule registered here is simultaneously
+
+ * **runnable**  — ``Schedule.allreduce(x, axis_name)`` inside ``shard_map``
+   on a real mesh (``core.elastic`` / ``runtime.train`` consume it through an
+   ``ExchangePlan``, see ``repro.comm.plan``),
+ * **simulatable** — ``Schedule.cost(n_bytes, p, net)`` prices the same
+   exchange under the paper's α–β model (``core.async_engine`` and
+   ``core.des`` charge their discrete-event clocks through it), and
+ * **benchmarkable** — the table3/table4 sweeps iterate ``names()``.
+
+Paper mapping (§5.1/§6.1): Original EASGD's round-robin master↔worker
+exchange is Θ(P) serialized messages; the paper's fix is a tree reduction
+Θ(log P). ``ring`` is the bandwidth-optimal schedule a tuned library picks
+for large buffers; ``psum`` is XLA's native all-reduce (priced as the best
+of butterfly/ring — what a tuned library achieves).
+
+All implementations compute the global **sum** over the bound mesh axis,
+exactly like ``lax.psum`` — equivalence is pinned by tests on host meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import costmodel
+from repro.utils.jaxcompat import axis_size, shard_map
+
+
+# ---------------------------------------------------------------------------
+# shard_map implementations (call INSIDE shard_map with the axis name bound)
+# ---------------------------------------------------------------------------
+
+def psum_allreduce(x, axis_name):
+    """Baseline: XLA-native all-reduce."""
+    return lax.psum(x, axis_name)
+
+
+def tree_allreduce(x, axis_name):
+    """Binomial-tree reduce-to-root + broadcast: 2·⌈log2 P⌉ rounds.
+
+    The paper's §5.1 'tree reduction' in its literal two-phase form (the
+    BCube/master-rooted variant). Requires a power-of-two axis size.
+    """
+    p = axis_size(axis_name)
+    assert p & (p - 1) == 0, f"tree needs power-of-two axis, got {p}"
+    if p == 1:
+        return x
+    r = lax.axis_index(axis_name)
+    # reduce phase: rank i+d sends its partial sum to rank i
+    d = 1
+    while d < p:
+        perm = [(i + d, i) for i in range(0, p, 2 * d)]
+        recv = lax.ppermute(x, axis_name, perm)  # non-receivers get zeros
+        x = x + recv
+        d *= 2
+    # broadcast phase: mirror the tree back down from rank 0
+    d = p // 2
+    while d >= 1:
+        perm = [(i, i + d) for i in range(0, p, 2 * d)]
+        recv = lax.ppermute(x, axis_name, perm)
+        x = jnp.where(r % (2 * d) == d, recv, x)
+        d //= 2
+    return x
+
+
+def butterfly_allreduce(x, axis_name):
+    """Recursive-doubling all-reduce: ⌈log2 P⌉ rounds, XOR partners.
+
+    The Θ(log P) schedule of Sync EASGD without the separate broadcast
+    phase. Requires a power-of-two axis size.
+    """
+    p = axis_size(axis_name)
+    assert p & (p - 1) == 0, f"butterfly needs power-of-two axis, got {p}"
+    d = 1
+    while d < p:
+        perm = [(i, i ^ d) for i in range(p)]
+        x = x + lax.ppermute(x, axis_name, perm)
+        d *= 2
+    return x
+
+
+def ring_allreduce(x, axis_name):
+    """Bandwidth-optimal ring all-reduce: reduce-scatter + all-gather.
+
+    2(P−1) steps of (n/P)-byte messages. ``x`` must be 1-D (the registry's
+    ``allreduce`` wrapper flattens automatically).
+    """
+    p = axis_size(axis_name)
+    if p == 1:
+        return x
+    r = lax.axis_index(axis_name)
+    n = x.shape[0]
+    pad = (-n) % p
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    chunks = x.reshape(p, -1)
+    perm = [(i, (i + 1) % p) for i in range(p)]
+
+    def rs_step(s, ch):
+        send = jax.lax.dynamic_index_in_dim(ch, (r - s) % p, 0, keepdims=False)
+        recv = lax.ppermute(send, axis_name, perm)
+        return ch.at[(r - s - 1) % p].add(recv)
+
+    chunks = lax.fori_loop(0, p - 1, rs_step, chunks)
+    # rank r now holds the fully-reduced chunk (r+1) mod p
+
+    def ag_step(s, ch):
+        send = jax.lax.dynamic_index_in_dim(ch, (r + 1 - s) % p, 0,
+                                            keepdims=False)
+        recv = lax.ppermute(send, axis_name, perm)
+        return ch.at[(r - s) % p].set(recv)
+
+    chunks = lax.fori_loop(0, p - 1, ag_step, chunks)
+    out = chunks.reshape(-1)
+    return out[:n] if pad else out
+
+
+def round_robin_allreduce(x, axis_name):
+    """The Original-EASGD wire schedule: the master (rank 0) exchanges with
+    workers ONE AT A TIME, in rank order — Θ(P) serialized messages.
+
+    Kept as the paper-faithful *baseline* schedule (this is intentionally
+    the slow one). Semantics here: global sum, like the others, so
+    correctness tests can compare directly.
+    """
+    p = axis_size(axis_name)
+    if p == 1:
+        return x
+    r = lax.axis_index(axis_name)
+    acc = x
+    # gather phase: worker i -> master, sequentially (i = 1..P-1)
+    for i in range(1, p):
+        recv = lax.ppermute(x, axis_name, [(i, 0)])
+        acc = jnp.where(r == 0, acc + recv, acc)
+    # broadcast phase: master -> worker i, sequentially
+    out = acc
+    for i in range(1, p):
+        recv = lax.ppermute(acc, axis_name, [(0, i)])
+        out = jnp.where(r == i, recv, out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """One exchange schedule = runnable implementation + α–β cost model.
+
+    ``impl(x, axis_name)`` — global sum over the bound mesh axis, called
+    inside ``shard_map`` (use ``allreduce`` which handles flattening).
+    ``cost_fn(n_bytes, p, net)`` — seconds for one full group exchange of
+    an n-byte buffer among p participants over ``net`` (α–β model).
+    """
+
+    name: str
+    impl: Callable
+    cost_fn: Callable
+    flat_only: bool = False     # impl requires a 1-D buffer
+    pow2_only: bool = False     # impl requires a power-of-two axis size
+    doc: str = ""
+
+    def allreduce(self, x, axis_name: str):
+        """Sum ``x`` over the mesh axis; flattens/reshapes for flat-only
+        schedules so callers can pass any shape (scalars included)."""
+        if self.flat_only and x.ndim != 1:
+            return self.impl(x.reshape(-1), axis_name).reshape(x.shape)
+        return self.impl(x, axis_name)
+
+    def cost(self, n_bytes: float, p: int,
+             net: costmodel.Network = costmodel.TPU_ICI) -> float:
+        """α–β time of one full group exchange (0 for a single participant)."""
+        if p <= 1:
+            return 0.0
+        return self.cost_fn(n_bytes, p, net)
+
+
+SCHEDULES: dict[str, Schedule] = {}
+
+
+def register(schedule: Schedule) -> Schedule:
+    SCHEDULES[schedule.name] = schedule
+    return schedule
+
+
+def get(name: str) -> Schedule:
+    try:
+        return SCHEDULES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown schedule '{name}', have {sorted(SCHEDULES)}"
+        ) from None
+
+
+def names() -> tuple:
+    """Registered schedule names, in registration order."""
+    return tuple(SCHEDULES)
+
+
+register(Schedule(
+    "psum", psum_allreduce, costmodel.t_allreduce_best,
+    doc="XLA-native all-reduce; priced as min(butterfly, ring) — what a "
+        "tuned library achieves."))
+register(Schedule(
+    "tree", tree_allreduce, costmodel.t_tree_allreduce, pow2_only=True,
+    doc="reduce-to-root + broadcast, 2·⌈log2 P⌉ rounds (paper §5.1)."))
+register(Schedule(
+    "butterfly", butterfly_allreduce, costmodel.t_butterfly_allreduce,
+    pow2_only=True,
+    doc="recursive doubling, ⌈log2 P⌉ rounds — latency-optimal."))
+register(Schedule(
+    "ring", ring_allreduce, costmodel.t_ring_allreduce, flat_only=True,
+    doc="reduce-scatter + all-gather, 2(P−1) steps of n/P bytes — "
+        "bandwidth-optimal."))
+register(Schedule(
+    "round_robin", round_robin_allreduce, costmodel.t_round_robin_allreduce,
+    doc="Original EASGD's serialized master↔worker exchange, Θ(P) — the "
+        "paper's baseline."))
+
+
+# ---------------------------------------------------------------------------
+# derived helpers
+# ---------------------------------------------------------------------------
+
+def choose(n_bytes: float, p: int,
+           net: costmodel.Network = costmodel.TPU_ICI) -> str:
+    """α–β-model-driven schedule choice (paper Table 2 reasoning):
+    latency-bound small buffers → butterfly; bandwidth-bound → ring."""
+    if p <= 1:
+        return "psum"
+    if get("butterfly").cost(n_bytes, p, net) <= \
+            get("ring").cost(n_bytes, p, net):
+        return "butterfly"
+    return "ring"
+
+
+def hierarchical_allreduce(x, inner_axis, outer_axis, inner="psum",
+                           outer="psum"):
+    """Two-level reduction: fast domain first, slow domain second.
+
+    This is the paper's §6.2 divide-and-conquer generalized: reduce within
+    the pod over ICI (cheap), then across pods over DCI (expensive) — the
+    cross-pod message count is 1/pod_size of a flat all-reduce.
+    """
+    x = get(inner).allreduce(x, inner_axis)
+    x = get(outer).allreduce(x, outer_axis)
+    return x
+
+
+def shard_map_allreduce(mesh, x, axis_name: str, algorithm: str = "auto"):
+    """Run a registered schedule over a 1-D buffer replicated on
+    ``axis_name`` and sharded on no other axis. Test/benchmark entry point."""
+    if algorithm == "auto":
+        algorithm = choose(x.size * x.dtype.itemsize, mesh.shape[axis_name])
+    sched = get(algorithm)
+    spec = P(axis_name)
+
+    @partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(spec,),
+        out_specs=spec,
+        check_vma=False,
+    )
+    def run(xs):
+        # xs: (1, n) slice per device along axis_name
+        return sched.allreduce(xs[0], axis_name)[None]
+
+    stacked = jnp.broadcast_to(x, (mesh.shape[axis_name],) + x.shape)
+    return run(stacked)

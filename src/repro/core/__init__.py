@@ -17,5 +17,5 @@ from repro.core.elastic import (
     apply_gradients as elastic_apply_gradients,
     state_specs as elastic_state_specs,
 )
-from repro.core.packing import Packer, packed_apply
+from repro.core.packing import ELASTIC_UPDATE_BLOCK, Packer, packed_apply
 from repro.core import collectives, compression, costmodel

@@ -23,6 +23,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.comm import schedules as comm_schedules
 from repro.core import costmodel
 from repro.core.easgd import EASGDConfig
 
@@ -40,6 +41,9 @@ class SimConfig:
     n_workers: int = 4
     # communication (defaults: PCIe-switch multi-GPU box, paper §10.4)
     net: costmodel.Network = costmodel.Network("PCIe3x16", 5e-6, 1 / 12e9)
+    schedule: str = "tree"           # repro.comm schedule for the sync
+    #                                  exchange (same registry the real
+    #                                  runtime executes)
     t_compute: float = 1e-3          # fwd/bwd per minibatch, seconds
     compute_jitter: float = 0.10     # lognormal sigma (stragglers)
     t_update_per_byte: float = 1 / 100e9   # elementwise update bandwidth
@@ -82,6 +86,15 @@ class PSEngine:
 
     def _t_update(self) -> float:
         return self.nbytes * self.sim.t_update_per_byte
+
+    def t_exchange(self, schedule: str | None = None,
+                   p: int | None = None) -> float:
+        """α–β price of ONE full group exchange of the flat weights — taken
+        from the SHARED ``repro.comm`` registry, so the simulator charges
+        exactly what the registered schedule's real implementation moves."""
+        sched = comm_schedules.get(schedule or self.sim.schedule)
+        return sched.cost(self.nbytes, p if p is not None
+                          else self.sim.n_workers, self.sim.net)
 
     # -- algorithms -----------------------------------------------------------
     def run(self, algorithm: str, total_iters: int,
@@ -134,11 +147,16 @@ class PSEngine:
                 j = iters % P
                 tc = self._t_compute(rng)
                 grad = self.grad_fn(workers[j], iters, j)
-                # serialized: send W̄ to j, compute, get W_j, update both
-                t += self._t_msg()          # master -> worker (W̄)
+                # serialized: this iteration is 1/P of a full round-robin
+                # cycle (registry-priced: 2·P messages per cycle → 2 here).
+                # P=1 still pays its 2 master↔worker messages — the master
+                # is a separate host even with one worker.
+                t_rr = (self.t_exchange("round_robin") / P if P > 1
+                        else 2 * self._t_msg())
+                t += t_rr / 2               # master -> worker (W̄)
                 t += tc
-                t += self._t_msg()          # worker -> master (W_j)
-                breakdown["param_comm"] += 2 * self._t_msg()
+                t += t_rr / 2               # worker -> master (W_j)
+                breakdown["param_comm"] += t_rr
                 breakdown["fwd_bwd"] += tc
                 worker_grad_step(j, grad)
                 center += a * (workers[j] - center)
@@ -159,7 +177,7 @@ class PSEngine:
                 tcs = [self._t_compute(rng) for _ in range(P)]
                 grads = [self.grad_fn(workers[i], steps, i) for i in range(P)]
                 t_compute = max(tcs)
-                t_comm = costmodel.t_tree_allreduce(self.nbytes, P, sim.net)
+                t_comm = self.t_exchange()
                 if algorithm == "sync_easgd":
                     # paper §6.1.3: exchange uses start-of-step weights —
                     # overlaps with compute

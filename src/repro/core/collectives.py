@@ -1,169 +1,41 @@
-"""Explicit collective schedules — round-robin vs tree vs ring (paper §5.1/§6.1).
+"""Compatibility shim — the explicit collective schedules moved to
+``repro.comm.schedules``, the single registry shared by the real Sync-EASGD
+runtime, the DES simulators, and the benchmarks.
 
-The paper's core scaling fix is replacing Original EASGD's round-robin
-master↔worker exchange (Θ(P)) with a tree reduction (Θ(log P)). In XLA the
-production path is GSPMD's native all-reduce (already tree/ring), but to
-*demonstrate and benchmark* the schedules — and to control the hierarchy
-(intra-pod ICI vs cross-pod DCI) — we implement them explicitly with
-``lax.ppermute`` inside ``shard_map``.
-
-All functions here are written to be called INSIDE ``shard_map`` with the
-axis name(s) bound. Equivalence vs ``lax.psum`` is covered by tests on host
-device meshes.
+Import from ``repro.comm`` in new code; this module keeps the seed-era
+names working. Resolution is lazy (PEP 562) so that
+``repro.core`` ↔ ``repro.comm`` can import each other's submodules without
+ordering constraints.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-from jax import lax
-from jax.sharding import PartitionSpec as P
-
-from repro.core import costmodel
-
-
-def psum_allreduce(x, axis_name):
-    """Baseline: XLA-native all-reduce."""
-    return lax.psum(x, axis_name)
+_FORWARDED = (
+    "SCHEDULES",
+    "Schedule",
+    "butterfly_allreduce",
+    "hierarchical_allreduce",
+    "psum_allreduce",
+    "ring_allreduce",
+    "round_robin_allreduce",
+    "shard_map_allreduce",
+    "tree_allreduce",
+)
 
 
-def butterfly_allreduce(x, axis_name):
-    """Recursive-doubling all-reduce: ⌈log2 P⌉ rounds, XOR partners.
+def __getattr__(name: str):
+    from repro.comm import schedules
 
-    This is the Θ(log P) 'tree' schedule of Sync EASGD. Requires a
-    power-of-two axis size.
-    """
-    p = lax.axis_size(axis_name)
-    assert p & (p - 1) == 0, f"butterfly needs power-of-two axis, got {p}"
-    d = 1
-    while d < p:
-        perm = [(i, i ^ d) for i in range(p)]
-        x = x + lax.ppermute(x, axis_name, perm)
-        d *= 2
-    return x
-
-
-def ring_allreduce(x, axis_name):
-    """Bandwidth-optimal ring all-reduce: reduce-scatter + all-gather.
-
-    2(P−1) steps of (n/P)-byte messages. ``x`` must be 1-D (use the packer).
-    """
-    p = lax.axis_size(axis_name)
-    if p == 1:
-        return x
-    r = lax.axis_index(axis_name)
-    n = x.shape[0]
-    pad = (-n) % p
-    if pad:
-        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
-    chunks = x.reshape(p, -1)
-    perm = [(i, (i + 1) % p) for i in range(p)]
-
-    def rs_step(s, ch):
-        send = jax.lax.dynamic_index_in_dim(ch, (r - s) % p, 0, keepdims=False)
-        recv = lax.ppermute(send, axis_name, perm)
-        return ch.at[(r - s - 1) % p].add(recv)
-
-    chunks = lax.fori_loop(0, p - 1, rs_step, chunks)
-    # rank r now holds the fully-reduced chunk (r+1) mod p
-
-    def ag_step(s, ch):
-        send = jax.lax.dynamic_index_in_dim(ch, (r + 1 - s) % p, 0, keepdims=False)
-        recv = lax.ppermute(send, axis_name, perm)
-        return ch.at[(r - s) % p].set(recv)
-
-    chunks = lax.fori_loop(0, p - 1, ag_step, chunks)
-    out = chunks.reshape(-1)
-    return out[:n] if pad else out
+    if name in _FORWARDED:
+        return getattr(schedules, name)
+    if name == "choose_algorithm":
+        return schedules.choose
+    if name == "ALGORITHMS":
+        # legacy name -> bare impl mapping (prefer Schedule.allreduce, which
+        # handles flattening for flat-only schedules)
+        return {n: s.impl for n, s in schedules.SCHEDULES.items()}
+    raise AttributeError(f"module 'repro.core.collectives' has no "
+                         f"attribute '{name}'")
 
 
-def round_robin_allreduce(x, axis_name):
-    """The Original-EASGD wire schedule: the master (rank 0) exchanges with
-    workers ONE AT A TIME, in rank order — Θ(P) serialized messages.
-
-    Kept as the paper-faithful *baseline* schedule (benchmarks only; this is
-    intentionally the slow one). Semantics here: global sum, like the others,
-    so correctness tests can compare directly.
-    """
-    p = lax.axis_size(axis_name)
-    if p == 1:
-        return x
-    r = lax.axis_index(axis_name)
-    acc = x
-    # gather phase: worker i -> master, sequentially (i = 1..P-1)
-    for i in range(1, p):
-        recv = lax.ppermute(x, axis_name, [(i, 0)])
-        acc = jnp.where(r == 0, acc + recv, acc)
-    # broadcast phase: master -> worker i, sequentially
-    out = acc
-    for i in range(1, p):
-        recv = lax.ppermute(acc, axis_name, [(0, i)])
-        out = jnp.where(r == i, recv, out)
-    return out
-
-
-def hierarchical_allreduce(x, inner_axis, outer_axis, inner="psum",
-                           outer="psum"):
-    """Two-level reduction: fast domain first, slow domain second.
-
-    This is the paper's §6.2 divide-and-conquer generalized: reduce within
-    the pod over ICI (cheap), then across pods over DCI (expensive) — the
-    cross-pod message count is 1/pod_size of a flat all-reduce.
-    """
-    algos = {
-        "psum": psum_allreduce,
-        "butterfly": butterfly_allreduce,
-        "ring": ring_allreduce,
-        "round_robin": round_robin_allreduce,
-    }
-    x = algos[inner](x, inner_axis)
-    x = algos[outer](x, outer_axis)
-    return x
-
-
-ALGORITHMS = {
-    "psum": psum_allreduce,
-    "butterfly": butterfly_allreduce,
-    "ring": ring_allreduce,
-    "round_robin": round_robin_allreduce,
-}
-
-
-def choose_algorithm(n_bytes: float, p: int,
-                     net: costmodel.Network = costmodel.TPU_ICI) -> str:
-    """α–β-model-driven schedule choice (paper Table 2 reasoning):
-    latency-bound small buffers → butterfly; bandwidth-bound → ring."""
-    if p <= 1:
-        return "psum"
-    if costmodel.t_butterfly_allreduce(n_bytes, p, net) <= \
-            costmodel.t_ring_allreduce(n_bytes, p, net):
-        return "butterfly"
-    return "ring"
-
-
-def shard_map_allreduce(mesh, x, axis_name: str, algorithm: str = "auto"):
-    """Run an explicit schedule over a 1-D buffer replicated on ``axis_name``
-    and sharded on no other axis. Test/benchmark entry point."""
-    if algorithm == "auto":
-        algorithm = choose_algorithm(
-            x.size * x.dtype.itemsize, mesh.shape[axis_name]
-        )
-    fn = ALGORITHMS[algorithm]
-    other_axes = tuple(a for a in mesh.axis_names if a != axis_name)
-    spec = P(axis_name)
-
-    @partial(
-        jax.shard_map,
-        mesh=mesh,
-        in_specs=(spec,),
-        out_specs=spec,
-        check_vma=False,
-    )
-    def run(xs):
-        # xs: (1, n) slice per device along axis_name
-        return fn(xs[0], axis_name)[None]
-
-    stacked = jnp.broadcast_to(x, (mesh.shape[axis_name],) + x.shape)
-    return run(stacked)
+def __dir__():
+    return sorted(_FORWARDED + ("choose_algorithm", "ALGORITHMS"))

@@ -74,6 +74,13 @@ def t_round_robin(n: float, p: int, net: Network) -> float:
     return p * t_msg(n, net)
 
 
+def t_round_robin_allreduce(n: float, p: int, net: Network) -> float:
+    """Full round-robin exchange CYCLE (gather + broadcast, serialized):
+    2·P messages of n bytes — the all-reduce-equivalent cost of the paper's
+    Original-EASGD wire schedule (``t_round_robin`` is the one-way half)."""
+    return 2 * p * t_msg(n, net)
+
+
 def t_tree_allreduce(n: float, p: int, net: Network) -> float:
     """Tree reduce + broadcast: 2·⌈log2 P⌉ rounds of full-size messages."""
     if p <= 1:

@@ -14,6 +14,7 @@ from __future__ import annotations
 import dataclasses
 import math
 
+from repro.comm import schedules as comm_schedules
 from repro.core import costmodel
 
 
@@ -89,13 +90,16 @@ def breakdown_original_easgd(box: GpuBox, iters: int,
 
 
 def breakdown_sync_easgd(box: GpuBox, iters: int, *, weights_on: str,
-                         overlap: bool) -> Breakdown:
+                         overlap: bool,
+                         schedule: str = "tree") -> Breakdown:
     """Sync EASGD1 (weights on CPU), 2 (weights on GPU), 3 (+overlap).
-    All GPUs compute every iteration; exchange is a tree reduction."""
+    All GPUs compute every iteration; the exchange is priced through the
+    shared ``repro.comm`` registry (default: the paper's tree reduction) —
+    pass any registered ``schedule`` to sweep alternatives."""
     G = box.n_gpus
     W = box.weight_bytes
     net = box.pcie_h2d if weights_on == "cpu" else box.pcie_p2p
-    t_comm = costmodel.t_tree_allreduce(W, G, net)
+    t_comm = comm_schedules.get(schedule).cost(W, G, net)
     t_data = costmodel.t_msg(box.data_bytes, box.pcie_h2d)
     t_fb = box.t_fwd_bwd
     key = "cpu_gpu_para_comm" if weights_on == "cpu" else "gpu_gpu_para_comm"
@@ -129,7 +133,8 @@ def partition_sweep_time(n_parts: int, *, t_compute_1: float,
                          data_bytes: float,
                          net: costmodel.Network,
                          saturation: float = 6.0,
-                         floor: float = 0.30) -> float:
+                         floor: float = 0.30,
+                         schedule: str = "tree") -> float:
     """Time-to-accuracy with the chip split into ``n_parts`` NUMA groups
     (paper §6.2 / Fig 12). The gain combines NUMA locality + faster
     gradient propagation and SATURATES (the chip's FLOPs don't multiply):
@@ -142,7 +147,7 @@ def partition_sweep_time(n_parts: int, *, t_compute_1: float,
     speed = 1.0 if fits else 3.0
     decay = math.exp(-(n_parts - 1) / saturation)
     t_compute = speed * t_compute_1 * (floor + (1 - floor) * decay)
-    t_comm = costmodel.t_tree_allreduce(weight_bytes, n_parts, net)
+    t_comm = comm_schedules.get(schedule).cost(weight_bytes, n_parts, net)
     return t_compute + t_comm
 
 
@@ -154,14 +159,17 @@ def weak_scaling_efficiency(n_nodes: int, *, t_compute: float,
                             weight_bytes: float,
                             net: costmodel.Network,
                             jitter_sigma: float = 0.0,
-                            overlap: bool = True) -> float:
+                            overlap: bool = True,
+                            schedule: str = "psum") -> float:
     """Weak scaling: per-node work constant; per-step time = slowest node
     (synchronous) + packed all-reduce. With lognormal per-node jitter σ the
     expected max over N nodes grows ≈ σ·√(2 ln N) — at cluster scale the
     STRAGGLER term, not bandwidth, limits weak scaling (the α–β comm term
     is <1% here). ``jitter_sigma`` is calibrated from a measured 2-node
-    efficiency and then PREDICTS the rest of the curve."""
-    t_comm = costmodel.t_allreduce_best(weight_bytes, n_nodes, net)
+    efficiency and then PREDICTS the rest of the curve. ``schedule`` is a
+    ``repro.comm`` registry name (default ``psum``: what a tuned library
+    picks — min of butterfly/ring)."""
+    t_comm = comm_schedules.get(schedule).cost(weight_bytes, n_nodes, net)
     straggle = jitter_sigma * math.sqrt(2 * math.log(n_nodes)) \
         if n_nodes > 1 else 0.0
     tn = t_compute * (1 + straggle) + t_comm * (0.0 if overlap else 1.0)

@@ -36,8 +36,11 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.comm import plan as comm_plan
+from repro.comm import schedules as comm_schedules
 from repro.core import compression as compression_lib
 from repro.core.easgd import EASGDConfig
+from repro.utils.jaxcompat import shard_map
 from repro.utils.pytree import tree_map
 
 
@@ -46,6 +49,8 @@ class ElasticConfig:
     easgd: EASGDConfig = EASGDConfig()
     mode: str = "sync_easgd"        # "sync_easgd" | "msgd" (plain DP baseline)
     packed: bool = True             # paper §5.2: single-buffer exchange
+    schedule: str = "psum"          # repro.comm schedule for the packed
+    #                                 cross-pod collective (paper §5.1/§6.1)
     compression: str = "none"       # none | bf16 | sign_ef (cross-pod only)
     overlap: bool = True            # paper §6.1.3 (Sync EASGD3)
     momentum_dtype: Any = jnp.float32
@@ -53,7 +58,15 @@ class ElasticConfig:
 
     def __post_init__(self):
         assert self.mode in ("sync_easgd", "msgd"), self.mode
-        compression_lib.get(self.compression)  # validate
+        comm_schedules.get(self.schedule)       # validate
+        compression_lib.get(self.compression)   # validate
+
+    def exchange_plan(self, axis_name: str | None,
+                      n_total: int) -> comm_plan.ExchangePlan:
+        """The fully-composed cross-pod exchange this config describes."""
+        return comm_plan.make_plan(
+            schedule=self.schedule, compression=self.compression,
+            overlap=self.overlap, axis_name=axis_name, n_total=n_total)
 
 
 class ElasticState(NamedTuple):
@@ -213,17 +226,22 @@ def _exchange_unpacked(state, grads, cfg):
     return _elastic_tensors(state, grads, cfg, mean_w)
 
 
-def _exchange_packed(state, grads, cfg, mesh, param_specs, pod_axis):
+def _exchange_packed(state, grads, cfg, mesh, param_specs, pod_axis,
+                     plan=None):
     """Packed single-buffer exchange inside shard_map (paper §5.2 + §6.1).
 
     Every device: (a) locally flattens its shards of W_t into one buffer,
-    (b) optionally compresses the delta vs W̄, (c) ONE psum over the pod
-    axis, (d) fused elementwise update of W, V, W̄ (eqs 5–6, 2).
+    (b) optionally compresses the delta vs W̄, (c) ONE collective over the
+    pod axis using the plan's registered schedule (repro.comm — tree, ring,
+    …), (d) fused elementwise update of W, V, W̄ (eqs 5–6, 2).
     """
     e = cfg.easgd
-    comp = compression_lib.get(cfg.compression)
     n_pods = n_pods_of(state)
     pod_in_mesh = pod_axis is not None and pod_axis in mesh.axis_names
+    if plan is None:
+        plan = cfg.exchange_plan(
+            axis_name=pod_axis if (n_pods > 1 and pod_in_mesh) else None,
+            n_total=n_pods)
 
     specs = state_specs(param_specs, cfg,
                         pod_axis if (n_pods > 1 and pod_in_mesh) else None)
@@ -242,28 +260,14 @@ def _exchange_packed(state, grads, cfg, mesh, param_specs, pod_axis):
         v2 = _pack_local(momentum, local_pods)
         c2 = _pack_local(center)[None]            # (1, n_local)
 
-        # --- the ONE cross-pod message (paper's tree reduction) -----------
+        # --- the ONE cross-pod collective (plan = schedule × compression) --
         delta = (w2 - c2)
         if cfg.compression != "none":
             ef_flat = _pack_local(ef, local_pods)
-            payload, ef_new2 = jax.vmap(comp.encode)(delta, ef_flat)
-            # sum over local pods, keeping int8 payloads int8 ON THE WIRE
-            # (±1 signs summed over ≤127 pods cannot overflow int8; casting
-            # to f32 before the psum would quadruple the cross-pod bytes)
-            payload = tree_map(lambda x: jnp.sum(x, axis=0, dtype=x.dtype
-                                                 if x.dtype == jnp.int8
-                                                 else None), payload)
-            if pod_in_mesh:
-                payload = tree_map(lambda x: lax.psum(x, pod_axis), payload)
-            payload = tree_map(lambda x: x.astype(jnp.float32) / n_pods,
-                               payload)
-            mean_delta = comp.decode_mean(payload)
+            mean_delta, ef_new2 = plan.reduce_mean_flat(delta, ef_flat)
             ef_new = _unpack_local(ef_new2, ef, local_pods)
         else:
-            d = jnp.sum(delta, axis=0)
-            if pod_in_mesh:
-                d = lax.psum(d, pod_axis)
-            mean_delta = d / n_pods
+            mean_delta, _ = plan.reduce_mean_flat(delta)
             ef_new = ef
         mean_w = c2[0] + mean_delta
 
@@ -283,7 +287,7 @@ def _exchange_packed(state, grads, cfg, mesh, param_specs, pod_axis):
     in_specs = (P(), specs.params, specs.momentum, specs.center,
                 specs.ef_error if cfg.compression != "none" else P(),
                 grads_spec)
-    shmapped = jax.shard_map(
+    shmapped = shard_map(
         body, mesh=mesh, in_specs=in_specs,
         out_specs=(P(), out_specs.params, out_specs.momentum,
                    out_specs.center,
@@ -301,10 +305,13 @@ def _exchange_packed(state, grads, cfg, mesh, param_specs, pod_axis):
 
 def apply_gradients(state: ElasticState, grads, cfg: ElasticConfig,
                     mesh=None, param_specs=None,
-                    pod_axis: str | None = "pod") -> ElasticState:
+                    pod_axis: str | None = "pod",
+                    plan=None) -> ElasticState:
     """One optimizer step. ``grads`` is a pytree like ``state.params``
     (leading pod dim), already mean-reduced over the intra-pod data axis
-    (GSPMD does that from the batch sharding).
+    (GSPMD does that from the batch sharding). ``plan`` (an
+    ``repro.comm.ExchangePlan``) overrides the exchange composition derived
+    from ``cfg`` — the runtime builds it once per train-step.
     """
     if cfg.mode == "msgd":
         # plain synchronous momentum SGD: grads are averaged over pods too,
@@ -329,7 +336,8 @@ def apply_gradients(state: ElasticState, grads, cfg: ElasticConfig,
 
     def do_exchange(st, g):
         if cfg.packed and mesh is not None and param_specs is not None:
-            return _exchange_packed(st, g, cfg, mesh, param_specs, pod_axis)
+            return _exchange_packed(st, g, cfg, mesh, param_specs, pod_axis,
+                                    plan=plan)
         return _exchange_unpacked(st, g, cfg)
 
     tau = cfg.easgd.tau

@@ -25,6 +25,14 @@ import jax.numpy as jnp
 import numpy as np
 
 
+# The fused Pallas elastic-update kernel (kernels/elastic_update.py) tiles
+# packed buffers in (sublane × lane × block) = 8·128·128-element VMEM
+# blocks. The packer pads to the SAME multiple so any default-aligned packed
+# buffer divides evenly into kernel tiles — kernel and packer share this one
+# constant and cannot drift.
+ELASTIC_UPDATE_BLOCK = 8 * 128 * 128
+
+
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
@@ -48,7 +56,8 @@ class Packer:
     required (single buffer) and desirable (deterministic reduction).
     """
 
-    def __init__(self, template, buffer_dtype=jnp.float32, align: int = 1024):
+    def __init__(self, template, buffer_dtype=jnp.float32,
+                 align: int = ELASTIC_UPDATE_BLOCK):
         leaves, treedef = jax.tree_util.tree_flatten(template)
         self.treedef = treedef
         self.buffer_dtype = jnp.dtype(buffer_dtype)

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.packing import ELASTIC_UPDATE_BLOCK
+
 
 def _update_kernel(w_ref, v_ref, g_ref, c_ref, m_ref, w_out, v_out, c_out, *,
                    eta: float, rho: float, mu: float, n_workers: int):
@@ -39,7 +41,8 @@ def _update_kernel(w_ref, v_ref, g_ref, c_ref, m_ref, w_out, v_out, c_out, *,
 
 
 def fused_elastic_update(w, v, g, c, mean_w, *, eta: float, rho: float,
-                         mu: float, n_workers: int, block: int = 128 * 1024,
+                         mu: float, n_workers: int,
+                         block: int = ELASTIC_UPDATE_BLOCK,
                          interpret=True):
     """All inputs 1-D, same length (packer-aligned). Returns (w', v', c')."""
     n = w.shape[0]

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.utils.jaxcompat import pallas_tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -93,7 +95,7 @@ def fused_cross_entropy(h, w, targets, *, block_t: int = 256,
             pltpu.VMEM((bt,), jnp.float32),
             pltpu.VMEM((bt,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(h, w, targets)

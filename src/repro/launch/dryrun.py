@@ -238,6 +238,9 @@ def main():
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", default="pod", choices=["pod", "multipod",
                                                       "both"])
+    ap.add_argument("--schedule", default=None,
+                    help="override the cross-pod exchange schedule "
+                         "(repro.comm registry name)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun.jsonl")
     ap.add_argument("--skip-done", action="store_true")
@@ -264,13 +267,15 @@ def main():
         cells.append((args.arch, args.shape))
 
     meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    overrides = {"schedule": args.schedule} if args.schedule else None
     for aid, shape_id in cells:
         for mk in meshes:
             if (aid, shape_id, mk) in done:
                 print(f"SKIP {aid} {shape_id} {mk} (done)", flush=True)
                 continue
             print(f"=== {aid} × {shape_id} × {mk} ===", flush=True)
-            rec = run_cell(aid, shape_id, mk, args.out)
+            rec = run_cell(aid, shape_id, mk, args.out,
+                           elastic_overrides=overrides)
             if rec["ok"]:
                 rl = rec["roofline"]
                 print(f"  ok  compile={rec['compile_s']:.0f}s "

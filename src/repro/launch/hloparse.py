@@ -169,7 +169,12 @@ def _parse_instrs(lines):
         op = m.group(1)
         type_str = rhs[: m.start()]
         args = rhs[m.end(): rhs.find(")", m.end())]
-        operands = re.findall(r"%?([\w.\-]+)", args)
+        # older XLA text spells operands WITH their types
+        # (``dot(f32[8,256]{1,0} %Arg_0.1, ...)``) — when % markers are
+        # present, they identify the operand names exactly; otherwise the
+        # args are bare names.
+        operands = re.findall(r"%([\w.\-]+)", args) or \
+            re.findall(r"([\w.\-]+)", args)
         out.append(_Instr(lhs, type_str, op, operands, rhs))
     return out
 

@@ -15,7 +15,7 @@ import time
 import jax
 import numpy as np
 
-from repro import configs
+from repro import comm, configs
 from repro.checkpoint import CheckpointManager
 from repro.core.easgd import EASGDConfig
 from repro.core.elastic import ElasticConfig
@@ -38,6 +38,11 @@ def main(argv=None):
     ap.add_argument("--eta", type=float, default=0.02)
     ap.add_argument("--rho", type=float, default=0.01)
     ap.add_argument("--tau", type=int, default=1)
+    ap.add_argument("--schedule", default="psum", choices=list(comm.names()),
+                    help="cross-pod exchange schedule (repro.comm registry)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable compute/comm overlap (Sync EASGD1/2 "
+                         "baseline, paper §6.1.3)")
     ap.add_argument("--compression", default="none")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
@@ -54,10 +59,15 @@ def main(argv=None):
 
     ecfg = ElasticConfig(
         easgd=EASGDConfig(eta=args.eta, rho=args.rho, mu=0.9, tau=args.tau),
+        schedule=args.schedule,
+        overlap=not args.no_overlap,
         compression=args.compression,
         momentum_dtype=spec.momentum_dtype,
         center_dtype=spec.center_dtype,
     )
+    print(f"exchange: schedule={args.schedule} "
+          f"compression={args.compression} "
+          f"overlap={not args.no_overlap} n_pods={n_pods}", flush=True)
     per_pod = args.batch // n_pods
     build = build_train_step(cfg, ecfg, mesh, n_pods=n_pods,
                              per_pod_batch=per_pod, seq=args.seq,

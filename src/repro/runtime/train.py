@@ -36,6 +36,7 @@ class TrainBuild:
     init_state: Any           # () -> concrete ElasticState (allocates!)
     param_specs: Any
     n_pods: int
+    exchange_plan: Any = None  # repro.comm.ExchangePlan the step executes
 
 
 def _per_pod_loss(cfg: ModelConfig, constrain=None):
@@ -74,6 +75,11 @@ def build_train_step(cfg: ModelConfig, ecfg: ElasticConfig, mesh,
     pspecs = shd.param_specs(cfg, mesh)
     pod_axis = "pod" if "pod" in mesh.axis_names else None
     sspecs = elastic.state_specs(pspecs, ecfg, pod_axis)
+    # the ONE cross-pod exchange (schedule × packing × compression ×
+    # overlap), built once and executed by every step
+    exchange_plan = ecfg.exchange_plan(
+        axis_name=pod_axis if (n_pods > 1 and pod_axis is not None) else None,
+        n_total=n_pods)
     bspecs = shd.batch_specs(cfg, mesh, pod_dim=pod_axis is not None)
     assert per_pod_batch % microbatches == 0, (per_pod_batch, microbatches)
 
@@ -126,7 +132,7 @@ def build_train_step(cfg: ModelConfig, ecfg: ElasticConfig, mesh,
                 acc_fn, (g0, jnp.zeros((n_pods,)), zero_metrics), micro)
         new_state = elastic.apply_gradients(
             state, grads, ecfg, mesh=mesh, param_specs=pspecs,
-            pod_axis=pod_axis)
+            pod_axis=pod_axis, plan=exchange_plan)
         out_metrics = {
             "loss": jnp.mean(loss),
             **{k: jnp.mean(v) for k, v in metrics.items()},
@@ -150,5 +156,5 @@ def build_train_step(cfg: ModelConfig, ecfg: ElasticConfig, mesh,
     return TrainBuild(
         step=jit_step, state_specs=sspecs, batch_spec_tree=bspecs,
         abstract_state=abstract_state, init_state=init_state,
-        param_specs=pspecs, n_pods=n_pods,
+        param_specs=pspecs, n_pods=n_pods, exchange_plan=exchange_plan,
     )

@@ -1,0 +1,69 @@
+"""Version compatibility for the jax APIs this repo uses.
+
+The code targets the modern API (``jax.shard_map`` with ``check_vma``,
+``jax.make_mesh(..., axis_types=...)``); the container bakes in jax 0.4.x
+where shard_map lives in ``jax.experimental.shard_map`` (with ``check_rep``)
+and ``make_mesh`` has no ``axis_types``. Every shard_map/mesh call site goes
+through THIS module so the whole stack — runtime, comm schedules, tests,
+benchmarks — runs on either version.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):                      # jax >= 0.6 style
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+
+else:                                              # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+
+if hasattr(jax.lax, "axis_size"):
+
+    def axis_size(axis_name) -> int:
+        """Static size of a bound mesh axis (inside shard_map)."""
+        return jax.lax.axis_size(axis_name)
+
+else:
+
+    def axis_size(axis_name) -> int:
+        """Static size of a bound mesh axis (inside shard_map).
+        jax 0.4.x: the axis env frame is the plain int size."""
+        import jax.core as _core
+        return int(_core.axis_frame(axis_name))
+
+
+# AxisType only exists on newer jax; all call sites here use Auto everywhere,
+# which is also the old default — so it is safe to drop when unsupported.
+AXIS_TYPE_AUTO = getattr(getattr(jax.sharding, "AxisType", None), "Auto",
+                         None)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    kwargs = {"devices": devices} if devices is not None else {}
+    if axis_types is not None and AXIS_TYPE_AUTO is not None:
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types,
+                             **kwargs)
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def pallas_tpu_compiler_params(**kwargs):
+    """pltpu.CompilerParams on modern jax, TPUCompilerParams on 0.4.x."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def auto_mesh(axis_shapes, axis_names, *, devices=None):
+    """A mesh with every axis Auto (the common case in tests/benchmarks)."""
+    types = (None if AXIS_TYPE_AUTO is None
+             else (AXIS_TYPE_AUTO,) * len(axis_names))
+    return make_mesh(axis_shapes, axis_names, axis_types=types,
+                     devices=devices)

@@ -10,7 +10,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # property tests skipped, fallback below
+    given = settings = st = None
 
 from repro.core import costmodel
 from repro.core.async_engine import ALGORITHMS, PSEngine, SimConfig
@@ -276,11 +280,25 @@ def test_costmodel_packed_beats_unpacked():
             costmodel.t_per_layer(sizes, 16, net)
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(2, 512), st.floats(1e3, 1e9))
-def test_costmodel_tree_vs_roundrobin(p, nbytes):
-    """Θ(log P) tree always beats the Θ(P) round-robin for P ≥ 4."""
+def _check_tree_vs_roundrobin(p, nbytes):
+    """Θ(log P) tree beats the Θ(P) round-robin for P ≥ 6. (Not P ≥ 4: at
+    P=5 the two-phase tree's 2·⌈log2 5⌉ = 6 rounds lose to 5 serialized
+    messages when latency dominates — 2·⌈log2 P⌉ ≤ P holds from P=6 up.)"""
     net = costmodel.MELLANOX_FDR
-    if p >= 4:
+    if p >= 6:
         assert costmodel.t_tree_allreduce(nbytes, p, net) <= \
             costmodel.t_round_robin(nbytes, p, net)
+
+
+if st is not None:
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(2, 512), st.floats(1e3, 1e9))
+    def test_costmodel_tree_vs_roundrobin(p, nbytes):
+        _check_tree_vs_roundrobin(p, nbytes)
+
+
+def test_costmodel_tree_vs_roundrobin_deterministic():
+    for p in (6, 7, 16, 511, 512):
+        for nbytes in (1e3, 1e6, 1e9):
+            _check_tree_vs_roundrobin(p, nbytes)
