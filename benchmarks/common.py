@@ -58,17 +58,57 @@ def default_engine(seed=0, n_workers=4, t_compute=2e-3, **problem_kw):
 
 
 _JSON_ROWS = None  # when a list, csv_row also records rows for --json output
+_JSON_META = None  # module-contributed metadata for the current capture
+
+
+def run_metadata() -> dict:
+    """Environment fingerprint embedded in every BENCH_*.json so results
+    are comparable across PRs: git SHA, library versions, machine shape."""
+    import os
+    import platform
+    import subprocess
+    import sys
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            timeout=10).stdout.strip() or None
+    except Exception:                # noqa: BLE001 — metadata best-effort
+        sha = None
+    try:
+        jax_version = jax.__version__
+    except Exception:                # noqa: BLE001
+        jax_version = None
+    return {
+        "git_sha": sha,
+        "jax_version": jax_version,
+        "numpy_version": np.__version__,
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+        "n_cpus": os.cpu_count(),
+        "argv": sys.argv[1:],
+    }
+
+
+def json_meta(**kw) -> None:
+    """Attach module-level run parameters (schedule, n_workers/pods, …) to
+    the current --json capture; merged into the BENCH_*.json 'meta'."""
+    if _JSON_META is not None:
+        _JSON_META.update(kw)
 
 
 def begin_json_capture():
-    global _JSON_ROWS
+    global _JSON_ROWS, _JSON_META
     _JSON_ROWS = []
+    _JSON_META = {}
 
 
-def end_json_capture() -> list:
-    global _JSON_ROWS
+def end_json_capture() -> tuple:
+    """-> (rows, module_meta)."""
+    global _JSON_ROWS, _JSON_META
     rows, _JSON_ROWS = _JSON_ROWS, None
-    return rows or []
+    meta, _JSON_META = _JSON_META, None
+    return rows or [], meta or {}
 
 
 def json_capture_active() -> bool:

@@ -17,12 +17,23 @@ Two regimes, mirroring the paper's setting (deep nets, aggressive rates,
          asynchrony-induced implicit momentum)
 
 Emits one CSV row per method per regime + PASS/FAIL per claim.
+
+``--real`` additionally runs every algorithm on the repro.ps runtime (real
+multiprocessing workers + thread-transport smoke, deadline-paced emulated
+wire — see repro.ps.runtime) and writes ``BENCH_ps_runtime.json``:
+measured vs DES-predicted time-per-iteration, accuracy-vs-time curves for
+both clocks, the sync schedule sweep with executed-round counts, and the
+paper-ordering checks.
 """
 from __future__ import annotations
 
-import numpy as np
+import dataclasses
+import json
+import os
+import time
 
-from benchmarks.common import csv_row, make_mlp_problem
+from benchmarks.common import csv_row, json_meta, make_mlp_problem, \
+    run_metadata
 from repro.core.async_engine import ALGORITHMS, PSEngine, SimConfig
 from repro.core.easgd import EASGDConfig
 
@@ -101,9 +112,144 @@ def run(iters: int = 1500, seed: int = 0, quick: bool = False):
     return (stressed, stable), checks
 
 
-def main(quick: bool = False):
+# ---------------------------------------------------------------------------
+# --real: the repro.ps runtime vs its own calibrated DES prediction
+# ---------------------------------------------------------------------------
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SYNC_SCHEDULES = ("ring", "tree", "butterfly", "round_robin", "hierarchical")
+
+
+def _one_real(ps, cal, easgd, cfg, net):
+    """One algorithm through the shared measured-vs-DES protocol
+    (``repro.ps.run_vs_des``) on the benchmark problem."""
+    del net  # the protocol charges cfg.emulate_net to both clocks
+    _, _, record = ps.run_vs_des(ps.NUMPY_MLP_MED, easgd, cfg, cal=cal)
+    return record
+
+
+def run_real(iters: int = 240, n_workers: int = 4, seed: int = 0,
+             quick: bool = False, out_path: str | None = None) -> dict:
+    from repro import ps
+    from repro.core import costmodel
+
+    if quick:
+        iters = 120
+    net = costmodel.PS_WIRE
+    easgd = EASGDConfig(eta=0.1, rho=0.1, mu=0.9)
+    base = ps.PSConfig(
+        algorithm="sync_easgd", n_workers=n_workers, transport="process",
+        schedule="ring", total_iters=iters, eval_every_iters=max(iters // 6, 20),
+        emulate_net=net, seed=seed)
+    t0 = time.time()
+    cal = ps.calibrate(ps.NUMPY_MLP_MED, base,
+                       samples=10 if quick else 20)
+    records = []
+    for algo in ALGORITHMS:
+        cfg = dataclasses.replace(base, algorithm=algo)
+        rec = _one_real(ps, cal, easgd, cfg, net)
+        records.append(rec)
+        csv_row(f"ps_runtime/{algo}", rec["measured_us_per_iter"],
+                f"des={rec['des_us_per_iter']:.1f}us;"
+                f"ratio={rec['measured_over_des']:.2f};"
+                f"ips={rec['iters_per_sec']:.1f};"
+                f"err={rec['final_err']:.3f}")
+
+    # sync_easgd under every registered schedule: the measured clock must
+    # track the registry's per-schedule pricing, and the executed round
+    # count must equal the registry's round structure
+    from repro import comm
+    sweep = []
+    sweep_schedules = SYNC_SCHEDULES[:2] if quick else SYNC_SCHEDULES
+    for sched in sweep_schedules:
+        cfg = dataclasses.replace(base, algorithm="sync_easgd",
+                                  schedule=sched,
+                                  total_iters=max(iters // 2, 60))
+        rec = _one_real(ps, cal, easgd, cfg, net)
+        n_rounds = -(-cfg.total_iters // n_workers)
+        expect_rounds = n_rounds * len(comm.get(sched).rounds(n_workers))
+        rec["expected_sync_rounds"] = expect_rounds
+        rec["rounds_match"] = rec["counters"]["sync_rounds"] == expect_rounds
+        sweep.append(rec)
+        csv_row(f"ps_runtime/sweep/{sched}", rec["measured_us_per_iter"],
+                f"des={rec['des_us_per_iter']:.1f}us;"
+                f"ratio={rec['measured_over_des']:.2f};"
+                f"rounds={'OK' if rec['rounds_match'] else 'MISMATCH'}")
+
+    # thread-transport smoke: both backends execute for real
+    threads = []
+    for algo in ("async_easgd", "sync_easgd"):
+        cfg = dataclasses.replace(base, algorithm=algo, transport="thread",
+                                  total_iters=max(iters // 2, 60))
+        rec = _one_real(ps, cal, easgd, cfg, net)
+        threads.append(rec)
+        csv_row(f"ps_runtime/thread/{algo}", rec["measured_us_per_iter"],
+                f"ratio={rec['measured_over_des']:.2f}")
+
+    by = {r["algorithm"]: r for r in records}
+    ips = {a: by[a]["iters_per_sec"] for a in by}
+    checks = {
+        # acceptance: DES within 2x for the sync algorithms + every sync
+        # schedule of the sweep
+        "des_within_2x_sync": all(
+            0.5 <= r["measured_over_des"] <= 2.0
+            for r in [by["sync_easgd"], by["sync_sgd"]] + sweep),
+        # the paper's qualitative ordering, measured for real
+        "sync_easgd_ge_async_easgd":
+            ips["sync_easgd"] >= 0.95 * ips["async_easgd"],
+        "async_easgd_gt_original":
+            ips["async_easgd"] > ips["original_easgd"],
+        "rounds_match_registry": all(r["rounds_match"] for r in sweep),
+    }
+    for k, v in checks.items():
+        csv_row(f"ps_runtime/check/{k}", 0.0, "PASS" if v else "FAIL")
+
+    out = {
+        "meta": {
+            **run_metadata(),
+            "n_workers": n_workers, "iters": iters, "quick": quick,
+            "transport": "process (+thread smoke)",
+            "emulated_wire": {"name": net.name, "alpha_s": net.alpha,
+                              "beta_s_per_byte": net.beta},
+            "calibration": {
+                "n_params": cal.n,
+                "t_grad_serial_us": 1e6 * cal.t_grad_serial,
+                "t_grad_concurrent_us": 1e6 * cal.t_grad_concurrent,
+                "t_axpy_us": 1e6 * cal.t_axpy,
+            },
+            "elapsed_s": round(time.time() - t0, 1),
+        },
+        "algorithms": records,
+        "sync_schedule_sweep": sweep,
+        "thread_smoke": threads,
+        "checks": checks,
+    }
+    path = out_path or os.path.join(REPO_ROOT, "BENCH_ps_runtime.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"# wrote {path}")
+    return out
+
+
+def main(quick: bool = False, real: bool = False):
     run(quick=quick)
+    json_meta(n_workers=8, regimes=["stressed", "momentum"],
+              algorithms=list(ALGORITHMS))
+    if real:
+        run_real(quick=quick)
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--real", action="store_true",
+                    help="also execute every algorithm on the repro.ps "
+                         "runtime and write BENCH_ps_runtime.json")
+    ap.add_argument("--only-real", action="store_true",
+                    help="skip the DES-only figures, run just the ps part")
+    args = ap.parse_args()
+    if args.only_real:
+        run_real(quick=args.quick)
+    else:
+        main(quick=args.quick, real=args.real)

@@ -59,9 +59,11 @@ def main() -> None:
             failures.append(name)
             print(f"# {name} FAILED:\n{traceback.format_exc()}", flush=True)
         if args.json:
+            rows, module_meta = common.end_json_capture()
             rec = {"module": name, "ok": ok, "quick": args.quick,
                    "elapsed_s": round(time.time() - t0, 3),
-                   "rows": common.end_json_capture()}
+                   "meta": {**common.run_metadata(), **module_meta},
+                   "rows": rows}
             path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
             with open(path, "w") as f:
                 json.dump(rec, f, indent=1)

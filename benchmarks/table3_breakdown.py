@@ -21,7 +21,8 @@ from __future__ import annotations
 import json
 import os
 
-from benchmarks.common import csv_row, json_capture_active
+from benchmarks.common import csv_row, json_capture_active, \
+    json_meta
 from repro.comm import schedules as comm_schedules
 from repro.core.des import (
     GPU_BOX, breakdown_original_easgd, breakdown_sync_easgd,
@@ -82,6 +83,8 @@ def schedule_sweep(iters: int = 1000, json_path: str | None = None) -> dict:
             f"{gap:.2f}x slower (the paper's §5.1 schedule gap)")
     out = {"box": "GPU_BOX", "iters": iters, "schedules": sweep,
            "round_robin_vs_tree": gap}
+    json_meta(sweep_box="GPU_BOX", sweep_iters=iters,
+              schedules=list(sweep))
     # written only on explicit request or under run.py --json, so a plain
     # CSV benchmark run never clobbers the committed trajectory record
     if json_path or json_capture_active():

@@ -8,7 +8,7 @@ cross-pod elastic exchange over DCI every τ steps.
 """
 from __future__ import annotations
 
-from benchmarks.common import csv_row
+from benchmarks.common import csv_row, json_meta
 from repro.comm import schedules as comm_schedules
 from repro.core import costmodel
 from repro.core.des import weak_scaling_efficiency
@@ -71,6 +71,8 @@ def run(quick: bool = False):
 
 def main(quick: bool = False):
     run(quick)
+    json_meta(schedules=list(comm_schedules.names()),
+              pods=[2, 8, 64], nodes=[1, 2, 4, 8, 16, 32, 64])
 
 
 if __name__ == "__main__":

@@ -125,6 +125,73 @@ def ring_allreduce(x, axis_name):
     return out[:n] if pad else out
 
 
+def _inner_size(p: int) -> int:
+    """Two-level split p = inner × outer for the hierarchical schedule:
+    inner = 2^⌈log2(p)/2⌉ (the near-square decomposition, paper §6.2's
+    ICI-pod × DCI split collapsed onto one axis)."""
+    if p <= 1:
+        return 1
+    log2p = p.bit_length() - 1
+    return 1 << ((log2p + 1) // 2)
+
+
+def _grouped_ring(x, axis_name, p, m, r):
+    """Ring reduce-scatter + all-gather WITHIN groups of ``m`` consecutive
+    ranks (all groups in parallel). 1-D x; requires m | p."""
+    n = x.shape[0]
+    pad = (-n) % m
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    chunks = x.reshape(m, -1)
+    r_in = r % m
+    perm = [(g * m + j, g * m + (j + 1) % m)
+            for g in range(p // m) for j in range(m)]
+
+    def rs_step(s, ch):
+        send = jax.lax.dynamic_index_in_dim(ch, (r_in - s) % m, 0,
+                                            keepdims=False)
+        recv = lax.ppermute(send, axis_name, perm)
+        return ch.at[(r_in - s - 1) % m].add(recv)
+
+    chunks = lax.fori_loop(0, m - 1, rs_step, chunks)
+
+    def ag_step(s, ch):
+        send = jax.lax.dynamic_index_in_dim(ch, (r_in + 1 - s) % m, 0,
+                                            keepdims=False)
+        recv = lax.ppermute(send, axis_name, perm)
+        return ch.at[(r_in - s) % m].set(recv)
+
+    chunks = lax.fori_loop(0, m - 1, ag_step, chunks)
+    out = chunks.reshape(-1)
+    return out[:n] if pad else out
+
+
+def hierarchical_grouped_allreduce(x, axis_name):
+    """Two-level all-reduce on ONE axis (paper §6.2 made first-class):
+    bandwidth-optimal ring within groups of ``inner`` consecutive ranks
+    (the fast ICI domain), then latency-optimal butterfly across groups
+    (the slow DCI domain) — the cross-group message count is 1/inner of a
+    flat exchange. Requires a power-of-two axis size; 1-D x.
+
+    ``hierarchical_allreduce`` below is the two-axis form for meshes that
+    expose the pod/ICI split explicitly.
+    """
+    p = axis_size(axis_name)
+    assert p & (p - 1) == 0, f"hierarchical needs power-of-two axis, got {p}"
+    if p == 1:
+        return x
+    r = lax.axis_index(axis_name)
+    m = _inner_size(p)
+    if m > 1:
+        x = _grouped_ring(x, axis_name, p, m, r)
+    d = m
+    while d < p:
+        perm = [(i, i ^ d) for i in range(p)]
+        x = x + lax.ppermute(x, axis_name, perm)
+        d *= 2
+    return x
+
+
 def round_robin_allreduce(x, axis_name):
     """The Original-EASGD wire schedule: the master (rank 0) exchanges with
     workers ONE AT A TIME, in rank order — Θ(P) serialized messages.
@@ -151,6 +218,125 @@ def round_robin_allreduce(x, axis_name):
 
 
 # ---------------------------------------------------------------------------
+# round structure — the wire pattern as DATA
+# ---------------------------------------------------------------------------
+#
+# Each schedule can describe itself as a list of ROUNDS; a round is a list
+# of point-to-point messages that fly concurrently. This is the bridge
+# between the three consumers: the α–β cost of a round is α + max_frac·n·β,
+# and summing rounds reproduces the closed-form ``cost_fn`` exactly (pinned
+# by tests) — while the repro.ps runtime EXECUTES the same rounds over its
+# shared-memory transports, so the real system and the simulator move the
+# identical message pattern.
+
+MASTER = -1   # in a parameter-server wiring the master is an endpoint of
+#               its own, distinct from the p workers (round_robin uses it;
+#               peer-to-peer schedules do not)
+
+
+@dataclasses.dataclass(frozen=True)
+class Message:
+    """One point-to-point transfer inside a round.
+
+    ``src``/``dst`` are worker ranks (or ``MASTER``). ``frac`` is the
+    fraction of the buffer moved (ring moves 1/p chunks). For chunked
+    schedules, the buffer is viewed as ``chunks`` equal slices and the
+    receiver applies ``op`` to slice ``chunk``; chunk=None means the whole
+    buffer. ``op`` is "add" (accumulate into the receiver) or "set"
+    (overwrite) — receivers always read the sender's PRE-round value.
+    """
+
+    src: int
+    dst: int
+    frac: float = 1.0
+    chunk: int | None = None
+    chunks: int = 1
+    op: str = "add"
+
+
+def round_robin_rounds(p, n_bytes=0.0, net=None):
+    """2·p serialized master↔worker messages: gather (add into the master,
+    rank order — the same summation order as ``np.mean`` over workers, which
+    the DES↔real bitwise cross-check relies on), then broadcast."""
+    gather = [[Message(i, MASTER, op="add")] for i in range(p)]
+    bcast = [[Message(MASTER, i, op="set")] for i in range(p)]
+    return gather + bcast
+
+
+def tree_rounds(p, n_bytes=0.0, net=None):
+    rounds = []
+    d = 1
+    while d < p:
+        rounds.append([Message(i + d, i, op="add")
+                       for i in range(0, p, 2 * d)])
+        d *= 2
+    d = p // 2
+    while d >= 1:
+        rounds.append([Message(i, i + d, op="set")
+                       for i in range(0, p, 2 * d)])
+        d //= 2
+    return rounds
+
+
+def butterfly_rounds(p, n_bytes=0.0, net=None):
+    rounds = []
+    d = 1
+    while d < p:
+        rounds.append([Message(i, i ^ d, op="add") for i in range(p)])
+        d *= 2
+    return rounds
+
+
+def ring_rounds(p, n_bytes=0.0, net=None):
+    rounds = []
+    for s in range(p - 1):      # reduce-scatter
+        rounds.append([Message(r, (r + 1) % p, frac=1.0 / p,
+                               chunk=(r - s) % p, chunks=p, op="add")
+                       for r in range(p)])
+    for s in range(p - 1):      # all-gather
+        rounds.append([Message(r, (r + 1) % p, frac=1.0 / p,
+                               chunk=(r + 1 - s) % p, chunks=p, op="set")
+                       for r in range(p)])
+    return rounds
+
+
+def psum_rounds(p, n_bytes=0.0, net=None):
+    """psum is 'whatever a tuned library picks': butterfly when the α–β
+    model says latency-bound (and p is a power of two), else ring."""
+    net = net or costmodel.TPU_ICI
+    if p & (p - 1) == 0 and costmodel.t_butterfly_allreduce(n_bytes, p, net) \
+            <= costmodel.t_ring_allreduce(n_bytes, p, net):
+        return butterfly_rounds(p)
+    return ring_rounds(p)
+
+
+def hierarchical_rounds(p, n_bytes=0.0, net=None):
+    m = _inner_size(p)
+    rounds = []
+    for s in range(m - 1):      # inner grouped-ring reduce-scatter
+        rounds.append([Message(g * m + j, g * m + (j + 1) % m, frac=1.0 / m,
+                               chunk=(j - s) % m, chunks=m, op="add")
+                       for g in range(p // m) for j in range(m)])
+    for s in range(m - 1):      # inner grouped-ring all-gather
+        rounds.append([Message(g * m + j, g * m + (j + 1) % m, frac=1.0 / m,
+                               chunk=(j + 1 - s) % m, chunks=m, op="set")
+                       for g in range(p // m) for j in range(m)])
+    d = m                       # outer butterfly across groups
+    while d < p:
+        rounds.append([Message(i, i ^ d, op="add") for i in range(p)])
+        d *= 2
+    return rounds
+
+
+def t_hierarchical_allreduce(n: float, p: int, net: costmodel.Network
+                             ) -> float:
+    """ring over the inner group + butterfly across groups (paper §6.2)."""
+    m = _inner_size(p)
+    return (costmodel.t_ring_allreduce(n, m, net)
+            + costmodel.t_butterfly_allreduce(n, max(p // m, 1), net))
+
+
+# ---------------------------------------------------------------------------
 # the registry
 # ---------------------------------------------------------------------------
 
@@ -169,6 +355,7 @@ class Schedule:
     cost_fn: Callable
     flat_only: bool = False     # impl requires a 1-D buffer
     pow2_only: bool = False     # impl requires a power-of-two axis size
+    rounds_fn: Callable | None = None   # (p, n_bytes, net) -> [[Message]]
     doc: str = ""
 
     def allreduce(self, x, axis_name: str):
@@ -184,6 +371,31 @@ class Schedule:
         if p <= 1:
             return 0.0
         return self.cost_fn(n_bytes, p, net)
+
+    def rounds(self, p: int, n_bytes: float = 0.0,
+               net: costmodel.Network = costmodel.TPU_ICI) -> list:
+        """The exchange as explicit message rounds (empty for p ≤ 1).
+
+        The repro.ps runtime executes exactly these over its transports;
+        ``cost_from_rounds`` prices them and equals ``cost`` (pinned by
+        tests) — one structure, run AND simulated.
+        """
+        if p <= 1 or self.rounds_fn is None:
+            return []
+        if self.pow2_only and p & (p - 1) != 0:
+            raise ValueError(
+                f"schedule '{self.name}' needs a power-of-two participant "
+                f"count, got {p} — its round structure would address "
+                f"nonexistent ranks (use ring/round_robin instead)")
+        return self.rounds_fn(p, n_bytes, net)
+
+    def cost_from_rounds(self, n_bytes: float, p: int,
+                         net: costmodel.Network = costmodel.TPU_ICI
+                         ) -> float:
+        """Per-round α–β pricing: each round costs α + max_frac·n·β (its
+        messages fly concurrently); rounds are serialized."""
+        return sum(net.alpha + max(m.frac for m in rnd) * n_bytes * net.beta
+                   for rnd in self.rounds(p, n_bytes, net))
 
 
 SCHEDULES: dict[str, Schedule] = {}
@@ -210,23 +422,32 @@ def names() -> tuple:
 
 register(Schedule(
     "psum", psum_allreduce, costmodel.t_allreduce_best,
+    rounds_fn=psum_rounds,
     doc="XLA-native all-reduce; priced as min(butterfly, ring) — what a "
         "tuned library achieves."))
 register(Schedule(
     "tree", tree_allreduce, costmodel.t_tree_allreduce, pow2_only=True,
+    rounds_fn=tree_rounds,
     doc="reduce-to-root + broadcast, 2·⌈log2 P⌉ rounds (paper §5.1)."))
 register(Schedule(
     "butterfly", butterfly_allreduce, costmodel.t_butterfly_allreduce,
-    pow2_only=True,
+    pow2_only=True, rounds_fn=butterfly_rounds,
     doc="recursive doubling, ⌈log2 P⌉ rounds — latency-optimal."))
 register(Schedule(
     "ring", ring_allreduce, costmodel.t_ring_allreduce, flat_only=True,
+    rounds_fn=ring_rounds,
     doc="reduce-scatter + all-gather, 2(P−1) steps of n/P bytes — "
         "bandwidth-optimal."))
 register(Schedule(
     "round_robin", round_robin_allreduce, costmodel.t_round_robin_allreduce,
+    rounds_fn=round_robin_rounds,
     doc="Original EASGD's serialized master↔worker exchange, Θ(P) — the "
         "paper's baseline."))
+register(Schedule(
+    "hierarchical", hierarchical_grouped_allreduce, t_hierarchical_allreduce,
+    flat_only=True, pow2_only=True, rounds_fn=hierarchical_rounds,
+    doc="two-level divide-and-conquer (paper §6.2): ring within groups of "
+        "2^⌈log2(P)/2⌉ ranks (ICI), butterfly across groups (DCI)."))
 
 
 # ---------------------------------------------------------------------------
@@ -236,10 +457,12 @@ register(Schedule(
 def choose(n_bytes: float, p: int,
            net: costmodel.Network = costmodel.TPU_ICI) -> str:
     """α–β-model-driven schedule choice (paper Table 2 reasoning):
-    latency-bound small buffers → butterfly; bandwidth-bound → ring."""
+    latency-bound small buffers → butterfly; bandwidth-bound → ring.
+    butterfly is pow2-only, so a non-power-of-two group always gets ring
+    (valid for any p) — the chooser never proposes an unrunnable schedule."""
     if p <= 1:
         return "psum"
-    if get("butterfly").cost(n_bytes, p, net) <= \
+    if p & (p - 1) == 0 and get("butterfly").cost(n_bytes, p, net) <= \
             get("ring").cost(n_bytes, p, net):
         return "butterfly"
     return "ring"

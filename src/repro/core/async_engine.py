@@ -24,7 +24,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.comm import schedules as comm_schedules
-from repro.core import costmodel
+from repro.core import costmodel, easgd_flat
 from repro.core.easgd import EASGDConfig
 
 ALGORITHMS = (
@@ -60,6 +60,8 @@ class RunResult:
     total_iters: int
     breakdown: dict                  # category -> seconds (Table 3 analogue)
     final_metric: float
+    center: Optional[np.ndarray] = None    # final W̄ (DES↔real cross-check)
+    workers: Optional[np.ndarray] = None   # final (P, n) worker weights
 
 
 class PSEngine:
@@ -122,22 +124,9 @@ class PSEngine:
                 history.append((t, iters, float(self.eval_fn(w_eval))))
                 last_eval_iter = iters
 
-        eta, rho, mu = cfg.eta, cfg.rho, cfg.mu
-        a = eta * rho
-
-        def worker_grad_step(i, grad):
-            """worker-side update; returns per-iter worker update cost."""
-            if algorithm in ("async_easgd", "hogwild_easgd",
-                             "original_easgd", "sync_easgd"):
-                workers[i] -= eta * (grad + rho * (workers[i] - center))
-            elif algorithm == "async_measgd":
-                vel[i][:] = mu * vel[i] - eta * grad
-                workers[i] += vel[i] - a * (workers[i] - center)
-            elif algorithm in ("async_msgd",):
-                vel[i][:] = mu * vel[i] - eta * grad
-                workers[i] += vel[i]
-            else:  # sgd family: worker tracks master copy
-                workers[i] -= eta * grad
+        # the optimizer math itself lives in core.easgd_flat — the SAME
+        # in-place functions the repro.ps real runtime executes, so identical
+        # event order gives bitwise-identical iterates (DES↔real cross-check)
 
         # ---------------- Original EASGD: round-robin, one worker at a time --
         if algorithm == "original_easgd":
@@ -158,15 +147,17 @@ class PSEngine:
                 t += t_rr / 2               # worker -> master (W_j)
                 breakdown["param_comm"] += t_rr
                 breakdown["fwd_bwd"] += tc
-                worker_grad_step(j, grad)
-                center += a * (workers[j] - center)
+                easgd_flat.master_absorb_round_robin(center, workers[j],
+                                                     vel[j], grad, cfg)
                 t += 2 * self._t_update()
                 breakdown["worker_update"] += self._t_update()
                 breakdown["master_update"] += self._t_update()
                 iters += 1
                 evaluate(t)
             return RunResult(algorithm, history, t, iters, breakdown,
-                             history[-1][2] if history else float("nan"))
+                             history[-1][2] if history else float("nan"),
+                             center=center.copy(),
+                             workers=np.array(workers))
 
         # ---------------- synchronous family ---------------------------------
         if algorithm in ("sync_sgd", "sync_easgd"):
@@ -184,14 +175,14 @@ class PSEngine:
                     t += max(t_compute, t_comm)
                     mean_w = np.mean(workers, axis=0)
                     for i in range(P):
-                        worker_grad_step(i, grads[i])
-                    center += a * P * (mean_w - center)
+                        easgd_flat.worker_step(algorithm, workers[i], vel[i],
+                                               grads[i], center, cfg)
+                    easgd_flat.sync_master_easgd(center, mean_w, P, cfg)
                 else:
                     # sync SGD: gradient all-reduce cannot overlap
                     t += t_compute + t_comm
                     gmean = np.mean(grads, axis=0)
-                    master_vel[:] = mu * master_vel - eta * gmean
-                    center += master_vel
+                    easgd_flat.sync_master_sgd(center, master_vel, gmean, cfg)
                     for i in range(P):
                         workers[i][:] = center
                 breakdown["fwd_bwd"] += t_compute
@@ -204,7 +195,9 @@ class PSEngine:
                 steps += 1
                 evaluate(t)
             return RunResult(algorithm, history, t, iters, breakdown,
-                             history[-1][2] if history else float("nan"))
+                             history[-1][2] if history else float("nan"),
+                             center=center.copy(),
+                             workers=np.array(workers))
 
         # ---------------- asynchronous family (FCFS / lock-free) -------------
         # event heap of (time, seq, worker, phase)
@@ -224,16 +217,8 @@ class PSEngine:
                 breakdown["idle"] += master_free_at - t
                 t = master_free_at          # FCFS: wait for the lock
             grad = self.grad_fn(workers[i], iters, i)
-            if algorithm in ("async_sgd", "hogwild_sgd"):
-                center -= eta * grad
-                workers[i][:] = center
-            elif algorithm == "async_msgd":
-                master_vel[:] = mu * master_vel - eta * grad
-                center += master_vel
-                workers[i][:] = center
-            else:  # async_easgd / async_measgd / hogwild_easgd
-                worker_grad_step(i, grad)
-                center += a * (workers[i] - center)
+            easgd_flat.master_absorb(algorithm, center, master_vel,
+                                     workers[i], vel[i], grad, cfg)
             if not lock_free:
                 master_free_at = t + service
             breakdown["param_comm"] += 2 * self._t_msg()
@@ -246,4 +231,5 @@ class PSEngine:
             iters += 1
             evaluate(t)
         return RunResult(algorithm, history, t, iters, breakdown,
-                         history[-1][2] if history else float("nan"))
+                         history[-1][2] if history else float("nan"),
+                         center=center.copy(), workers=np.array(workers))

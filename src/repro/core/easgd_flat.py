@@ -1,0 +1,109 @@
+"""Flat-vector, IN-PLACE updates for the paper's nine algorithms — the ONE
+implementation of the optimizer math shared by
+
+ * the discrete-event simulator (``core.async_engine.PSEngine``), and
+ * the real parameter-server runtime (``repro.ps``).
+
+Both call these functions with the same float64 numpy buffers in the same
+event order, so the DES↔real cross-check (tests/test_ps.py) can assert
+bitwise-identical iterates: same event order ⇒ same weights.
+
+All functions mutate their buffers in place. That is load-bearing twice
+over: (a) the ``repro.ps`` shared-memory transports hand the SAME arrays to
+every thread/process, so an in-place update IS the publication; (b) the
+Hogwild variants run these without a lock — the torn, racy interleavings
+are then real, not simulated.
+
+The pytree functions in ``core.easgd`` are the mathematical oracle
+(eqs. 1–6 of the paper); equivalence is pinned by tests.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.easgd import EASGDConfig
+
+# algorithm families (names match core.async_engine.ALGORITHMS)
+EASGD_WORKER_RULE = ("original_easgd", "async_easgd", "hogwild_easgd",
+                     "sync_easgd")
+SYNC_FAMILY = ("sync_sgd", "sync_easgd")
+ASYNC_FAMILY = ("async_sgd", "async_easgd", "async_msgd", "async_measgd")
+HOGWILD_FAMILY = ("hogwild_sgd", "hogwild_easgd")
+
+
+def uses_velocity(algorithm: str) -> bool:
+    """Does the worker-side rule carry a velocity buffer V⁽ⁱ⁾?"""
+    return algorithm in ("async_msgd", "async_measgd")
+
+
+def worker_step(algorithm: str, w: np.ndarray, v: np.ndarray,
+                grad: np.ndarray, center: np.ndarray,
+                cfg: EASGDConfig) -> None:
+    """Worker-side update, in place on (w, v).
+
+    EASGD rule (eq 1):   W ← W − η(ΔW + ρ(W − W̄))
+    MEASGD (eqs 5–6):    V ← μV − ηΔW;  W ← W + V − ηρ(W − W̄)
+    MSGD (eqs 3–4):      V ← μV − ηΔW;  W ← W + V
+    SGD:                 W ← W − ηΔW
+    """
+    eta, rho, mu = cfg.eta, cfg.rho, cfg.mu
+    if algorithm in EASGD_WORKER_RULE:
+        w -= eta * (grad + rho * (w - center))
+    elif algorithm == "async_measgd":
+        v[:] = mu * v - eta * grad
+        w += v - cfg.alpha * (w - center)
+    elif algorithm == "async_msgd":
+        v[:] = mu * v - eta * grad
+        w += v
+    else:  # sgd family: worker tracks the master copy
+        w -= eta * grad
+
+
+def master_absorb(algorithm: str, center: np.ndarray,
+                  master_vel: np.ndarray, w_i: np.ndarray, v_i: np.ndarray,
+                  grad: np.ndarray, cfg: EASGDConfig) -> None:
+    """Process ONE worker arrival at the master (async / Hogwild families),
+    in place on (center, master_vel, w_i, v_i).
+
+    SGD:    W̄ ← W̄ − ηΔW;                     worker re-reads W̄
+    MSGD:   V̄ ← μV̄ − ηΔW;  W̄ ← W̄ + V̄;      worker re-reads W̄
+    elastic: worker rule (eq 1 / 5–6), then W̄ ← W̄ + ηρ(W⁽ⁱ⁾ − W̄)
+             (paper Alg. 1 line 14 — one worker at a time).
+
+    Under the FCFS lock this whole block is atomic; lock-free (Hogwild) it
+    races for real.
+    """
+    if algorithm in ("async_sgd", "hogwild_sgd"):
+        center -= cfg.eta * grad
+        w_i[:] = center
+    elif algorithm == "async_msgd":
+        master_vel[:] = cfg.mu * master_vel - cfg.eta * grad
+        center += master_vel
+        w_i[:] = center
+    else:  # async_easgd / async_measgd / hogwild_easgd
+        worker_step(algorithm, w_i, v_i, grad, center, cfg)
+        center += cfg.alpha * (w_i - center)
+
+
+def master_absorb_round_robin(center: np.ndarray, w_j: np.ndarray,
+                              v_j: np.ndarray, grad: np.ndarray,
+                              cfg: EASGDConfig) -> None:
+    """Original EASGD's serialized turn: worker rule + single-worker center
+    pull, executed while worker j holds its round-robin turn."""
+    worker_step("original_easgd", w_j, v_j, grad, center, cfg)
+    center += cfg.alpha * (w_j - center)
+
+
+def sync_master_easgd(center: np.ndarray, mean_w: np.ndarray, p: int,
+                      cfg: EASGDConfig) -> None:
+    """Eq 2 given the cross-worker mean of the PRE-update weights:
+    W̄ ← W̄ + ηρP(mean − W̄)."""
+    center += cfg.alpha * p * (mean_w - center)
+
+
+def sync_master_sgd(center: np.ndarray, master_vel: np.ndarray,
+                    gmean: np.ndarray, cfg: EASGDConfig) -> None:
+    """Synchronous momentum SGD on the mean gradient:
+    V̄ ← μV̄ − η·ḡ;  W̄ ← W̄ + V̄."""
+    master_vel[:] = cfg.mu * master_vel - cfg.eta * gmean
+    center += master_vel

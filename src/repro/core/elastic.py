@@ -39,6 +39,7 @@ from jax.sharding import PartitionSpec as P
 from repro.comm import plan as comm_plan
 from repro.comm import schedules as comm_schedules
 from repro.core import compression as compression_lib
+from repro.core import costmodel
 from repro.core.easgd import EASGDConfig
 from repro.utils.jaxcompat import shard_map
 from repro.utils.pytree import tree_map
@@ -50,7 +51,9 @@ class ElasticConfig:
     mode: str = "sync_easgd"        # "sync_easgd" | "msgd" (plain DP baseline)
     packed: bool = True             # paper §5.2: single-buffer exchange
     schedule: str = "psum"          # repro.comm schedule for the packed
-    #                                 cross-pod collective (paper §5.1/§6.1)
+    #                                 cross-pod collective (paper §5.1/§6.1);
+    #                                 "auto" picks via comm.choose from the
+    #                                 packed wire bytes + pod count at build
     compression: str = "none"       # none | bf16 | sign_ef (cross-pod only)
     overlap: bool = True            # paper §6.1.3 (Sync EASGD3)
     momentum_dtype: Any = jnp.float32
@@ -58,14 +61,32 @@ class ElasticConfig:
 
     def __post_init__(self):
         assert self.mode in ("sync_easgd", "msgd"), self.mode
-        comm_schedules.get(self.schedule)       # validate
+        if self.schedule != "auto":
+            comm_schedules.get(self.schedule)   # validate
         compression_lib.get(self.compression)   # validate
 
-    def exchange_plan(self, axis_name: str | None,
-                      n_total: int) -> comm_plan.ExchangePlan:
-        """The fully-composed cross-pod exchange this config describes."""
+    def resolve_schedule(self, n_total: int,
+                         n_elements: int | None = None) -> str:
+        """Resolve "auto" to a concrete registry name via ``comm.choose``
+        on the POST-compression wire bytes over the cross-pod (DCI) link.
+        Without a buffer size, fall back to psum (XLA-native)."""
+        if self.schedule != "auto":
+            return self.schedule
+        if n_elements is None or n_total <= 1:
+            return "psum"
+        comp = compression_lib.get(self.compression)
+        wire = n_elements * comp.wire_bytes_per_element
+        return comm_schedules.choose(wire, n_total, costmodel.TPU_DCI)
+
+    def exchange_plan(self, axis_name: str | None, n_total: int,
+                      n_elements: int | None = None
+                      ) -> comm_plan.ExchangePlan:
+        """The fully-composed cross-pod exchange this config describes.
+        ``n_elements`` (packed fp32 buffer size) feeds the "auto" schedule
+        choice; ignored for a concrete schedule name."""
         return comm_plan.make_plan(
-            schedule=self.schedule, compression=self.compression,
+            schedule=self.resolve_schedule(n_total, n_elements),
+            compression=self.compression,
             overlap=self.overlap, axis_name=axis_name, n_total=n_total)
 
 
@@ -239,9 +260,11 @@ def _exchange_packed(state, grads, cfg, mesh, param_specs, pod_axis,
     n_pods = n_pods_of(state)
     pod_in_mesh = pod_axis is not None and pod_axis in mesh.axis_names
     if plan is None:
+        n_elems = sum(l.size for l in
+                      jax.tree_util.tree_leaves(state.params)) // n_pods
         plan = cfg.exchange_plan(
             axis_name=pod_axis if (n_pods > 1 and pod_in_mesh) else None,
-            n_total=n_pods)
+            n_total=n_pods, n_elements=n_elems)
 
     specs = state_specs(param_specs, cfg,
                         pod_axis if (n_pods > 1 and pod_in_mesh) else None)

@@ -4,6 +4,14 @@ with preemption watchdog and elastic-restart support.
     PYTHONPATH=src python -m repro.launch.train --arch gemma3-4b \
         --reduced --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/run1
 
+``--mode ps`` instead runs the repro.ps parameter-server runtime: any of
+the paper's nine algorithms (or ``--algorithm all``) executed for real on
+the thread or multiprocessing transport, with measured vs DES-predicted
+per-iteration time printed side by side:
+
+    PYTHONPATH=src python -m repro.launch.train --mode ps \
+        --algorithm hogwild_easgd --transport thread --ps-workers 4
+
 On this CPU container use --reduced; on a real cluster drop it and point
 --mesh at the production topology.
 """
@@ -25,8 +33,43 @@ from repro.launch.mesh import make_host_mesh, n_pods_of
 from repro.runtime.train import build_train_step
 
 
+def run_ps_mode(args) -> list:
+    """--mode ps: execute algorithms on the real parameter-server runtime
+    and cross-check the measured clock against the calibrated DES."""
+    import dataclasses as _dc
+
+    from repro import ps
+    from repro.core import costmodel
+
+    algos = (list(ps.ALGORITHMS) if args.algorithm == "all"
+             else [args.algorithm])
+    easgd = EASGDConfig(eta=args.eta, rho=args.rho, mu=0.9, tau=args.tau)
+    net = costmodel.PS_WIRE if args.emulate == "wire" else None
+    base = ps.PSConfig(
+        algorithm=algos[0], n_workers=args.ps_workers,
+        transport=args.transport, schedule=args.schedule or "ring",
+        total_iters=args.ps_iters, eval_every_iters=args.ps_eval_every,
+        emulate_net=net)
+    cal = ps.calibrate(ps.NUMPY_MLP_MED, base)
+    out = []
+    for algo in algos:
+        cfg = _dc.replace(base, algorithm=algo)
+        res, _, rec = ps.run_vs_des(ps.NUMPY_MLP_MED, easgd, cfg, cal=cal)
+        print(f"{algo:16s} [{res.transport}/{res.schedule}] "
+              f"iters={res.total_iters} err={res.final_metric:.3f} "
+              f"measured={rec['measured_us_per_iter']:.1f}us/iter "
+              f"des={rec['des_us_per_iter']:.1f}us/iter "
+              f"ratio={rec['measured_over_des']:.2f} "
+              f"counters={res.counters}", flush=True)
+        out.append(res)
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="sync", choices=["sync", "ps"],
+                    help="sync: jitted multi-pod Sync-EASGD (default); "
+                         "ps: real parameter-server runtime (repro.ps)")
     ap.add_argument("--arch", default="gemma3-4b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=50)
@@ -38,8 +81,25 @@ def main(argv=None):
     ap.add_argument("--eta", type=float, default=0.02)
     ap.add_argument("--rho", type=float, default=0.01)
     ap.add_argument("--tau", type=int, default=1)
-    ap.add_argument("--schedule", default="psum", choices=list(comm.names()),
-                    help="cross-pod exchange schedule (repro.comm registry)")
+    ap.add_argument("--schedule", default=None,
+                    choices=list(comm.names()) + ["auto"],
+                    help="cross-pod exchange schedule (repro.comm registry; "
+                         "'auto' picks via comm.choose from buffer size and "
+                         "pod count at build time). Default: psum in sync "
+                         "mode, ring in ps mode")
+    # --mode ps options (repro.ps runtime)
+    ap.add_argument("--algorithm", default="all",
+                    help="ps algorithm (core.async_engine.ALGORITHMS) or "
+                         "'all'")
+    ap.add_argument("--transport", default="thread",
+                    choices=["thread", "process"])
+    ap.add_argument("--ps-workers", type=int, default=4)
+    ap.add_argument("--ps-iters", type=int, default=400)
+    ap.add_argument("--ps-eval-every", type=int, default=200)
+    ap.add_argument("--emulate", default="wire", choices=["wire", "none"],
+                    help="ps wire emulation: 'wire' sleeps each message's "
+                         "α+nβ under costmodel.PS_WIRE (paper's regime); "
+                         "'none' uses raw shared memory")
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable compute/comm overlap (Sync EASGD1/2 "
                          "baseline, paper §6.1.3)")
@@ -49,6 +109,10 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=5)
     args = ap.parse_args(argv)
 
+    if args.mode == "ps":
+        return run_ps_mode(args)
+
+    args.schedule = args.schedule or "psum"
     spec = configs.get(args.arch)
     cfg = spec.reduced if args.reduced else spec.config
     n_dev = jax.device_count()

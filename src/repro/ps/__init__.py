@@ -1,0 +1,29 @@
+"""repro.ps — the real asynchronous parameter-server runtime.
+
+Executes all nine algorithms of the paper (Original/Async/Hogwild EASGD,
+Async M(EA)SGD, Sync SGD/EASGD) on genuine shared-memory transports —
+in-process threads (lock / lock-free master) and multiprocessing — with the
+optimizer math shared with the DES simulator (``core.easgd_flat``) and the
+sync exchange executing the ``repro.comm`` registry's message rounds.
+See DESIGN.md §ps.
+"""
+from repro.core.async_engine import ALGORITHMS
+from repro.ps.problems import (
+    NUMPY_MLP,
+    NUMPY_MLP_LARGE,
+    NUMPY_MLP_MED,
+    ProblemSpec,
+    make_numpy_mlp,
+    spec,
+)
+from repro.ps.runtime import (
+    Calibration,
+    PSConfig,
+    PSResult,
+    calibrate,
+    calibrate_sim,
+    execute_rounds,
+    run_ps,
+    run_vs_des,
+)
+from repro.ps.transport import TRANSPORTS, get_transport

@@ -1,0 +1,131 @@
+"""Picklable, numpy-only training problems for the repro.ps runtime.
+
+The multiprocessing transport spawns workers with a fresh interpreter, so a
+problem is described by a ``ProblemSpec`` (dotted factory path + kwargs) and
+REBUILT inside each worker — no jax import in children, no pickling of
+jitted closures. The thread transport accepts either a spec or a prebuilt
+``(w0, grad_fn, eval_fn)`` triple (e.g. ``benchmarks.common.make_mlp_problem``,
+which is jax-backed).
+
+Contract (same as ``core.async_engine.PSEngine``):
+    grad_fn(w_flat, step, worker) -> grad_flat   # float64
+    eval_fn(w_flat) -> scalar metric             # e.g. test error
+
+Worker-private minibatch RNG streams are keyed by the worker id and advance
+one draw per call — so two independently-built instances of the same spec
+feed IDENTICAL gradients to the DES simulator and the real runtime whenever
+the per-worker call orders match. That is the substrate of the DES↔real
+bitwise cross-check.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import numpy as np
+
+from repro.data.synthetic import make_classification_dataset
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemSpec:
+    """factory = "module:function"; building imports the module and calls
+    ``function(**kwargs)`` -> (w0, grad_fn, eval_fn)."""
+
+    factory: str
+    kwargs: tuple = ()        # tuple of (key, value) pairs — hashable/picklable
+
+    def build(self):
+        mod_name, fn_name = self.factory.split(":")
+        fn = getattr(importlib.import_module(mod_name), fn_name)
+        return fn(**dict(self.kwargs))
+
+
+def spec(factory: str, **kwargs) -> ProblemSpec:
+    return ProblemSpec(factory=factory, kwargs=tuple(sorted(kwargs.items())))
+
+
+# ---------------------------------------------------------------------------
+# numpy MLP classification (manual backprop — no jax anywhere)
+# ---------------------------------------------------------------------------
+
+def _mlp_shapes(d_in, d_hidden, n_classes):
+    return ((d_in, d_hidden), (d_hidden,), (d_hidden, n_classes),
+            (n_classes,))
+
+
+def _unpack(w, shapes):
+    out, off = [], 0
+    for s in shapes:
+        size = int(np.prod(s))
+        out.append(w[off:off + size].reshape(s))
+        off += size
+    return out
+
+
+def make_numpy_mlp(seed: int = 0, n_train: int = 2048, n_test: int = 512,
+                   d_in: int = 32, d_hidden: int = 32, n_classes: int = 4,
+                   batch: int = 16, noise: float = 1.6):
+    """One-hidden-layer tanh MLP on the Gaussian-mixture task; gradients by
+    hand so worker processes never touch jax. Returns (w0, grad_fn, eval_fn)
+    with w0 float64 flat."""
+    x, y = make_classification_dataset(n_train + n_test, shape=(d_in,),
+                                       n_classes=n_classes, noise=noise,
+                                       seed=seed)
+    x = x.astype(np.float64)
+    xtr, ytr = x[:n_train], y[:n_train]
+    xte, yte = x[n_train:], y[n_train:]
+    shapes = _mlp_shapes(d_in, d_hidden, n_classes)
+    rng = np.random.RandomState(seed + 1)
+    w0 = np.concatenate([
+        (rng.randn(*s) / np.sqrt(max(s[0], 1) if len(s) > 1 else 1)
+         ).reshape(-1)
+        for s in shapes]).astype(np.float64)
+
+    def forward(w, xb):
+        w1, b1, w2, b2 = _unpack(w, shapes)
+        h = np.tanh(xb @ w1 + b1)
+        return h, h @ w2 + b2
+
+    rngs = {}
+
+    def grad_fn(w, step, worker):
+        r = rngs.setdefault(worker, np.random.RandomState(1000 + worker))
+        idx = r.randint(0, n_train, size=batch)
+        xb, yb = xtr[idx], ytr[idx]
+        w1, b1, w2, b2 = _unpack(w, shapes)
+        h, logits = forward(w, xb)
+        logits -= logits.max(axis=1, keepdims=True)
+        p = np.exp(logits)
+        p /= p.sum(axis=1, keepdims=True)
+        p[np.arange(batch), yb] -= 1.0
+        p /= batch                              # d loss / d logits
+        dw2 = h.T @ p
+        db2 = p.sum(axis=0)
+        dh = (p @ w2.T) * (1.0 - h * h)
+        dw1 = xb.T @ dh
+        db1 = dh.sum(axis=0)
+        return np.concatenate([dw1.reshape(-1), db1, dw2.reshape(-1), db2])
+
+    def eval_fn(w):
+        _, logits = forward(w, xte)
+        return float(np.mean(logits.argmax(axis=1) != yte))
+
+    return w0, grad_fn, eval_fn
+
+
+NUMPY_MLP = spec("repro.ps.problems:make_numpy_mlp")
+
+# the BENCH_ps_runtime problem (~9k params, ~70 KB packed): small enough
+# that this box's compute noise stays small in absolute terms, while the
+# emulated wire (costmodel.PS_WIRE) prices its full-model message at a few
+# ms — the paper's comm/compute regime
+NUMPY_MLP_MED = spec("repro.ps.problems:make_numpy_mlp",
+                     d_in=64, d_hidden=128, batch=32, n_train=4096,
+                     n_test=1024, n_classes=4)
+
+# a bandwidth-heavy variant (~68k params, ~0.5 MB packed) for experiments
+# where the exchange should cost real memory bandwidth
+NUMPY_MLP_LARGE = spec("repro.ps.problems:make_numpy_mlp",
+                       d_in=128, d_hidden=512, batch=32, n_train=4096,
+                       n_test=1024, n_classes=4)

@@ -1,0 +1,638 @@
+"""The repro.ps runtime: the paper's nine algorithms EXECUTED, not simulated.
+
+Same optimizer math as the DES simulator (``core.easgd_flat`` — shared, not
+copied), same exchange registry (``repro.comm`` — the sync family executes
+the registered schedule's ``Schedule.rounds`` message pattern over the
+transport mailboxes), but time is wall-clock and concurrency is real
+threads/processes on shared memory.
+
+Concurrency disciplines (paper §4–5):
+
+ * ``original_easgd`` — round-robin TURNSTILE: the master serves workers
+   strictly in rank order (Θ(P) serialized exchange, the paper's baseline).
+ * ``async_*``        — FCFS: workers hit the master lock in arrival order;
+   with ``deterministic=True`` the turnstile replaces the lock, which is
+   exactly the zero-jitter event order of the DES — the bitwise DES↔real
+   cross-check runs in this mode.
+ * ``hogwild_*``      — the SAME absorb with NO lock. Lock-free for real:
+   concurrent in-place numpy updates tear and interleave.
+ * ``sync_*``         — barriered rounds; the weight (EASGD) or gradient
+   (SGD) all-reduce runs the registered schedule's message rounds in a comm
+   executor thread. Sync EASGD posts start-of-step weights BEFORE computing
+   gradients, so the exchange genuinely overlaps compute (paper §6.1.3);
+   sync SGD needs the gradients first, so it cannot (§5.1).
+
+τ (communication period) is 1 throughout, matching the DES engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.comm import schedules as comm_schedules
+from repro.core import costmodel, easgd_flat
+from repro.core.async_engine import ALGORITHMS, PSEngine, SimConfig
+from repro.core.easgd import EASGDConfig
+from repro.ps.transport import PSContext, get_transport
+
+SYNC = easgd_flat.SYNC_FAMILY
+
+# default α–β network (only prices psum's butterfly-vs-ring choice for the
+# sync rounds; the measured run doesn't consult it)
+_DEFAULT_NET = costmodel.Network("PCIe3x16", 5e-6, 1 / 12e9)
+
+
+@dataclasses.dataclass(frozen=True)
+class PSConfig:
+    algorithm: str
+    n_workers: int = 4
+    transport: str = "thread"        # "thread" | "process"
+    schedule: str = "ring"           # sync-family exchange ("auto" allowed)
+    total_iters: int = 1000
+    deterministic: bool = False      # cyclic admission == DES zero-jitter
+    eval_every_iters: int = 200
+    net: costmodel.Network = _DEFAULT_NET
+    # netem-style wire emulation: every master message / exchange round
+    # ADDITIONALLY sleeps its α+nβ under this network (None: shared memory
+    # IS the wire). The bytes still move and the concurrency discipline
+    # still decides what serializes, overlaps, or amortizes — the sleep
+    # restores the interconnect-bound regime the paper ran in (10GbE/IB),
+    # which a single box's memcpy cannot reproduce. Charge the SAME network
+    # to the DES (Calibration.sim_config(net=...)) for a fair cross-check.
+    emulate_net: Optional[costmodel.Network] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.algorithm in ALGORITHMS, self.algorithm
+
+    def resolved_schedule(self, n_bytes: float) -> str:
+        if self.schedule == "auto":
+            return comm_schedules.choose(n_bytes, self.n_workers, self.net)
+        return comm_schedules.get(self.schedule).name
+
+    def t_msg_emulated(self, n_bytes: float) -> float:
+        """Per-message emulated wire time (0 without emulation)."""
+        if self.emulate_net is None:
+            return 0.0
+        return costmodel.t_msg(n_bytes, self.emulate_net)
+
+
+@dataclasses.dataclass
+class PSResult:
+    algorithm: str
+    transport: str
+    schedule: str
+    history: list                    # [(wall_s, total_iters, metric)]
+    total_time_s: float
+    total_iters: int
+    counters: dict                   # sync_rounds / messages / wire_bytes
+    final_metric: float
+    center: np.ndarray
+    workers: np.ndarray              # (P, n) final worker weights
+
+
+# ---------------------------------------------------------------------------
+# the sync-family exchange: execute the registry's message rounds
+# ---------------------------------------------------------------------------
+
+def _sleep_until(deadline: float) -> None:
+    """Absolute-deadline sleep (``time.monotonic`` clock): oversleeps on a
+    loaded box don't accumulate — the next deadline is computed from the
+    schedule, not from when this sleep happened to return."""
+    dt = deadline - time.monotonic()
+    if dt > 0:
+        time.sleep(dt)
+
+
+def _apply_round(mailbox, n: int, rnd, counters=None) -> None:
+    """One message round: receivers read the senders' PRE-round values
+    (snapshot, then apply) — messages within a round are concurrent."""
+    payloads = []
+    for m in rnd:
+        src = mailbox[m.src]
+        if m.chunk is None:
+            payloads.append((m, src[:].copy()))
+        else:
+            payloads.append(
+                (m, src.reshape(m.chunks, -1)[m.chunk].copy()))
+    for m, pay in payloads:
+        dst = mailbox[m.dst]
+        tgt = dst if m.chunk is None else \
+            dst.reshape(m.chunks, -1)[m.chunk]
+        if m.op == "add":
+            tgt += pay
+        else:
+            tgt[:] = pay
+    if counters is not None:
+        counters["sync_rounds"].value += 1
+        counters["messages"].value += len(rnd)
+        counters["wire_bytes"].value += int(
+            sum(m.frac for m in rnd) * n * 8)
+
+
+def execute_rounds(mailbox, n: int, rounds, counters=None) -> None:
+    """Apply one allreduce = the schedule's message rounds over the mailbox
+    (rows 0..P-1 = workers, row P = the master endpoint used by
+    round_robin). Rounds are serialized — the execution IS the α–β model's
+    structure.
+    """
+    mailbox[-1].fill(0.0)            # master endpoint accumulates from zero
+    for rnd in rounds:
+        _apply_round(mailbox, n, rnd, counters)
+
+
+def _comm_executor(ctx: PSContext) -> None:
+    """The sync family's 'NIC': runs the allreduce rounds between barriers
+    A and B of every training round while the workers compute (Sync EASGD —
+    real overlap) or wait (Sync SGD). sync_easgd's version-flipped center
+    needs no post-update barrier (see ``_sync_worker``), so its round has
+    two barriers; sync_sgd keeps a third."""
+    v = ctx.views()
+    counters = {"sync_rounds": ctx.sync_rounds, "messages": ctx.messages,
+                "wire_bytes": ctx.wire_bytes}
+    n_rounds = -(-ctx.cfg.total_iters // ctx.cfg.n_workers)
+    third = ctx.cfg.algorithm == "sync_sgd"
+    # emulated wire: the message rounds serialize, so one exchange costs
+    # Σ (α + max_frac·n·β) on top of the real copies — paced as a single
+    # absolute deadline per exchange to be robust to oversleep
+    t_wire = sum(
+        ctx.cfg.t_msg_emulated(max(m.frac for m in rnd) * ctx.n * 8)
+        for rnd in ctx.rounds)
+    try:
+        for _ in range(n_rounds):
+            ctx.barrier.wait()       # A: mailboxes posted
+            deadline = time.monotonic() + t_wire
+            execute_rounds(v.mailbox, ctx.n, ctx.rounds, counters)
+            if t_wire:
+                _sleep_until(deadline)
+            ctx.barrier.wait()       # B: exchange complete
+            if third:
+                ctx.barrier.wait()   # C: master update complete
+    except threading.BrokenBarrierError:
+        pass
+    except Exception:                # noqa: BLE001 — surface via err flag
+        ctx.err.value = 1
+        ctx.barrier.abort()
+
+
+# ---------------------------------------------------------------------------
+# worker loops
+# ---------------------------------------------------------------------------
+
+def worker_main(ctx: PSContext, wid: int) -> None:
+    w0, grad_fn, _ = ctx.built_problem()
+    # warm caches/pages before the start gate so the measured clock sees
+    # steady state; ids ≤ −2 are private RNG streams (worker streams and
+    # therefore the DES↔real iterate equality are untouched)
+    wu = np.asarray(w0, np.float64).copy()
+    for k in range(2):
+        grad_fn(wu, k, -(wid + 2))
+    ctx.start_barrier.wait()
+    algo = ctx.cfg.algorithm
+    if algo in SYNC:
+        _sync_worker(ctx, wid, grad_fn)
+    elif algo == "original_easgd" or ctx.cfg.deterministic:
+        _turnstile_worker(ctx, wid, grad_fn)
+    elif algo.startswith("hogwild"):
+        _hogwild_worker(ctx, wid, grad_fn)
+    else:
+        _fcfs_worker(ctx, wid, grad_fn)
+
+
+def _turnstile_worker(ctx, wid, grad_fn):
+    """Strict cyclic admission: worker ``turn % P`` owns the master next.
+    This is Original EASGD's round-robin wire — and, for the async family
+    under ``deterministic=True``, exactly the DES zero-jitter event order.
+
+    original_easgd computes its gradient INSIDE the turn: the master serves
+    one worker at a time end to end, so the whole pipeline serializes —
+    the Θ(P) behavior the paper attacks (and what the DES charges). The
+    async family computes ahead of the turn (w⁽ⁱ⁾ only changes during our
+    own turn and the gradient never reads W̄, so the iterates are identical
+    either way — only the clock differs)."""
+    v, e = ctx.views(), ctx.easgd
+    algo, P, total = ctx.cfg.algorithm, ctx.cfg.n_workers, ctx.cfg.total_iters
+    w, vel = v.workers_w[wid], v.workers_v[wid]
+    serial_compute = algo == "original_easgd"
+    t_msg = ctx.cfg.t_msg_emulated(ctx.n * 8)
+    local_step = 0
+    while True:
+        grad = None if serial_compute else grad_fn(w, local_step, wid)
+        with ctx.turn_cond:
+            while ctx.turn.value < total and ctx.turn.value % P != wid:
+                ctx.turn_cond.wait(0.05)
+            if ctx.turn.value >= total:
+                ctx.turn_cond.notify_all()
+                return
+            if t_msg:                        # master → worker (W̄ down)
+                _sleep_until(time.monotonic() + t_msg)
+            if serial_compute:
+                grad = grad_fn(w, local_step, wid)
+                easgd_flat.master_absorb_round_robin(
+                    v.center, w, vel, grad, e)
+            else:
+                easgd_flat.master_absorb(
+                    algo, v.center, v.master_vel, w, vel, grad, e)
+            if t_msg:                        # worker → master (W⁽ⁱ⁾ up)
+                _sleep_until(time.monotonic() + t_msg)
+            ctx.turn.value += 1
+            ctx.iters.value += 1
+            ctx.messages.value += 2          # worker↔master, both ways
+            ctx.wire_bytes.value += 2 * ctx.n * 8
+            ctx.turn_cond.notify_all()
+        local_step += 1
+
+
+def _fcfs_worker(ctx, wid, grad_fn):
+    """Async family: first-come-first-served on the master lock."""
+    v, e = ctx.views(), ctx.easgd
+    algo, total = ctx.cfg.algorithm, ctx.cfg.total_iters
+    w, vel = v.workers_w[wid], v.workers_v[wid]
+    t_msg = ctx.cfg.t_msg_emulated(ctx.n * 8)
+    local_step = 0
+    while ctx.iters.value < total:
+        grad = grad_fn(w, local_step, wid)
+        deadline = None
+        with ctx.master_lock:
+            if ctx.iters.value >= total:
+                return
+            if t_msg:
+                # the ONE master link serializes both messages of every
+                # exchange: reserve wire time as an absolute deadline (the
+                # sleep happens OUTSIDE the lock — the wire is busy, the
+                # master CPU is not)
+                start = max(time.monotonic(), ctx.wire_free_at.value)
+                deadline = start + 2 * t_msg
+                ctx.wire_free_at.value = deadline
+            easgd_flat.master_absorb(
+                algo, v.center, v.master_vel, w, vel, grad, e)
+            ctx.iters.value += 1
+            ctx.messages.value += 2
+            ctx.wire_bytes.value += 2 * ctx.n * 8
+        if deadline is not None:
+            _sleep_until(deadline)
+        local_step += 1
+
+
+def _hogwild_worker(ctx, wid, grad_fn):
+    """The SAME absorb as FCFS with NO lock — concurrent in-place updates
+    of the shared center interleave (and tear) for real. Termination is by
+    per-worker quota: the racy shared counter is monitoring-only."""
+    v, e = ctx.views(), ctx.easgd
+    algo, P, total = ctx.cfg.algorithm, ctx.cfg.n_workers, ctx.cfg.total_iters
+    w, vel = v.workers_w[wid], v.workers_v[wid]
+    t_msg = ctx.cfg.t_msg_emulated(ctx.n * 8)
+    quota = total // P + (1 if wid < total % P else 0)
+    for local_step in range(quota):
+        grad = grad_fn(w, local_step, wid)
+        deadline = (time.monotonic() + 2 * t_msg) if t_msg else None
+        easgd_flat.master_absorb(
+            algo, v.center, v.master_vel, w, vel, grad, e)
+        if deadline is not None:
+            _sleep_until(deadline)           # lock-free: wire times OVERLAP
+        ctx.iters.value += 1                 # racy — monitoring only
+        ctx.messages.value += 2
+        ctx.wire_bytes.value += 2 * ctx.n * 8
+
+
+def _sync_worker(ctx, wid, grad_fn):
+    """Barriered rounds; barriers are shared with the comm executor.
+
+    sync_easgd: post W_t → [A] → grad ∥ allreduce → [B] → worker rule →
+                rank 0 applies eq 2. TWO barriers per round: W̄ is
+                version-flipped — round k reads W̄[k mod 2] while rank 0
+                writes W̄[(k+1) mod 2], so the center update needs no
+                post-update barrier (real readers and the writer never
+                touch the same buffer; the next round's A orders the flip).
+    sync_sgd:   grad → post → [A] → allreduce (workers idle — a gradient
+                exchange cannot overlap its own compute, §5.1) → [B] →
+                rank 0 momentum step on ḡ → [C] → all copy W̄.
+    """
+    v, e = ctx.views(), ctx.easgd
+    algo, P, total = ctx.cfg.algorithm, ctx.cfg.n_workers, ctx.cfg.total_iters
+    w, vel = v.workers_w[wid], v.workers_v[wid]
+    n = ctx.n
+    n_rounds = -(-total // P)
+    if algo == "sync_easgd":
+        versions = (v.center, v.center_alt)
+        for step in range(n_rounds):
+            c_read, c_write = versions[step % 2], versions[(step + 1) % 2]
+            v.mailbox[wid, :n] = w           # start-of-step weights
+            ctx.barrier.wait()               # A — exchange begins
+            grad = grad_fn(w, step, wid)     # …and overlaps this compute
+            ctx.barrier.wait()               # B — sum of W_t in every row
+            easgd_flat.worker_step(algo, w, vel, grad, c_read, e)
+            if wid == 0:
+                c_write[:] = c_read
+                easgd_flat.sync_master_easgd(
+                    c_write, v.mailbox[0, :n] / P, P, e)
+                ctx.iters.value += P
+        # NOTE: after an odd round count the final W̄ lives in center_alt;
+        # the LAUNCHER copies it back post-join (doing it here would race
+        # with the other workers' last worker_step, which reads .center)
+        return
+    for step in range(n_rounds):             # sync_sgd
+        grad = grad_fn(w, step, wid)
+        v.mailbox[wid, :n] = grad
+        ctx.barrier.wait()                   # A — gradient allreduce
+        ctx.barrier.wait()                   # B
+        if wid == 0:
+            easgd_flat.sync_master_sgd(
+                v.center, v.master_vel, v.mailbox[0, :n] / P, e)
+            ctx.iters.value += P
+        ctx.barrier.wait()                   # C — W̄ updated
+        w[:] = v.center
+
+
+# ---------------------------------------------------------------------------
+# the launcher
+# ---------------------------------------------------------------------------
+
+def run_ps(problem, easgd: EASGDConfig, cfg: PSConfig,
+           eval_fn_override=None, join_timeout_s: float = 600.0) -> PSResult:
+    """Run one algorithm for real. ``problem`` is a ``ProblemSpec`` or a
+    prebuilt (w0, grad_fn, eval_fn) triple (thread transport only)."""
+    tr = get_transport(cfg.transport)
+    built = problem.build() if hasattr(problem, "build") else problem
+    w0, _, eval_fn = built
+    if eval_fn_override is not None:
+        eval_fn = eval_fn_override
+    w0 = np.asarray(w0, np.float64)
+    n, P = w0.size, cfg.n_workers
+    sched_name = cfg.resolved_schedule(n * 8)
+    rounds = (comm_schedules.get(sched_name).rounds(P, n * 8, cfg.net)
+              if cfg.algorithm in SYNC else [])
+    padded = n + (-n) % max(P, 1)
+
+    shapes = {"center": (n,), "center_alt": (n,), "master_vel": (n,),
+              "workers_w": (P, n), "workers_v": (P, n),
+              "mailbox": (P + 1, padded)}
+    buffers = {k: tr.array(*shape) for k, shape in shapes.items()}
+    prims = {
+        "master_lock": tr.lock(),
+        "barrier": tr.barrier(P + 1),            # workers + comm executor
+        "start_barrier": tr.barrier(P + 1),      # workers + launcher
+        "turn_cond": tr.condition(),
+        "wire_free_at": tr.float_slot(),
+        "turn": tr.int_slot(), "iters": tr.int_slot(),
+        "sync_rounds": tr.int_slot(), "messages": tr.int_slot(),
+        "wire_bytes": tr.int_slot(), "err": tr.int_slot(),
+    }
+    worker_problem = built if tr.name == "thread" else problem
+    ctx = PSContext(cfg, easgd, n, padded, buffers, shapes, worker_problem,
+                    rounds, prims)
+    v = ctx.views()
+    v.center[:] = w0
+    v.center_alt[:] = w0
+    v.workers_w[:] = w0[None]
+
+    handles = tr.launch(ctx)
+    comm_thread = None
+    if cfg.algorithm in SYNC:
+        comm_thread = threading.Thread(target=_comm_executor, args=(ctx,),
+                                       daemon=True)
+        comm_thread.start()
+
+    # watchdog: a worker dying outside our try/except (e.g. a spawn-import
+    # failure) must break the barriers instead of hanging the launcher
+    stop_watch = threading.Event()
+
+    def _watchdog():
+        while not stop_watch.is_set():
+            for h in handles:
+                if getattr(h, "exitcode", None) not in (None, 0):
+                    ctx.err.value = 1
+                    for b in (ctx.barrier, ctx.start_barrier):
+                        try:
+                            b.abort()
+                        except Exception:    # noqa: BLE001
+                            pass
+                    return
+            time.sleep(0.05)
+
+    watchdog = threading.Thread(target=_watchdog, daemon=True)
+    watchdog.start()
+    try:
+        ctx.start_barrier.wait(join_timeout_s)   # workers built problems
+    except threading.BrokenBarrierError:
+        stop_watch.set()
+        tr.join(handles, timeout=1.0)
+        raise RuntimeError(
+            f"ps workers failed to start (algorithm={cfg.algorithm}, "
+            f"transport={cfg.transport})") from None
+    t0 = time.perf_counter()
+    history, last_eval = [], 0
+    deadline = t0 + join_timeout_s
+    while any(h.is_alive() for h in handles):
+        if ctx.err.value:
+            break
+        it = ctx.iters.value
+        if it - last_eval >= cfg.eval_every_iters:
+            history.append((time.perf_counter() - t0, it,
+                            float(eval_fn(v.center.copy()))))
+            last_eval = it
+        if time.perf_counter() > deadline:
+            break
+        time.sleep(1e-3)
+    total_time = time.perf_counter() - t0
+    stop_watch.set()
+    ok = tr.join(handles, timeout=5.0)
+    if comm_thread is not None:
+        comm_thread.join(timeout=5.0)
+    if ctx.err.value or not ok:
+        raise RuntimeError(
+            f"ps run failed (algorithm={cfg.algorithm}, "
+            f"transport={cfg.transport}, err={ctx.err.value}, joined={ok})")
+
+    if cfg.algorithm == "sync_easgd" and (-(-cfg.total_iters // P)) % 2 == 1:
+        v.center[:] = v.center_alt           # final version of the flip
+    total_iters = (cfg.total_iters if cfg.algorithm.startswith("hogwild")
+                   else ctx.iters.value)
+    final = float(eval_fn(v.center.copy()))
+    history.append((total_time, total_iters, final))
+    return PSResult(
+        algorithm=cfg.algorithm, transport=cfg.transport,
+        schedule=sched_name if cfg.algorithm in SYNC else "master",
+        history=history, total_time_s=total_time, total_iters=total_iters,
+        counters={"sync_rounds": ctx.sync_rounds.value,
+                  "messages": ctx.messages.value,
+                  "wire_bytes": ctx.wire_bytes.value},
+        final_metric=final, center=v.center.copy(),
+        workers=v.workers_w.copy())
+
+
+# ---------------------------------------------------------------------------
+# DES calibration — so simulated and measured clocks are comparable
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Micro-benchmarked machine constants for DES↔real comparison.
+
+    ``t_grad_serial`` — one gradient on an otherwise idle box;
+    ``t_grad_concurrent`` — a worker's per-gradient WALL period when all P
+    workers run at once on this transport (measured with real threads /
+    real processes: GIL, caches, and cgroup CPU quotas included);
+    ``t_axpy`` / ``alpha`` — shared-memory 'wire' bandwidth and
+    small-message overhead.
+    """
+
+    n: int
+    n_workers: int
+    transport: str
+    t_grad_serial: float
+    t_grad_concurrent: float
+    t_axpy: float
+    alpha: float
+
+    def sim_config(self, algorithm: str, schedule: str,
+                   eval_every_iters: int = 200, seed: int = 0,
+                   net: Optional[costmodel.Network] = None) -> SimConfig:
+        """The DES's per-worker compute time depends on the concurrency
+        discipline: original_easgd serializes the whole pipeline (one
+        worker computes at a time, at full-core speed — and that is
+        exactly what it is criticized for); everyone else runs P workers
+        concurrently, so each 'device' delivers a gradient every
+        ``t_grad_concurrent``. Pass ``net`` = the run's
+        ``PSConfig.emulate_net`` so both clocks charge the same wire;
+        default: the measured shared-memory 'network'."""
+        if algorithm == "original_easgd":
+            t_compute = self.t_grad_serial
+        else:
+            t_compute = self.t_grad_concurrent
+        return SimConfig(
+            n_workers=self.n_workers,
+            net=net or costmodel.Network("shm", self.alpha,
+                                         self.t_axpy / (self.n * 8)),
+            schedule=schedule,
+            t_compute=t_compute,
+            compute_jitter=0.0,
+            t_update_per_byte=self.t_axpy / (self.n * 8),
+            eval_every_iters=eval_every_iters,
+            seed=seed)
+
+
+def _process_burner(problem, samples, wid, gate):
+    """Module-level so spawn can pickle it (process calibration)."""
+    w0, grad_fn, _ = problem.build()
+    w = np.asarray(w0, np.float64).copy()
+    for k in range(5):                       # warmup: imports, pages, caches
+        grad_fn(w, k, -(wid + 2))
+    gate.wait()
+    for k in range(samples):
+        grad_fn(w, k, -(wid + 2))
+
+
+def calibrate(problem, cfg: PSConfig, samples: int = 10) -> Calibration:
+    """Measure this box. Calibration gradients use worker ids ≤ −1
+    (private RNG streams), so a subsequent measured run's per-worker
+    streams are untouched."""
+    built = problem.build() if hasattr(problem, "build") else problem
+    w0, grad_fn, _ = built
+    w = np.asarray(w0, np.float64).copy()
+    n, P = w.size, cfg.n_workers
+    grad_fn(w, 0, -1)                        # warmup
+    t = time.perf_counter()
+    for k in range(samples):
+        grad_fn(w, k, -1)
+    t_serial = (time.perf_counter() - t) / samples
+
+    if cfg.transport == "thread":
+        # threads share one GIL: measure the real concurrent rate
+        def _burn(wid):
+            wl = w.copy()
+            for k in range(samples):
+                grad_fn(wl, k, -(wid + 2))
+        ths = [threading.Thread(target=_burn, args=(i,)) for i in range(P)]
+        t = time.perf_counter()
+        for th in ths:
+            th.start()
+        for th in ths:
+            th.join()
+        t_concurrent = (time.perf_counter() - t) / samples
+    elif hasattr(problem, "build"):
+        # real processes from a gate: spawn/import excluded from the clock
+        import multiprocessing
+        mp = multiprocessing.get_context("spawn")
+        gate = mp.Barrier(P + 1)
+        procs = [mp.Process(target=_process_burner,
+                            args=(problem, samples, i, gate), daemon=True)
+                 for i in range(P)]
+        for pr in procs:
+            pr.start()
+        gate.wait()
+        t = time.perf_counter()
+        for pr in procs:
+            pr.join()
+        t_concurrent = (time.perf_counter() - t) / samples
+    else:
+        ncores = os.cpu_count() or 1
+        t_concurrent = t_serial * max(1.0, P / ncores)
+
+    big, src = np.zeros(n), np.ones(n)
+    t = time.perf_counter()
+    for _ in range(10):
+        big += 0.5 * src
+    t_axpy = (time.perf_counter() - t) / 10
+    tiny_dst, tiny_src = np.zeros(64), np.ones(64)
+    t = time.perf_counter()
+    for _ in range(100):
+        np.copyto(tiny_dst, tiny_src)
+    alpha = (time.perf_counter() - t) / 100 + 15e-6   # + wakeup allowance
+    return Calibration(n=n, n_workers=P, transport=cfg.transport,
+                       t_grad_serial=t_serial, t_grad_concurrent=t_concurrent,
+                       t_axpy=t_axpy, alpha=alpha)
+
+
+def calibrate_sim(problem, cfg: PSConfig, samples: int = 10,
+                  eval_every_iters: Optional[int] = None) -> SimConfig:
+    """One-call convenience: ``calibrate`` + ``sim_config`` for cfg's own
+    algorithm/schedule."""
+    cal = calibrate(problem, cfg, samples=samples)
+    return cal.sim_config(
+        cfg.algorithm, cfg.resolved_schedule(cal.n * 8),
+        eval_every_iters=eval_every_iters or cfg.eval_every_iters,
+        seed=cfg.seed)
+
+
+def run_vs_des(problem, easgd: EASGDConfig, cfg: PSConfig,
+               cal: Optional[Calibration] = None) -> tuple:
+    """THE measured-vs-simulated comparison protocol, in one place (the
+    launch CLI and benchmarks/fig6_8 --real both use it): run ``cfg`` for
+    real AND through the DES calibrated on the same box, charging the DES
+    the run's own emulated wire. Returns (PSResult, RunResult, record) —
+    ``record`` is the flat JSON-ready comparison.
+    """
+    if cal is None:
+        cal = calibrate(problem, cfg)
+    built = problem.build() if hasattr(problem, "build") else problem
+    w0, grad_fn, eval_fn = built
+    sim = cal.sim_config(
+        cfg.algorithm, cfg.resolved_schedule(cal.n * 8),
+        eval_every_iters=cfg.eval_every_iters, seed=cfg.seed,
+        net=cfg.emulate_net)
+    des = PSEngine(grad_fn, eval_fn, np.asarray(w0, np.float64), easgd,
+                   sim).run(cfg.algorithm, total_iters=cfg.total_iters)
+    res = run_ps(problem, easgd, cfg)
+    meas = res.total_time_s / max(res.total_iters, 1)
+    pred = des.total_time_s / max(des.total_iters, 1)
+    record = {
+        "algorithm": cfg.algorithm,
+        "transport": cfg.transport,
+        "schedule": res.schedule,
+        "iters": res.total_iters,
+        "measured_us_per_iter": 1e6 * meas,
+        "des_us_per_iter": 1e6 * pred,
+        "measured_over_des": meas / pred,
+        "iters_per_sec": 1.0 / meas,
+        "final_err": res.final_metric,
+        "counters": res.counters,
+        "curve_real": [(round(t, 4), it, e) for t, it, e in res.history],
+        "curve_des": [(round(t, 4), it, e) for t, it, e in des.history],
+    }
+    return res, des, record

@@ -1,0 +1,199 @@
+"""Transports for the repro.ps parameter-server runtime: who owns the
+shared buffers and how workers execute.
+
+Two backends, one contract:
+
+ * ``thread``  — workers are ``threading.Thread``s in this process. The
+   master state is plain numpy; the FCFS master mutex is a
+   ``threading.Lock``; the Hogwild variants run the SAME in-place update
+   with NO lock, so torn/interleaved writes happen for real.
+ * ``process`` — workers are ``multiprocessing`` (spawn) processes; all
+   state lives in ``RawArray`` shared memory (lock-free by construction —
+   Hogwild races across address spaces). Problems must be given as a
+   ``ProblemSpec`` so each child rebuilds its gradient function without
+   pickling closures (and without importing jax).
+
+The master is not a thread: it is shared state plus a mutual-exclusion
+discipline (lock, turnstile, or barrier). Whoever holds the discipline
+executes the master update — exactly how shared-memory parameter servers
+are deployed. The launcher contributes two helper threads: the sync-family
+COMM EXECUTOR (runs the registered schedule's message rounds over the
+mailboxes, overlapping with worker compute — the DMA engine of this
+software NIC) and the monitor (eval snapshots).
+"""
+from __future__ import annotations
+
+import multiprocessing
+import threading
+from types import SimpleNamespace
+
+import numpy as np
+
+
+class _Slot:
+    """Thread-backend shared integer (mirrors mp.RawValue's .value)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, value=0):
+        self.value = value
+
+
+def _as_view(buf, shape):
+    if isinstance(buf, np.ndarray):
+        return buf.reshape(shape)
+    return np.frombuffer(buf, dtype=np.float64).reshape(shape)
+
+
+class PSContext:
+    """Everything a worker needs, picklable for spawn.
+
+    ``buffers`` maps name -> raw storage (numpy array for the thread
+    backend, mp.RawArray for the process backend); ``views()`` wraps them
+    as numpy arrays lazily on each side of the fork.
+    """
+
+    def __init__(self, cfg, easgd, n, padded, buffers, shapes, problem,
+                 rounds, prims):
+        self.cfg = cfg
+        self.easgd = easgd
+        self.n = n
+        self.padded = padded
+        self.buffers = buffers
+        self.shapes = shapes
+        self.problem = problem          # ProblemSpec, or (w0, grad, eval)
+        self.rounds = rounds            # sync-family message rounds
+        for k, v in prims.items():
+            setattr(self, k, v)
+        self._prim_names = tuple(prims)
+        self._v = None
+        self._built = None
+
+    def __getstate__(self):
+        d = dict(self.__dict__)
+        d["_v"] = None
+        d["_built"] = None
+        return d
+
+    def views(self) -> SimpleNamespace:
+        if self._v is None:
+            self._v = SimpleNamespace(**{
+                k: _as_view(self.buffers[k], self.shapes[k])
+                for k in self.buffers})
+        return self._v
+
+    def built_problem(self):
+        """(w0, grad_fn, eval_fn) — builds a ProblemSpec once per process."""
+        if self._built is None:
+            p = self.problem
+            self._built = p.build() if hasattr(p, "build") else p
+        return self._built
+
+
+def _worker_entry(ctx: PSContext, worker_id: int):
+    """Module-level so the spawn start method can pickle the target."""
+    from repro.ps import runtime
+    try:
+        runtime.worker_main(ctx, worker_id)
+    except Exception:                    # noqa: BLE001 — see err handling
+        ctx.err.value = 1
+        for b in (ctx.barrier, ctx.start_barrier):
+            try:
+                b.abort()
+            except Exception:            # noqa: BLE001
+                pass
+        raise
+
+
+class ThreadTransport:
+    name = "thread"
+
+    def array(self, *shape):
+        return np.zeros(shape, np.float64)
+
+    def int_slot(self):
+        return _Slot()
+
+    def float_slot(self):
+        return _Slot(0.0)
+
+    def lock(self):
+        return threading.Lock()
+
+    def condition(self):
+        return threading.Condition()
+
+    def barrier(self, parties):
+        return threading.Barrier(parties)
+
+    def launch(self, ctx: PSContext):
+        handles = [
+            threading.Thread(target=_worker_entry, args=(ctx, i), daemon=True)
+            for i in range(ctx.cfg.n_workers)
+        ]
+        for h in handles:
+            h.start()
+        return handles
+
+    def join(self, handles, timeout=None):
+        for h in handles:
+            h.join(timeout)
+        return not any(h.is_alive() for h in handles)
+
+
+class ProcessTransport:
+    name = "process"
+
+    def __init__(self):
+        self._mp = multiprocessing.get_context("spawn")
+
+    def array(self, *shape):
+        return self._mp.RawArray("d", int(np.prod(shape)))
+
+    def int_slot(self):
+        return self._mp.RawValue("l", 0)
+
+    def float_slot(self):
+        return self._mp.RawValue("d", 0.0)
+
+    def lock(self):
+        return self._mp.Lock()
+
+    def condition(self):
+        return self._mp.Condition()
+
+    def barrier(self, parties):
+        return self._mp.Barrier(parties)
+
+    def launch(self, ctx: PSContext):
+        if not hasattr(ctx.problem, "build"):
+            raise ValueError(
+                "process transport needs a ProblemSpec (module:function), "
+                "not prebuilt closures — children rebuild the problem")
+        handles = [
+            self._mp.Process(target=_worker_entry, args=(ctx, i), daemon=True)
+            for i in range(ctx.cfg.n_workers)
+        ]
+        for h in handles:
+            h.start()
+        return handles
+
+    def join(self, handles, timeout=None):
+        for h in handles:
+            h.join(timeout)
+        alive = [h for h in handles if h.is_alive()]
+        for h in alive:
+            h.terminate()
+        return not alive
+
+
+TRANSPORTS = {"thread": ThreadTransport, "process": ProcessTransport}
+
+
+def get_transport(name: str):
+    try:
+        return TRANSPORTS[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown transport '{name}', have {sorted(TRANSPORTS)}"
+        ) from None

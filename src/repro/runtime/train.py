@@ -75,11 +75,16 @@ def build_train_step(cfg: ModelConfig, ecfg: ElasticConfig, mesh,
     pspecs = shd.param_specs(cfg, mesh)
     pod_axis = "pod" if "pod" in mesh.axis_names else None
     sspecs = elastic.state_specs(pspecs, ecfg, pod_axis)
+    defs = tfm.model_defs(cfg)
+    abstract_p = abstract_params(defs, cfg.param_dtype)
+    n_param_elems = sum(
+        l.size for l in jax.tree_util.tree_leaves(abstract_p))
     # the ONE cross-pod exchange (schedule × packing × compression ×
-    # overlap), built once and executed by every step
+    # overlap), built once and executed by every step; "auto" resolves here
+    # from the packed wire bytes and pod count
     exchange_plan = ecfg.exchange_plan(
         axis_name=pod_axis if (n_pods > 1 and pod_axis is not None) else None,
-        n_total=n_pods)
+        n_total=n_pods, n_elements=n_param_elems)
     bspecs = shd.batch_specs(cfg, mesh, pod_dim=pod_axis is not None)
     assert per_pod_batch % microbatches == 0, (per_pod_batch, microbatches)
 
@@ -139,8 +144,6 @@ def build_train_step(cfg: ModelConfig, ecfg: ElasticConfig, mesh,
         }
         return new_state, out_metrics
 
-    defs = tfm.model_defs(cfg)
-    abstract_p = abstract_params(defs, cfg.param_dtype)
     abstract_state = elastic.init_abstract(abstract_p, ecfg, n_pods)
 
     def init_state():

@@ -154,3 +154,58 @@ def test_plan_overlap_hides_comm():
     t = plan.cost_s(n_elems, NET)
     assert plan.visible_cost_s(n_elems, NET, t_compute=2 * t) == 0.0
     assert blocking.visible_cost_s(n_elems, NET, t_compute=2 * t) == t
+
+
+# ---------------------------------------------------------------------------
+# first-class hierarchical schedule + ElasticConfig schedule="auto"
+# ---------------------------------------------------------------------------
+
+def test_hierarchical_is_registered_and_selectable():
+    assert "hierarchical" in comm.names()
+    from repro.core.elastic import ElasticConfig
+    cfg = ElasticConfig(schedule="hierarchical")
+    plan = cfg.exchange_plan("pod", 8)
+    assert plan.schedule.name == "hierarchical"
+    # pow2-only constraint surfaces at plan build, not deep in tracing
+    with pytest.raises(ValueError, match="power-of-two"):
+        comm.make_plan("hierarchical", axis_name="pod", n_total=6)
+
+
+def test_elastic_auto_schedule_resolution():
+    """schedule='auto' resolves through comm.choose from the packed wire
+    bytes and pod count at build time (latency-bound → butterfly,
+    bandwidth-bound → ring), and stays lazy without a buffer size."""
+    from repro.core import costmodel
+    from repro.core.elastic import ElasticConfig
+    cfg = ElasticConfig(schedule="auto")
+    assert cfg.resolve_schedule(8, 100) == "butterfly"
+    assert cfg.resolve_schedule(8, 50_000_000) == "ring"
+    assert cfg.resolve_schedule(8, 100) == comm.choose(
+        400, 8, costmodel.TPU_DCI)
+    assert cfg.resolve_schedule(1, 100) == "psum"       # single pod
+    assert cfg.resolve_schedule(8, None) == "psum"      # size unknown
+    plan = cfg.exchange_plan(None, 8, n_elements=50_000_000)
+    assert plan.schedule.name == "ring"
+    # compression shrinks the wire bytes the chooser sees
+    sign = ElasticConfig(schedule="auto", compression="sign_ef")
+    assert sign.resolve_schedule(8, 3000) == "butterfly"
+
+
+def test_auto_schedule_builds_train_step(subproc):
+    subproc("""
+        import warnings; warnings.filterwarnings('ignore')
+        import jax
+        from repro import configs
+        from repro.core.easgd import EASGDConfig
+        from repro.core.elastic import ElasticConfig
+        from repro.runtime.train import build_train_step
+        from repro.utils.jaxcompat import auto_mesh
+        mesh = auto_mesh((2, 2, 2), ('pod', 'data', 'model'))
+        cfg = configs.get('gemma3-4b').reduced
+        build = build_train_step(
+            cfg, ElasticConfig(easgd=EASGDConfig(), schedule='auto'), mesh,
+            n_pods=2, per_pod_batch=4, seq=16)
+        name = build.exchange_plan.schedule.name
+        assert name in ('butterfly', 'ring'), name
+        print('auto resolved to', name)
+    """)

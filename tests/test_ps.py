@@ -1,0 +1,287 @@
+"""repro.ps — the real parameter-server runtime.
+
+The contract under test, in three layers:
+
+ 1. ``core.easgd_flat`` (the optimizer math shared by the DES simulator and
+    the real runtime) is equivalent to the ``core.easgd`` pytree oracle.
+ 2. The ``repro.comm`` round structures are executable (a numpy executor
+    allreduces correctly for every registered schedule) and price exactly
+    like the closed-form cost functions the DES charges.
+ 3. DES↔real cross-check (the ISSUE's acceptance): with a fixed seed and
+    deterministic admission, the repro.ps runtime reproduces the
+    ``core.async_engine`` iterate sequence BITWISE (same event order ⇒ same
+    weights), and measured sync round counts equal the registry's round
+    structure.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import comm, ps
+from repro.core import costmodel, easgd_flat
+from repro.core import easgd as easgd_lib
+from repro.core.async_engine import ALGORITHMS, PSEngine, SimConfig
+from repro.core.easgd import EASGDConfig
+
+NET = costmodel.Network("test-net", 2e-6, 1 / 10e9)
+CFG = EASGDConfig(eta=0.05, rho=0.07, mu=0.9)
+
+
+# ---------------------------------------------------------------------------
+# (1) easgd_flat == core.easgd oracle
+# ---------------------------------------------------------------------------
+
+def _rand(n=64, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randn(n) for _ in range(4)]
+
+
+def test_flat_worker_rules_match_pytree_oracle():
+    w, g, c, v = _rand()
+    # eq 1 (EASGD worker rule)
+    for algo in easgd_flat.EASGD_WORKER_RULE:
+        w1 = w.copy()
+        easgd_flat.worker_step(algo, w1, v.copy(), g, c, CFG)
+        want = easgd_lib.easgd_worker_update(w, g, c, CFG)
+        np.testing.assert_allclose(w1, np.asarray(want), rtol=1e-12)
+    # eqs 5–6 (MEASGD)
+    w1, v1 = w.copy(), v.copy()
+    easgd_flat.worker_step("async_measgd", w1, v1, g, c, CFG)
+    want_w, want_v = easgd_lib.measgd_worker_update(w, v, g, c, CFG)
+    np.testing.assert_allclose(w1, np.asarray(want_w), rtol=1e-12)
+    np.testing.assert_allclose(v1, np.asarray(want_v), rtol=1e-12)
+    # eqs 3–4 (MSGD)
+    w1, v1 = w.copy(), v.copy()
+    easgd_flat.worker_step("async_msgd", w1, v1, g, c, CFG)
+    want_w, want_v = easgd_lib.msgd_update(w, v, g, CFG)
+    np.testing.assert_allclose(w1, np.asarray(want_w), rtol=1e-12)
+    # plain SGD
+    w1 = w.copy()
+    easgd_flat.worker_step("async_sgd", w1, v.copy(), g, c, CFG)
+    np.testing.assert_allclose(w1, np.asarray(easgd_lib.sgd_update(w, g, CFG)),
+                               rtol=1e-12)
+
+
+def test_flat_master_rules_match_pytree_oracle():
+    w, g, c, v = _rand(seed=1)
+    # async elastic absorb = worker rule + single-worker center pull
+    c1, w1 = c.copy(), w.copy()
+    easgd_flat.master_absorb("async_easgd", c1, v.copy(), w1, v.copy(), g,
+                             CFG)
+    w_want = np.asarray(easgd_lib.easgd_worker_update(w, g, c, CFG))
+    c_want = np.asarray(easgd_lib.center_update_single(c, w_want, CFG))
+    np.testing.assert_allclose(c1, c_want, rtol=1e-12)
+    # sync center update (eq 2, mean form)
+    c1 = c.copy()
+    easgd_flat.sync_master_easgd(c1, w, 4, CFG)
+    np.testing.assert_allclose(
+        c1, np.asarray(easgd_lib.center_update_from_mean(c, w, 4, CFG)),
+        rtol=1e-12)
+    # sync momentum SGD on the mean gradient == msgd_update
+    c1, v1 = c.copy(), v.copy()
+    easgd_flat.sync_master_sgd(c1, v1, g, CFG)
+    want_c, want_v = easgd_lib.msgd_update(c, v, g, CFG)
+    np.testing.assert_allclose(c1, np.asarray(want_c), rtol=1e-12)
+    np.testing.assert_allclose(v1, np.asarray(want_v), rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# (2) round structures: executable + priced like the closed forms
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(comm.names()))
+def test_rounds_cost_equals_closed_form(name):
+    sched = comm.get(name)
+    for p in (2, 4, 8, 16):
+        for n in (1e3, 4e6):
+            want = sched.cost(n, p, NET)
+            got = sched.cost_from_rounds(n, p, NET)
+            np.testing.assert_allclose(got, want, rtol=1e-12,
+                                       err_msg=f"{name} p={p}")
+    assert sched.rounds(1) == []
+
+
+def test_round_robin_rounds_any_p():
+    # round_robin is the only schedule without a pow2 constraint on rounds
+    for p in (3, 5, 6):
+        sched = comm.get("round_robin")
+        np.testing.assert_allclose(sched.cost_from_rounds(1e4, p, NET),
+                                   sched.cost(1e4, p, NET), rtol=1e-12)
+
+
+@pytest.mark.parametrize("name", list(comm.names()))
+def test_rounds_execute_allreduce(name):
+    """ps.execute_rounds applied to the registry's rounds must leave every
+    worker holding the global sum — for every schedule."""
+    rng = np.random.RandomState(0)
+    for p in (2, 4, 8):
+        n = 24
+        vals = rng.randn(p, n)
+        want = vals.sum(0)
+        mailbox = np.zeros((p + 1, n))
+        mailbox[:p] = vals
+        ps.execute_rounds(mailbox, n, comm.get(name).rounds(p, n * 8, NET))
+        for i in range(p):
+            np.testing.assert_allclose(mailbox[i], want, rtol=1e-12,
+                                       err_msg=f"{name} p={p} rank{i}")
+
+
+def test_hierarchical_cost_is_two_level():
+    """hierarchical = ring over the inner group + butterfly across groups."""
+    from repro.comm.schedules import _inner_size
+    for p in (4, 8, 16):
+        m = _inner_size(p)
+        want = (costmodel.t_ring_allreduce(1e6, m, NET)
+                + costmodel.t_butterfly_allreduce(1e6, p // m, NET))
+        np.testing.assert_allclose(comm.get("hierarchical").cost(1e6, p, NET),
+                                   want, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# (3) DES↔real cross-check
+# ---------------------------------------------------------------------------
+
+def _des_run(algo, P, iters):
+    w0, grad_fn, eval_fn = ps.make_numpy_mlp()
+    eng = PSEngine(grad_fn, eval_fn, w0, CFG,
+                   SimConfig(n_workers=P, compute_jitter=0.0, seed=0,
+                             schedule="round_robin"))
+    return eng.run(algo, total_iters=iters)
+
+
+def _real_run(algo, P, iters, **kw):
+    cfg = ps.PSConfig(algorithm=algo, n_workers=P, total_iters=iters,
+                      transport="thread", schedule="round_robin",
+                      deterministic=True, eval_every_iters=10**9, **kw)
+    return ps.run_ps(ps.NUMPY_MLP, CFG, cfg)
+
+
+@pytest.mark.parametrize("algo,P", [
+    ("async_easgd", 2), ("async_easgd", 4),
+    ("sync_easgd", 2), ("sync_easgd", 3), ("sync_easgd", 4),
+    ("original_easgd", 3), ("sync_sgd", 4), ("async_measgd", 2),
+])
+def test_des_real_iterates_bitwise(algo, P):
+    """The ISSUE's cross-check: identical event order ⇒ identical weights.
+    DES with zero jitter pops workers cyclically; the real runtime under
+    deterministic admission serves the same order; the round_robin sync
+    schedule accumulates in rank order exactly like np.mean. The SAME
+    in-place math (core.easgd_flat) then gives bit-identical float64
+    iterates — zero tolerance."""
+    iters = 72
+    des = _des_run(algo, P, iters)
+    real = _real_run(algo, P, iters)
+    assert des.total_iters == real.total_iters
+    np.testing.assert_array_equal(des.center, real.center)
+    np.testing.assert_array_equal(des.workers, real.workers)
+
+
+def test_des_real_close_under_tree_schedule():
+    """Non-rank-order schedules change only the SUMMATION ORDER of the
+    cross-worker mean — iterates agree to float64 reduction noise."""
+    iters, P = 60, 4
+    w0, grad_fn, eval_fn = ps.make_numpy_mlp()
+    eng = PSEngine(grad_fn, eval_fn, w0, CFG,
+                   SimConfig(n_workers=P, compute_jitter=0.0, seed=0,
+                             schedule="tree"))
+    des = eng.run("sync_easgd", total_iters=iters)
+    cfg = ps.PSConfig(algorithm="sync_easgd", n_workers=P, total_iters=iters,
+                      transport="thread", schedule="tree",
+                      deterministic=True, eval_every_iters=10**9)
+    real = ps.run_ps(ps.NUMPY_MLP, CFG, cfg)
+    np.testing.assert_allclose(real.center, des.center, rtol=1e-9, atol=1e-9)
+
+
+def test_emulated_wire_changes_clock_not_math():
+    """Wire emulation must only add (deadline-paced) time: the iterates
+    stay bitwise identical to the un-emulated run."""
+    slow_wire = costmodel.Network("tiny-emu", 1e-4, 1e-9)
+    a = _real_run("async_easgd", 2, 40)
+    b = _real_run("async_easgd", 2, 40, emulate_net=slow_wire)
+    np.testing.assert_array_equal(a.center, b.center)
+    assert b.total_time_s > 40 * 2 * 1e-4  # the wire time was actually paid
+
+
+@pytest.mark.parametrize("schedule", ["tree", "ring", "round_robin",
+                                      "hierarchical"])
+def test_sync_round_counts_match_registry(schedule):
+    """Measured rounds == training rounds × the registry's round count."""
+    P, iters = 4, 48
+    cfg = ps.PSConfig(algorithm="sync_easgd", n_workers=P, total_iters=iters,
+                      transport="thread", schedule=schedule,
+                      eval_every_iters=10**9)
+    res = ps.run_ps(ps.NUMPY_MLP, CFG, cfg)
+    n_rounds = -(-iters // P)
+    want = n_rounds * len(comm.get(schedule).rounds(P))
+    assert res.counters["sync_rounds"] == want
+    assert res.counters["messages"] == n_rounds * sum(
+        len(r) for r in comm.get(schedule).rounds(P))
+
+
+@pytest.mark.parametrize("algo", list(ALGORITHMS))
+def test_every_algorithm_runs_thread(algo):
+    cfg = ps.PSConfig(algorithm=algo, n_workers=2, total_iters=40,
+                      transport="thread", schedule="ring",
+                      eval_every_iters=20)
+    res = ps.run_ps(ps.NUMPY_MLP, CFG, cfg)
+    assert res.total_iters == 40
+    assert np.isfinite(res.final_metric)
+    assert np.all(np.isfinite(res.center))
+    assert res.history   # monitor recorded accuracy-vs-time points
+
+
+def test_process_transport_runs_and_counts():
+    """Both acceptance transports: a real multiprocessing run (spawn,
+    shared RawArrays) completes, counts its exchanges, and learns."""
+    cfg = ps.PSConfig(algorithm="async_easgd", n_workers=2, total_iters=60,
+                      transport="process", schedule="ring",
+                      eval_every_iters=30)
+    res = ps.run_ps(ps.NUMPY_MLP, CFG, cfg)
+    assert res.total_iters == 60
+    assert res.counters["messages"] == 120
+    assert np.isfinite(res.final_metric)
+
+
+def test_process_transport_rejects_closures():
+    built = ps.make_numpy_mlp()
+    cfg = ps.PSConfig(algorithm="async_easgd", n_workers=2, total_iters=10,
+                      transport="process")
+    with pytest.raises(ValueError, match="ProblemSpec"):
+        ps.run_ps(built, CFG, cfg)
+
+
+def test_ps_config_validates_algorithm():
+    with pytest.raises(AssertionError):
+        ps.PSConfig(algorithm="nope")
+
+
+def test_calibration_sim_config_discipline():
+    """original_easgd is priced at serialized (full-core) compute; the
+    concurrent families at the measured concurrent rate."""
+    cal = ps.Calibration(n=1000, n_workers=4, transport="thread",
+                         t_grad_serial=1e-3, t_grad_concurrent=3e-3,
+                         t_axpy=1e-5, alpha=2e-5)
+    assert cal.sim_config("original_easgd", "ring").t_compute == 1e-3
+    assert cal.sim_config("async_easgd", "ring").t_compute == 3e-3
+    assert cal.sim_config("sync_easgd", "ring",
+                          net=NET).net is NET
+
+
+def test_pow2_only_schedules_fail_fast():
+    """Finding from review: a pow2-only round structure at non-pow2 P must
+    refuse loudly, not corrupt the allreduce or crash the comm executor."""
+    with pytest.raises(ValueError, match="power-of-two"):
+        comm.get("tree").rounds(3)
+    with pytest.raises(ValueError, match="power-of-two"):
+        ps.run_ps(ps.NUMPY_MLP, CFG,
+                  ps.PSConfig(algorithm="sync_easgd", n_workers=3,
+                              total_iters=12, schedule="butterfly"))
+
+
+def test_choose_never_proposes_butterfly_for_non_pow2():
+    from repro.core.elastic import ElasticConfig
+    assert comm.choose(100, 6, NET) == "ring"          # latency-bound, p=6
+    assert ElasticConfig(schedule="auto").resolve_schedule(6, 100) == "ring"
+    # pow2 latency-bound still picks butterfly
+    assert comm.choose(100, 8, NET) == "butterfly"
