@@ -92,7 +92,19 @@ class ExchangePlan:
 
     # -- the SAME exchange under the α–β model ------------------------------
     def wire_bytes(self, n_elements: int) -> float:
-        """Bytes that actually cross the slow links after compression."""
+        """Bytes the JITTED collective actually moves after compression.
+
+        sign_ef signs stay int8 across the mesh (the in-flight sum must
+        address them), so this is 1 byte/element — exactly what the
+        compiled HLO's all-reduce carries (launch/hloparse verifies the
+        agreement). The 1-bit ideal is ``framed_wire_bytes`` — achieved
+        for real by the repro.net byte-stream wire, where no reduction
+        happens in flight and signs are bit-packed.
+        """
+        return n_elements * self.compression.jit_wire_bytes_per_element
+
+    def framed_wire_bytes(self, n_elements: int) -> float:
+        """Bytes on a framed point-to-point wire (repro.net): bit-packed."""
         return n_elements * self.compression.wire_bytes_per_element
 
     def cost_s(self, n_elements: int, net: costmodel.Network,

@@ -15,15 +15,29 @@ Compression operates on the *packed* 1-D buffer (core.packing), i.e. it
 composes with the paper's single-message exchange: one small collective
 instead of one large one.
 
+Two wire realizations, two byte accountings:
+
+ * the **jitted collective path** (``core.elastic`` / ``ExchangePlan``)
+   must keep signs addressable for the sum-reduction, so they cross the
+   mesh as int8 — ``jit_wire_bytes_per_element`` (sign_ef: 1.0) is what
+   the compiled HLO actually moves, and is what ``comm.choose`` and the
+   dry-run report price (launch/hloparse verifies the agreement);
+ * the **framed byte-stream path** (``repro.net`` TCP wire) has no
+   reduction in flight, so signs are bit-packed for real
+   (``np.packbits``) — ``wire_bytes_per_element`` (sign_ef: 0.125) is the
+   1-bit ideal that wire achieves.
+
 All functions are pure; error-feedback state is a buffer of the same shape
-as the payload, carried in the training state (per pod).
+as the payload, carried in the training state (per pod) or per link
+(``repro.net.wire``). jax is imported lazily so the numpy codecs below are
+usable from processes that must stay jax-free (TCP workers).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable
 
-import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,7 +53,16 @@ class Compression:
     name: str
     encode: Callable
     decode_mean: Callable
-    wire_bytes_per_element: float  # for the cost model
+    wire_bytes_per_element: float       # framed/ideal wire (repro.net packs
+    #                                     sign bits for real: 1 bit/element)
+    jit_wire_bytes_per_element: float = 0.0   # what the XLA collective path
+    #                                     moves (signs stay int8 so the sum-
+    #                                     reduction can address them)
+
+    def __post_init__(self):
+        if self.jit_wire_bytes_per_element == 0.0:
+            object.__setattr__(self, "jit_wire_bytes_per_element",
+                               self.wire_bytes_per_element)
 
 
 def _identity_encode(buf, err):
@@ -54,6 +77,7 @@ NONE = Compression("none", _identity_encode, _identity_decode, 4.0)
 
 
 def _bf16_encode(buf, err):
+    import jax.numpy as jnp
     corrected = buf + err
     q = corrected.astype(jnp.bfloat16)
     new_err = corrected - q.astype(buf.dtype)
@@ -61,6 +85,7 @@ def _bf16_encode(buf, err):
 
 
 def _bf16_decode(payload):
+    import jax.numpy as jnp
     return payload[0].astype(jnp.float32)
 
 
@@ -68,6 +93,7 @@ BF16 = Compression("bf16", _bf16_encode, _bf16_decode, 2.0)
 
 
 def _sign_encode(buf, err):
+    import jax.numpy as jnp
     corrected = buf + err
     scale = jnp.mean(jnp.abs(corrected))
     signs = jnp.where(corrected >= 0, jnp.int8(1), jnp.int8(-1))
@@ -77,13 +103,15 @@ def _sign_encode(buf, err):
 
 
 def _sign_decode(payload):
+    import jax.numpy as jnp
     signs_mean, scale_mean = payload
     # signs_mean is mean over pods of ±1 (fp after mean); scale_mean is the
     # mean per-pod magnitude. Product approximates mean of sign_i*scale_i.
     return signs_mean.astype(jnp.float32) * scale_mean.astype(jnp.float32)
 
 
-SIGN_EF = Compression("sign_ef", _sign_encode, _sign_decode, 0.125 + 1e-9)
+SIGN_EF = Compression("sign_ef", _sign_encode, _sign_decode,
+                      0.125 + 1e-9, 1.0 + 1e-9)
 
 
 SCHEMES = {c.name: c for c in (NONE, BF16, SIGN_EF)}
@@ -96,3 +124,43 @@ def get(name: str) -> Compression:
         raise ValueError(
             f"unknown compression '{name}', have {sorted(SCHEMES)}"
         ) from None
+
+
+# ---------------------------------------------------------------------------
+# numpy wire codecs — the SAME sign-EF math as ``_sign_encode`` above, but
+# realized as a byte stream for the repro.net TCP wire: no in-flight
+# reduction means the signs can be bit-packed for real (np.packbits), so one
+# float64 element costs 1 bit + amortized scale on the wire. jax-free so TCP
+# worker processes never pay the jax import.
+# ---------------------------------------------------------------------------
+
+def sign_ef_encode_np(buf: np.ndarray, err: np.ndarray
+                      ) -> tuple[bytes, np.ndarray]:
+    """(flat float64 buf, EF state) -> (wire payload, new EF state).
+
+    Payload layout: [u64 n][f64 scale][packbits(signs)] — the receiver
+    reconstructs ``sign * scale`` exactly; the sender's error-feedback state
+    carries the quantization residual to its next message on this link.
+    """
+    corrected = buf + err
+    scale = float(np.mean(np.abs(corrected))) if buf.size else 0.0
+    bits = (corrected >= 0)
+    decompressed = np.where(bits, scale, -scale)
+    new_err = corrected - decompressed
+    header = np.array([buf.size], np.uint64).tobytes() + \
+        np.array([scale], np.float64).tobytes()
+    return header + np.packbits(bits).tobytes(), new_err
+
+
+def sign_ef_decode_np(payload) -> np.ndarray:
+    """Inverse of ``sign_ef_encode_np`` (stateless)."""
+    mv = memoryview(payload)
+    n = int(np.frombuffer(mv[:8], np.uint64)[0])
+    scale = float(np.frombuffer(mv[8:16], np.float64)[0])
+    bits = np.unpackbits(np.frombuffer(mv[16:], np.uint8), count=n)
+    return np.where(bits.astype(bool), scale, -scale)
+
+
+def sign_ef_wire_nbytes(n: int) -> int:
+    """Exact framed payload size for an n-element sign_ef message."""
+    return 16 + (n + 7) // 8

@@ -19,9 +19,13 @@ The pytree functions in ``core.easgd`` are the mathematical oracle
 """
 from __future__ import annotations
 
+from typing import TYPE_CHECKING
+
 import numpy as np
 
-from repro.core.easgd import EASGDConfig
+if TYPE_CHECKING:                 # annotation only — keeping this module
+    from repro.core.easgd import EASGDConfig   # numpy-only lets the jax-free
+#                                   repro.net TCP workers import it cheaply
 
 # algorithm families (names match core.async_engine.ALGORITHMS)
 EASGD_WORKER_RULE = ("original_easgd", "async_easgd", "hogwild_easgd",
@@ -57,6 +61,23 @@ def worker_step(algorithm: str, w: np.ndarray, v: np.ndarray,
         w += v
     else:  # sgd family: worker tracks the master copy
         w -= eta * grad
+
+
+def local_step(algorithm: str, w: np.ndarray, v: np.ndarray,
+               grad: np.ndarray, cfg: EASGDConfig) -> None:
+    """Between-exchange update for τ>1 communication periods, in place on
+    (w, v): the worker's own rule WITHOUT any center/master interaction
+    (the elastic attraction and the center pull happen only every τ-th
+    step, at the exchange). Mirrors ``core.elastic._momentum_only``:
+
+    velocity rules (MSGD/MEASGD):  V ← μV − ηΔW;  W ← W + V
+    everything else:               W ← W − ηΔW
+    """
+    if uses_velocity(algorithm):
+        v[:] = cfg.mu * v - cfg.eta * grad
+        w += v
+    else:
+        w -= cfg.eta * grad
 
 
 def master_absorb(algorithm: str, center: np.ndarray,

@@ -68,14 +68,16 @@ class ElasticConfig:
     def resolve_schedule(self, n_total: int,
                          n_elements: int | None = None) -> str:
         """Resolve "auto" to a concrete registry name via ``comm.choose``
-        on the POST-compression wire bytes over the cross-pod (DCI) link.
+        on the POST-compression wire bytes over the cross-pod (DCI) link —
+        the JIT accounting (sign_ef travels as int8 in the compiled
+        collective), so the choice and the HLO report agree on bytes.
         Without a buffer size, fall back to psum (XLA-native)."""
         if self.schedule != "auto":
             return self.schedule
         if n_elements is None or n_total <= 1:
             return "psum"
         comp = compression_lib.get(self.compression)
-        wire = n_elements * comp.wire_bytes_per_element
+        wire = n_elements * comp.jit_wire_bytes_per_element
         return comm_schedules.choose(wire, n_total, costmodel.TPU_DCI)
 
     def exchange_plan(self, axis_name: str | None, n_total: int,

@@ -1,0 +1,135 @@
+"""Cluster launcher for the repro.ps runtime over the repro.net transport.
+
+Localhost (spawns worker processes itself):
+
+    PYTHONPATH=src python -m repro.launch.cluster --workers 4 \
+        --algorithm sync_easgd --schedule ring --iters 400
+
+Multi-host: the master binds a fixed port and WAITS; each worker host runs
+the printed one-liner (or pass --ssh to have this process run them):
+
+    # on the master host
+    PYTHONPATH=src python -m repro.launch.cluster --workers 4 \
+        --algorithm async_easgd --hosts knl01,knl02 --port 29500
+
+    # printed for each wid, round-robin over --hosts:
+    #   PYTHONPATH=src python -m repro.net.worker \
+    #       --connect <master>:29500 --wid 0 --token repro-net
+
+Rendezvous: the master accepts until all P workers said HELLO (within
+--timeout), ships each the problem factory + algorithm + τ in WELCOME, and
+starts the clock only after every worker reported READY (problem built,
+caches warm). Heartbeats let the master tell a slow gradient from a dead
+host; DONE/BYE shuts everything down cleanly. ``--compression sign_ef``
+turns on 1-bit sign+error-feedback payloads on every link.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import shlex
+import socket
+import subprocess
+
+from repro import comm
+
+
+def _advertised_addr(port: int) -> str:
+    try:
+        host = socket.gethostbyname(socket.gethostname())
+    except OSError:
+        host = socket.gethostname()
+    return f"{host}:{port}"
+
+
+def main(argv=None):
+    from repro import ps
+    from repro.core import costmodel
+    from repro.core.easgd import EASGDConfig
+    from repro.net.server import worker_command
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--algorithm", default="sync_easgd",
+                    help="one of core.async_engine.ALGORITHMS, or 'all'")
+    ap.add_argument("--transport", default="tcp",
+                    choices=["tcp", "thread", "process"],
+                    help="tcp is the point of this launcher; the "
+                         "shared-memory transports are accepted for "
+                         "side-by-side runs")
+    ap.add_argument("--schedule", default="ring",
+                    choices=list(comm.names()) + ["auto"])
+    ap.add_argument("--iters", type=int, default=400)
+    ap.add_argument("--eval-every", type=int, default=200)
+    ap.add_argument("--eta", type=float, default=0.1)
+    ap.add_argument("--rho", type=float, default=0.1)
+    ap.add_argument("--tau", type=int, default=1,
+                    help="communication period: τ−1 local steps per exchange")
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "sign_ef"],
+                    help="per-link wire codec (sign_ef: 1 bit/element + "
+                         "error feedback)")
+    ap.add_argument("--emulate", default="none", choices=["wire", "none"],
+                    help="'wire': deadline-pace every message under "
+                         "costmodel.PS_WIRE on top of the real socket")
+    ap.add_argument("--hosts", default=None,
+                    help="comma-separated worker hosts; master binds "
+                         "0.0.0.0:--port and waits for them to join "
+                         "(omit: spawn localhost workers)")
+    ap.add_argument("--port", type=int, default=29500,
+                    help="fixed rendezvous port for --hosts (localhost "
+                         "runs use an ephemeral one)")
+    ap.add_argument("--ssh", action="store_true",
+                    help="with --hosts: launch the printed worker commands "
+                         "over ssh instead of just printing them")
+    ap.add_argument("--timeout", type=float, default=600.0)
+    args = ap.parse_args(argv)
+
+    if args.compression != "none" and args.transport != "tcp":
+        ap.error("--compression is a tcp wire feature; the shared-memory "
+                 "transports move no frames")
+    algos = (list(ps.ALGORITHMS) if args.algorithm == "all"
+             else [args.algorithm])
+    easgd = EASGDConfig(eta=args.eta, rho=args.rho, mu=0.9, tau=args.tau)
+    emulate = costmodel.PS_WIRE if args.emulate == "wire" else None
+    multi_host = bool(args.hosts)
+    base = ps.PSConfig(
+        algorithm=algos[0], n_workers=args.workers,
+        transport=args.transport, schedule=args.schedule,
+        total_iters=args.iters, eval_every_iters=args.eval_every,
+        emulate_net=emulate, wire_compression=args.compression,
+        tcp_host="0.0.0.0" if multi_host else "127.0.0.1",
+        tcp_port=args.port if multi_host else 0,
+        spawn_workers=not multi_host)
+
+    results = []
+    for algo in algos:
+        cfg = dataclasses.replace(base, algorithm=algo)
+        ssh_procs = []
+        if multi_host:
+            hosts = [h for h in args.hosts.split(",") if h]
+            addr = _advertised_addr(args.port)
+            print(f"# master: {algo} on {addr}; start each worker:")
+            for wid in range(args.workers):
+                host = hosts[wid % len(hosts)]
+                cmd = worker_command(addr, wid)
+                print(f"#   [{host}] {cmd}")
+                if args.ssh:
+                    ssh_procs.append(subprocess.Popen(
+                        ["ssh", host, *shlex.split(cmd)]))
+        try:
+            res = ps.run_ps(ps.NUMPY_MLP_MED, easgd, cfg,
+                            join_timeout_s=args.timeout)
+        finally:
+            for proc in ssh_procs:
+                proc.terminate()
+        print(f"{algo:16s} [{res.transport}/{res.schedule}] "
+              f"iters={res.total_iters} err={res.final_metric:.3f} "
+              f"time={res.total_time_s:.2f}s counters={res.counters}",
+              flush=True)
+        results.append(res)
+    return results
+
+
+if __name__ == "__main__":
+    main()

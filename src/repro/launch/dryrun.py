@@ -79,7 +79,9 @@ def lower_cell(arch_id: str, shape_id: str, mesh, *, elastic_overrides=None,
     n_pods = n_pods_of(mesh)
     meta = dict(arch=arch_id, shape=shape_id,
                 mesh="x".join(map(str, mesh.devices.shape)),
-                n_devices=int(mesh.devices.size))
+                n_devices=int(mesh.devices.size),
+                n_pods=max(n_pods, 1))
+    ecfg = None                          # train cells set it below
 
     if shape["kind"] == "train":
         gb, seq = shape["global_batch"], shape["seq"]
@@ -120,10 +122,10 @@ def lower_cell(arch_id: str, shape_id: str, mesh, *, elastic_overrides=None,
                                      extras)
         meta["tokens"] = b  # one new token per sequence
         meta["step"] = "decode_step"
-    return lowered, meta, cfg
+    return lowered, meta, cfg, ecfg
 
 
-def analyze(compiled, meta, cfg, chips: int):
+def analyze(compiled, meta, cfg, chips: int, ecfg=None):
     rec = dict(meta)
     # --- memory ------------------------------------------------------------
     try:
@@ -166,6 +168,8 @@ def analyze(compiled, meta, cfg, chips: int):
         rec["collective_counts"] = costs.counts_by_collective
         rec["collective_bytes_per_device"] = int(costs.collective_bytes)
         rec["cross_pod_bytes_per_device"] = int(costs.cross_pod_bytes)
+        rec["collective_bytes_by_dtype"] = costs.collective_bytes_by_dtype
+        rec["cross_pod_bytes_by_dtype"] = costs.cross_pod_bytes_by_dtype
         rec["hlo_text_bytes"] = len(text)
         del text
     except Exception as e:  # pragma: no cover
@@ -194,6 +198,34 @@ def analyze(compiled, meta, cfg, chips: int):
     )
     rec["useful_flops_ratio"] = (
         rec["model_flops"] / hlo_flops if hlo_flops else 0.0)
+
+    # --- post-compression wire accounting (train cells) ---------------------
+    # the α–β model's jit accounting (sign_ef = int8 on the collective) and
+    # the HLO's parsed cross-pod bytes must AGREE — this record makes the
+    # comparison part of every dry-run, and shows the auto-schedule choice
+    # made from the very same byte count.
+    if ecfg is not None:
+        from repro.core import compression as compression_lib
+        comp = compression_lib.get(ecfg.compression)
+        n_pods = max(int(meta.get("n_pods", 1)), 1)   # mesh-derived, not
+        devices_per_pod = chips // n_pods             # a topology guess
+        shard_elems = -(-n_total // devices_per_pod)
+        model_bytes = shard_elems * comp.jit_wire_bytes_per_element
+        hlo_bytes = rec.get("cross_pod_bytes_per_device", 0)
+        rec["wire_model"] = {
+            "compression": comp.name,
+            "jit_bytes_per_element": comp.jit_wire_bytes_per_element,
+            "framed_bytes_per_element": comp.wire_bytes_per_element,
+            "cross_pod_model_bytes_per_device": model_bytes,
+            "cross_pod_hlo_bytes_per_device": hlo_bytes,
+            "hlo_over_model": (hlo_bytes / model_bytes if model_bytes
+                               else None),
+            # resolved EXACTLY like the training path does (runtime/train.py
+            # passes the full model element count — each pod exchanges the
+            # whole packed model), so this names the schedule a real run
+            # with schedule="auto" would execute
+            "auto_schedule_choice": ecfg.resolve_schedule(n_pods, n_total),
+        }
     # roofline fraction: ideal model-flops time / achievable bound
     ideal_s = rec["model_flops"] / (chips * costmodel.TPU_V5E.peak_flops)
     rec["roofline_fraction"] = ideal_s / rl.bound_s if rl.bound_s else 0.0
@@ -209,7 +241,7 @@ def run_cell(arch_id, shape_id, mesh_kind, out_path=None,
     rec = dict(arch=arch_id, shape=shape_id, mesh_kind=mesh_kind,
                variant=variant)
     try:
-        lowered, meta, cfg = lower_cell(
+        lowered, meta, cfg, ecfg = lower_cell(
             arch_id, shape_id, mesh, elastic_overrides=elastic_overrides,
             cfg_override=cfg_override,
             microbatches_override=microbatches_override)
@@ -218,7 +250,7 @@ def run_cell(arch_id, shape_id, mesh_kind, out_path=None,
         t1 = time.time()
         compiled = lowered.compile()
         rec["compile_s"] = time.time() - t1
-        rec.update(analyze(compiled, meta, cfg, chips))
+        rec.update(analyze(compiled, meta, cfg, chips, ecfg=ecfg))
         rec["ok"] = True
         del compiled, lowered
     except Exception as e:

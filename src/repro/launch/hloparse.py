@@ -73,6 +73,17 @@ def _tensor_bytes(type_str) -> int:
     return total
 
 
+def _tensor_bytes_by_dtype(type_str) -> dict:
+    """dtype -> bytes for a (possibly tuple) HLO type string."""
+    out = {}
+    for dt, dims in _shapes_of(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        out[dt] = out.get(dt, 0) + n * _DTYPE_BYTES[dt]
+    return out
+
+
 def _prod(xs):
     n = 1
     for x in xs:
@@ -89,7 +100,13 @@ class HloCosts:
     counts_by_collective: dict
     while_trip_counts: dict
     cross_pod_bytes: float = 0.0     # collectives whose replica groups span
-                                     # pods (device ids ≥ pod_stride apart)
+    #                                  pods (device ids ≥ pod_stride apart)
+    # post-compression accounting: collective payload bytes split by element
+    # dtype, so a sign-EF exchange (int8 signs + f32 scale) is visible as
+    # such — this is what lets the dry-run report agree with the α–β
+    # model's jit_wire_bytes_per_element (comm.choose's auto decision)
+    collective_bytes_by_dtype: dict = dataclasses.field(default_factory=dict)
+    cross_pod_bytes_by_dtype: dict = dataclasses.field(default_factory=dict)
 
 
 _GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,{} ]*)\}")
@@ -285,13 +302,16 @@ def parse_costs(hlo_text: str, pod_stride: int = 0) -> HloCosts:
         if key in memo:
             return memo[key]
         if depth > 60 or comp not in instrs:
-            z = (0.0, 0.0, defaultdict(float), defaultdict(int), 0.0)
+            z = (0.0, 0.0, defaultdict(float), defaultdict(int), 0.0,
+                 defaultdict(float), defaultdict(float))
             return z
         flops = 0.0
         byts = 0.0
         cross = 0.0
         coll = defaultdict(float)
         coll_n = defaultdict(int)
+        coll_dt = defaultdict(float)
+        cross_dt = defaultdict(float)
         for i in instrs[comp]:
             if i.op == "dot":
                 flops += _dot_flops(i, symbols[comp])
@@ -306,8 +326,13 @@ def parse_costs(hlo_text: str, pod_stride: int = 0) -> HloCosts:
                 b = _tensor_bytes(i.type_str)
                 coll[is_coll] += b
                 coll_n[is_coll] += 1
+                by_dt = _tensor_bytes_by_dtype(i.type_str)
+                for dt, db in by_dt.items():
+                    coll_dt[dt] += db
                 if pod_stride and _crosses_pods(i.line, pod_stride):
                     cross += b
+                    for dt, db in by_dt.items():
+                        cross_dt[dt] += db
             if not inside_fusion and i.op not in _FREE_OPS \
                     and i.op != "while":
                 byts += _tensor_bytes(i.type_str)
@@ -315,25 +340,34 @@ def parse_costs(hlo_text: str, pod_stride: int = 0) -> HloCosts:
                     byts += sym_bytes(comp, opn)
         # recurse
         for kind, callee in refs.get(comp, []):
-            f2, b2, c2, n2, x2 = cost_of(callee, depth + 1,
-                                         inside_fusion or kind == "fusion")
+            f2, b2, c2, n2, x2, cd2, xd2 = cost_of(
+                callee, depth + 1, inside_fusion or kind == "fusion")
             flops += f2
             byts += 0.0 if kind == "fusion" else b2
             cross += x2
             for k in c2:
                 coll[k] += c2[k]
                 coll_n[k] += n2[k]
+            for k in cd2:
+                coll_dt[k] += cd2[k]
+            for k in xd2:
+                cross_dt[k] += xd2[k]
         for cond, body in whiles.get(comp, []):
             tc = trip_count(cond)
             trip_counts[body] = tc
-            f2, b2, c2, n2, x2 = cost_of(body, depth + 1, inside_fusion)
+            f2, b2, c2, n2, x2, cd2, xd2 = cost_of(body, depth + 1,
+                                                   inside_fusion)
             flops += f2 * tc
             byts += b2 * tc
             cross += x2 * tc
             for k in c2:
                 coll[k] += c2[k] * tc
                 coll_n[k] += n2[k] * tc
-        memo[key] = (flops, byts, coll, coll_n, cross)
+            for k in cd2:
+                coll_dt[k] += cd2[k] * tc
+            for k in xd2:
+                cross_dt[k] += xd2[k] * tc
+        memo[key] = (flops, byts, coll, coll_n, cross, coll_dt, cross_dt)
         return memo[key]
 
     # entry = computations never referenced
@@ -348,14 +382,20 @@ def parse_costs(hlo_text: str, pod_stride: int = 0) -> HloCosts:
     flops = byts = cross = 0.0
     coll = defaultdict(float)
     coll_n = defaultdict(int)
+    coll_dt = defaultdict(float)
+    cross_dt = defaultdict(float)
     for e in entries:
-        f2, b2, c2, n2, x2 = cost_of(e)
+        f2, b2, c2, n2, x2, cd2, xd2 = cost_of(e)
         flops += f2
         byts += b2
         cross += x2
         for k in c2:
             coll[k] += c2[k]
             coll_n[k] += n2[k]
+        for k in cd2:
+            coll_dt[k] += cd2[k]
+        for k in xd2:
+            cross_dt[k] += xd2[k]
 
     return HloCosts(
         flops=flops,
@@ -365,6 +405,8 @@ def parse_costs(hlo_text: str, pod_stride: int = 0) -> HloCosts:
         counts_by_collective=dict(coll_n),
         while_trip_counts=trip_counts,
         cross_pod_bytes=cross,
+        collective_bytes_by_dtype=dict(coll_dt),
+        cross_pod_bytes_by_dtype=dict(cross_dt),
     )
 
 

@@ -45,11 +45,16 @@ def run_ps_mode(args) -> list:
              else [args.algorithm])
     easgd = EASGDConfig(eta=args.eta, rho=args.rho, mu=0.9, tau=args.tau)
     net = costmodel.PS_WIRE if args.emulate == "wire" else None
+    wire_codec = args.compression if args.transport == "tcp" else "none"
+    if wire_codec not in ("none", "sign_ef"):
+        raise SystemExit(
+            f"--mode ps --transport tcp supports wire compression "
+            f"none|sign_ef, got '{wire_codec}'")
     base = ps.PSConfig(
         algorithm=algos[0], n_workers=args.ps_workers,
         transport=args.transport, schedule=args.schedule or "ring",
         total_iters=args.ps_iters, eval_every_iters=args.ps_eval_every,
-        emulate_net=net)
+        emulate_net=net, wire_compression=wire_codec)
     cal = ps.calibrate(ps.NUMPY_MLP_MED, base)
     out = []
     for algo in algos:
@@ -92,7 +97,11 @@ def main(argv=None):
                     help="ps algorithm (core.async_engine.ALGORITHMS) or "
                          "'all'")
     ap.add_argument("--transport", default="thread",
-                    choices=["thread", "process"])
+                    choices=["thread", "process", "tcp"],
+                    help="ps worker substrate: in-process threads, spawned "
+                         "multiprocessing on shared memory, or the "
+                         "repro.net TCP transport (real sockets; "
+                         "launch/cluster adds multi-host)")
     ap.add_argument("--ps-workers", type=int, default=4)
     ap.add_argument("--ps-iters", type=int, default=400)
     ap.add_argument("--ps-eval-every", type=int, default=200)

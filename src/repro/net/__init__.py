@@ -1,0 +1,18 @@
+"""repro.net — the PS runtime's real network transport.
+
+A length-prefixed binary wire protocol (``wire``: framing, typed frames,
+zero-copy float64 paths, per-link sign-EF compression with error feedback),
+a master server that services the runtime's concurrency disciplines over
+TCP connections (``server``), and a thin gradient worker runnable on any
+host (``worker``). Registered as ``transport="tcp"`` in
+``repro.ps.transport``; orchestrated across hosts by ``launch/cluster``.
+See DESIGN.md §net.
+
+Import note: ``wire`` and ``worker`` are deliberately jax-free so worker
+processes start fast; ``server`` runs in the launcher and shares the
+``repro.comm`` registry with the rest of the stack.
+"""
+from repro.net import wire
+from repro.net.wire import Link, measure_link
+
+__all__ = ["Link", "measure_link", "wire"]

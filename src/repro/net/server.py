@@ -1,0 +1,637 @@
+"""The repro.net master: the PS runtime's concurrency disciplines served
+over TCP connections instead of shared memory.
+
+The state layout is the thread transport's, verbatim (center, per-worker
+weights/velocities, the padded allreduce mailbox); what changes is WHO moves
+the bytes. Shared memory made publication implicit — here every exchange is
+an explicit frame on a link, so the master OWNS all optimizer state and the
+workers hold only what they need to compute gradients:
+
+ * ``original_easgd`` — the master serves one worker at a time end to end
+   (sends WEIGHTS only to the worker whose turn it is, waits for its GRAD):
+   the Θ(P) serialization is enforced by the wire itself.
+ * async FCFS — GRAD frames are absorbed in ARRIVAL order; under
+   ``deterministic=True`` arrivals are buffered per worker and absorbed in
+   strict cyclic order — the DES zero-jitter event schedule, which makes
+   TCP-vs-thread weights BITWISE identical (tests/test_net.py).
+ * hogwild — absorb on arrival with no admission discipline at all. A
+   central server linearizes updates at message granularity, so TCP hogwild
+   is the DES's sequential-consistency model rather than the shared-memory
+   transports' torn writes (see DESIGN.md §net — the honest boundary).
+ * sync family — per training round the master distributes WEIGHTS, runs
+   the registered schedule's ``Schedule.rounds`` over its local mailbox
+   (same numpy executor as the thread transport ⇒ same summation order ⇒
+   same bits) while the workers' gradient computation genuinely overlaps
+   (paper §6.1.3), then absorbs the GRADs and applies the center update.
+
+τ>1 communication periods: workers take τ−1 local steps
+(``easgd_flat.local_step``) between exchanges, so their local (w, v)
+diverge from the master's copy; the exchange frame then stacks [grad|w|v]
+(async) or sends a WSTATE frame ahead of the overlap (sync).
+
+Wire emulation (``PSConfig.emulate_net``) composes with the real socket:
+deadlines are taken BEFORE a transfer and slept to AFTER it, so only the
+excess over the measured link is slept, and the emulated α–β floors the
+real one. Pacing prices the POST-compression payload size, so ``sign_ef``
+on the wire shortens emulated time as well as measured bytes.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro.comm import schedules as comm_schedules
+from repro.core import easgd_flat
+from repro.core.compression import sign_ef_wire_nbytes
+from repro.net import wire
+from repro.net.wire import Link, sleep_until
+from repro.ps.runtime import PSResult, execute_rounds
+
+SYNC = easgd_flat.SYNC_FAMILY
+DEFAULT_TOKEN = "repro-net"
+
+
+def wire_payload_nbytes(n_elements: int, codec: str) -> int:
+    """Exact framed payload size of one n-element array message."""
+    if codec == "sign_ef":
+        return sign_ef_wire_nbytes(n_elements)
+    return n_elements * 8
+
+
+def worker_env() -> dict:
+    """Environment for a spawned worker interpreter: the repo's src dir on
+    PYTHONPATH (shared by the training spawn and the calibration burners —
+    one definition of how a worker process is launched)."""
+    src = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def spawn_local_workers(host: str, port: int, n_workers: int,
+                        token: str = DEFAULT_TOKEN) -> list:
+    """Launch localhost worker processes (fresh interpreters — the same
+    isolation a remote host gives, minus the cable)."""
+    env = worker_env()
+    return [
+        subprocess.Popen(
+            [sys.executable, "-m", "repro.net.worker",
+             "--connect", f"{host}:{port}", "--wid", str(i),
+             "--token", token],
+            env=env)
+        for i in range(n_workers)
+    ]
+
+
+def worker_command(addr: str, wid: int, token: str = DEFAULT_TOKEN) -> str:
+    """The shell line a REMOTE host runs to join this master (printed by
+    launch/cluster for --hosts; also what --ssh executes)."""
+    return (f"PYTHONPATH=src python -m repro.net.worker "
+            f"--connect {addr} --wid {wid} --token {token}")
+
+
+class _Slot:
+    __slots__ = ("value",)
+
+    def __init__(self, value=0):
+        self.value = value
+
+
+class MasterServer:
+    """One training run: rendezvous P links, run the discipline, shut down."""
+
+    def __init__(self, problem, easgd, cfg, eval_fn_override=None,
+                 join_timeout_s: float = 600.0):
+        if not hasattr(problem, "build"):
+            raise ValueError(
+                "tcp transport needs a ProblemSpec (module:function) — "
+                "remote workers rebuild the problem from its factory")
+        if cfg.deterministic and cfg.wire_compression != "none":
+            raise ValueError(
+                "deterministic admission is the bitwise DES/thread "
+                "cross-check mode; lossy wire compression "
+                f"('{cfg.wire_compression}') would break it — run one or "
+                "the other")
+        self.problem = problem
+        self.easgd = easgd
+        self.cfg = cfg
+        self.timeout = join_timeout_s
+        w0, _, eval_fn = problem.build()
+        self.eval_fn = eval_fn_override or eval_fn
+        self.w0 = np.asarray(w0, np.float64)
+        self.n = self.w0.size
+        P = cfg.n_workers
+        self.tau = max(int(getattr(easgd, "tau", 1)), 1)
+        self.sched_name = cfg.resolved_schedule(self.n * 8)
+        self.rounds = (comm_schedules.get(self.sched_name)
+                       .rounds(P, self.n * 8, cfg.net)
+                       if cfg.algorithm in SYNC else [])
+        padded = self.n + (-self.n) % max(P, 1)
+        # -- master-owned optimizer state (thread-transport layout) --------
+        self.center = self.w0.copy()
+        self.master_vel = np.zeros(self.n)
+        self.workers_w = np.tile(self.w0, (P, 1))
+        self.workers_v = np.zeros((P, self.n))
+        self.mailbox = np.zeros((P + 1, padded))
+        # -- wiring --------------------------------------------------------
+        self.counters = {"sync_rounds": _Slot(), "messages": _Slot(),
+                         "wire_bytes": _Slot()}
+        self.links: dict[int, Link] = {}
+        self.events: queue.Queue = queue.Queue()
+        self.grad_bufs = [np.zeros(self._up_elems()) for _ in range(P)]
+        self.wstate_bufs = [np.zeros(self.n) for _ in range(P)]
+        self.iters = 0
+        self.history: list = []
+        self._last_eval = 0
+        self._t0 = 0.0
+        self._err: list = []
+        self._closing = threading.Event()
+        self._threads: list = []
+        self._procs: list = []
+
+    # -- payload shapes ------------------------------------------------------
+
+    def _up_elems(self) -> int:
+        """Element count of one GRAD frame: with τ>1 the async families
+        stack [grad|w] (+[v] for the velocity rules) because the worker's
+        local state diverged between exchanges."""
+        if self.tau == 1 or self.cfg.algorithm in SYNC:
+            return self.n
+        k = 3 if easgd_flat.uses_velocity(self.cfg.algorithm) else 2
+        return k * self.n
+
+    def _split_up(self, wid: int):
+        """(grad, w_up, v_up) views of a received GRAD payload."""
+        buf = self.grad_bufs[wid]
+        if buf.size == self.n:
+            return buf, None, None
+        parts = buf.reshape(-1, self.n)
+        return parts[0], parts[1], (parts[2] if parts.shape[0] == 3 else None)
+
+    @property
+    def _down_stacked(self) -> bool:
+        """τ>1 velocity rules evolve V locally between exchanges, so the
+        master's WEIGHTS frame must carry [w|v] down."""
+        return (self.tau > 1 and self.cfg.algorithm not in SYNC
+                and easgd_flat.uses_velocity(self.cfg.algorithm))
+
+    def _absorb_upload(self, wid: int) -> np.ndarray:
+        """Fold a τ>1 upload back into the master's per-worker state and
+        return the gradient."""
+        grad, w_up, v_up = self._split_up(wid)
+        if w_up is not None:
+            self.workers_w[wid] = w_up
+        if v_up is not None:
+            self.workers_v[wid] = v_up
+        return grad
+
+    def _down_elems(self) -> int:
+        return 2 * self.n if self._down_stacked else self.n
+
+    def _up_segments(self) -> int:
+        """Logical segments of a GRAD frame (per-segment sign-EF scales)."""
+        return self._up_elems() // self.n
+
+    # -- pacing --------------------------------------------------------------
+
+    def _t_msg_pair(self) -> tuple:
+        """(t_down, t_up) emulated per-message times — the two directions
+        differ in size once τ>1 stacks state into the frames."""
+        codec = self.cfg.wire_compression
+        return (self.cfg.t_msg_emulated(
+                    wire_payload_nbytes(self._down_elems(), codec)),
+                self.cfg.t_msg_emulated(
+                    wire_payload_nbytes(self._up_elems(), codec)))
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def rendezvous(self, listener: socket.socket, token: str) -> None:
+        """Accept until every wid 0..P−1 has said HELLO, send WELCOME, wait
+        for every READY (worker built its problem and warmed up)."""
+        cfg, P = self.cfg, self.cfg.n_workers
+        deadline = time.monotonic() + self.timeout
+        listener.settimeout(1.0)
+        while len(self.links) < P:
+            if time.monotonic() > deadline:
+                raise RuntimeError(
+                    f"rendezvous timeout: {len(self.links)}/{P} workers "
+                    f"connected (algorithm={cfg.algorithm})")
+            self._check_procs()
+            try:
+                conn, _ = listener.accept()
+            except socket.timeout:
+                continue
+            conn.settimeout(30.0)       # a connected-but-silent client must
+            link = Link(conn, codec=cfg.wire_compression,   # not stall HELLO
+                        counters=self.counters)
+            try:
+                frame = link.recv_header()
+            except (socket.timeout, wire.WireError, OSError):
+                link.close()
+                continue
+            if frame.ftype != wire.HELLO:
+                link.close()
+                continue
+            hello = link.recv_json(frame)
+            if hello.get("token") != token:
+                link.send_json(wire.ERROR, {"msg": "bad token"})
+                link.close()
+                continue
+            wid = int(hello["wid"])
+            if not (0 <= wid < P) or wid in self.links:
+                link.send_json(wire.ERROR, {"msg": f"bad wid {wid}"})
+                link.close()
+                continue
+            self.links[wid] = link
+        e = self.easgd
+        for wid, link in self.links.items():
+            link.send_json(wire.WELCOME, {
+                "wid": wid,
+                "factory": self.problem.factory,
+                "kwargs": list(self.problem.kwargs),
+                "algorithm": cfg.algorithm,
+                "n": self.n,
+                "tau": self.tau,
+                "eta": e.eta, "mu": e.mu,
+                "codec": cfg.wire_compression,
+                "warmup": 2,
+                "hb_interval_s": cfg.hb_interval_s,
+            })
+        for wid, link in self.links.items():
+            self._threads.append(threading.Thread(
+                target=self._reader, args=(wid, link), daemon=True))
+            self._threads[-1].start()
+        ready = set()
+        while len(ready) < P:
+            wid, kind, detail = self._next_event(deadline - time.monotonic())
+            if kind != "ready":
+                raise RuntimeError(
+                    f"worker {wid} failed during rendezvous: {kind} {detail}")
+            ready.add(wid)
+
+    def _reader(self, wid: int, link: Link) -> None:
+        """Per-link reader: decodes frames into per-worker buffers and turns
+        them into events. One outstanding exchange per worker by protocol,
+        so the preallocated buffers are never overwritten early."""
+        try:
+            while True:
+                frame = link.recv_header()
+                if frame.ftype == wire.GRAD:
+                    link.recv_array(frame, self.grad_bufs[wid])
+                    self.events.put((wid, "grad", None))
+                elif frame.ftype == wire.WSTATE:
+                    link.recv_array(frame, self.wstate_bufs[wid])
+                    self.events.put((wid, "wstate", None))
+                elif frame.ftype == wire.READY:
+                    link.recv_discard(frame)
+                    self.events.put((wid, "ready", None))
+                elif frame.ftype == wire.BYE:
+                    link.recv_discard(frame)
+                    self.events.put((wid, "bye", None))
+                    return
+                elif frame.ftype == wire.ERROR:
+                    msg = link.recv_json(frame)
+                    self.events.put((wid, "error", msg.get("msg", "?")))
+                    return
+                else:
+                    link.recv_discard(frame)
+        except (wire.WireError, OSError) as exc:
+            if not self._closing.is_set():
+                self.events.put((wid, "dead", repr(exc)))
+
+    def _check_procs(self) -> None:
+        for proc in self._procs:
+            rc = proc.poll()
+            if rc not in (None, 0):
+                raise RuntimeError(
+                    f"tcp worker process exited with code {rc} "
+                    f"(algorithm={self.cfg.algorithm})")
+
+    def _next_event(self, timeout: float):
+        """Pop one event; surface worker failures and heartbeat silence as
+        RuntimeError instead of hanging the launcher."""
+        deadline = time.monotonic() + max(timeout, 0.0)
+        while True:
+            self._check_procs()
+            stale = [w for w, l in self.links.items()
+                     if time.monotonic() - l.last_seen
+                     > self.cfg.hb_timeout_s]
+            if stale:
+                raise RuntimeError(
+                    f"worker(s) {stale} silent for more than "
+                    f"{self.cfg.hb_timeout_s}s (heartbeats stopped)")
+            try:
+                wid, kind, detail = self.events.get(timeout=0.5)
+            except queue.Empty:
+                if time.monotonic() > deadline:
+                    raise RuntimeError(
+                        f"timed out waiting for workers "
+                        f"(algorithm={self.cfg.algorithm})") from None
+                continue
+            if kind in ("error", "dead"):
+                raise RuntimeError(f"worker {wid} failed: {detail}")
+            return wid, kind, detail
+
+    def _await(self, kind: str, need: set, ignore: tuple = ()) -> None:
+        """Block until every wid in ``need`` delivered one ``kind`` event.
+        ``ignore`` lets the shutdown drain skip exchanges that were already
+        in flight when DONE went out (their grads are discarded, exactly
+        like the shared-memory transports discard a computed-but-unserved
+        gradient at termination)."""
+        pending = set(need)
+        while pending:
+            wid, got, _ = self._next_event(self.timeout)
+            if got in ignore:
+                continue
+            if got != kind:
+                raise RuntimeError(
+                    f"protocol violation: expected {kind} from {pending}, "
+                    f"got {got} from worker {wid}")
+            pending.discard(wid)
+
+    # -- eval ----------------------------------------------------------------
+
+    def _maybe_eval(self, force: bool = False) -> None:
+        if force or self.iters - self._last_eval >= self.cfg.eval_every_iters:
+            self.history.append((time.perf_counter() - self._t0, self.iters,
+                                 float(self.eval_fn(self.center.copy()))))
+            self._last_eval = self.iters
+
+    # -- disciplines ---------------------------------------------------------
+
+    def _send_weights(self, wid: int) -> int:
+        if self._down_stacked:
+            payload = np.concatenate(
+                [self.workers_w[wid], self.workers_v[wid]])
+            return self.links[wid].send_array(wire.WEIGHTS, payload,
+                                              wid=wid, segments=2)
+        return self.links[wid].send_array(wire.WEIGHTS, self.workers_w[wid],
+                                          wid=wid)
+
+    def serve(self) -> None:
+        algo = self.cfg.algorithm
+        self._t0 = time.perf_counter()
+        if algo in SYNC:
+            self._serve_sync()
+        elif algo == "original_easgd":
+            self._serve_original()
+        elif self.cfg.deterministic:
+            self._serve_turnstile()
+        elif algo.startswith("hogwild"):
+            self._serve_hogwild()
+        else:
+            self._serve_fcfs()
+
+    def _serve_original(self) -> None:
+        """Round-robin with compute-in-turn: WEIGHTS go out only when the
+        turn arrives, so the wire itself serializes the whole pipeline."""
+        e, cfg = self.easgd, self.cfg
+        t_down, t_up = self._t_msg_pair()
+        n_turns = -(-cfg.total_iters // self.tau)
+        for turn in range(n_turns):
+            j = turn % cfg.n_workers
+            deadline = time.monotonic() + t_down
+            self._send_weights(j)
+            if t_down:
+                sleep_until(deadline)            # W̄ down
+            self._await("grad", {j})
+            grad = self._absorb_upload(j)
+            deadline = time.monotonic() + t_up
+            easgd_flat.master_absorb_round_robin(
+                self.center, self.workers_w[j], self.workers_v[j], grad, e)
+            if t_up:
+                sleep_until(deadline)            # W⁽ʲ⁾ up
+            self.iters += self.tau
+            self._maybe_eval()
+
+    def _serve_turnstile(self) -> None:
+        """Deterministic admission: all workers compute ahead, the master
+        absorbs in strict cyclic order — the DES zero-jitter event order,
+        hence bitwise-identical weights to the thread transport."""
+        e, cfg = self.easgd, self.cfg
+        t_down, t_up = self._t_msg_pair()
+        t_pair = t_down + t_up
+        ready = [False] * cfg.n_workers
+        for wid in self.links:
+            self._send_weights(wid)
+        turn = 0
+        while self.iters < cfg.total_iters:
+            j = turn % cfg.n_workers
+            while not ready[j]:
+                wid, kind, _ = self._next_event(self.timeout)
+                assert kind == "grad", kind
+                ready[wid] = True
+            ready[j] = False
+            deadline = time.monotonic() + t_pair
+            grad = self._absorb_upload(j)
+            easgd_flat.master_absorb(
+                cfg.algorithm, self.center, self.master_vel,
+                self.workers_w[j], self.workers_v[j], grad, e)
+            if t_pair:
+                sleep_until(deadline)
+            turn += 1
+            self.iters += self.tau
+            self._maybe_eval()
+            if self.iters < cfg.total_iters:
+                self._send_weights(j)
+
+    def _serve_fcfs(self) -> None:
+        """Async family: absorb in arrival order; the single master wire
+        serializes both messages of each exchange (same ``wire_free_at``
+        reservation as the thread transport, slept inline because here the
+        master really is the link's endpoint)."""
+        e, cfg = self.easgd, self.cfg
+        t_down, t_up = self._t_msg_pair()
+        t_pair = t_down + t_up
+        wire_free_at = 0.0
+        for wid in self.links:
+            self._send_weights(wid)
+        while self.iters < cfg.total_iters:
+            j, kind, _ = self._next_event(self.timeout)
+            assert kind == "grad", kind
+            deadline = None
+            if t_pair:
+                start = max(time.monotonic(), wire_free_at)
+                deadline = start + t_pair
+                wire_free_at = deadline
+            grad = self._absorb_upload(j)
+            easgd_flat.master_absorb(
+                cfg.algorithm, self.center, self.master_vel,
+                self.workers_w[j], self.workers_v[j], grad, e)
+            if deadline is not None:
+                sleep_until(deadline)
+            self.iters += self.tau
+            self._maybe_eval()
+            if self.iters < cfg.total_iters:
+                self._send_weights(j)
+
+    def _serve_hogwild(self) -> None:
+        """Absorb on arrival, no discipline; per-exchange wire times OVERLAP
+        — a delayed-sender thread releases each worker's reply at its own
+        deadline, so one worker's wire time never serializes another's
+        (the thread transport's lock-free sleep, relocated to the master).
+        Per-worker quotas mirror the thread transport's termination."""
+        e, cfg = self.easgd, self.cfg
+        P, total = cfg.n_workers, cfg.total_iters
+        t_down, t_up = self._t_msg_pair()
+        t_pair = t_down + t_up
+        quota = [(total // P + (1 if w < total % P else 0)) for w in range(P)]
+        target = [-(-q // self.tau) for q in quota]   # exchanges per worker
+        done = [0] * P
+        replies: queue.Queue = queue.Queue()          # (deadline, wid)
+        stop = threading.Event()
+
+        def _delayed_sender():
+            while not stop.is_set():
+                try:
+                    deadline, w = replies.get(timeout=0.2)
+                except queue.Empty:
+                    continue
+                sleep_until(deadline)
+                self._send_weights(w)
+
+        sender = threading.Thread(target=_delayed_sender, daemon=True)
+        sender.start()
+        try:
+            for wid in self.links:
+                self._send_weights(wid)
+            while any(d < t for d, t in zip(done, target)):
+                j, kind, _ = self._next_event(self.timeout)
+                assert kind == "grad", kind
+                grad = self._absorb_upload(j)
+                deadline = time.monotonic() + t_pair
+                easgd_flat.master_absorb(
+                    cfg.algorithm, self.center, self.master_vel,
+                    self.workers_w[j], self.workers_v[j], grad, e)
+                done[j] += 1
+                self.iters += self.tau
+                self._maybe_eval()
+                if done[j] < target[j]:
+                    if t_pair:
+                        replies.put((deadline, j))
+                    else:
+                        self._send_weights(j)
+        finally:
+            stop.set()
+            sender.join(timeout=5)
+        self.iters = total                            # quota-exact by design
+
+    def _serve_sync(self) -> None:
+        """Barriered rounds over links. sync_easgd's allreduce runs on the
+        master's mailbox WHILE the workers compute (their gradient follows
+        the WEIGHTS/WSTATE they just sent/received) — the §6.1.3 overlap is
+        real; sync_sgd's gradient exchange must wait for the GRADs."""
+        e, cfg = self.easgd, self.cfg
+        algo, P, n = cfg.algorithm, cfg.n_workers, self.n
+        all_wids = set(self.links)
+        n_rounds = -(-cfg.total_iters // (P * self.tau))
+        t_wire = sum(
+            cfg.t_msg_emulated(max(m.frac for m in rnd) * n * 8)
+            for rnd in self.rounds)
+        for _ in range(n_rounds):
+            for wid in self.links:
+                self._send_weights(wid)
+            if algo == "sync_easgd":
+                got_grad: set = set()
+                if self.tau > 1:
+                    # workers do τ−1 local steps, then post their evolved
+                    # weights (WSTATE) before computing the exchange grad —
+                    # the allreduce still overlaps that last computation.
+                    # A fast worker's GRAD may arrive before a slow one's
+                    # WSTATE, so grads are buffered while we collect.
+                    got_w: set = set()
+                    while len(got_w) < P:
+                        wid, kind, _ = self._next_event(self.timeout)
+                        if kind == "wstate":
+                            got_w.add(wid)
+                        else:
+                            assert kind == "grad", kind
+                            got_grad.add(wid)
+                    for i in range(P):
+                        self.workers_w[i] = self.wstate_bufs[i]
+                self.mailbox[:P, :n] = self.workers_w
+                deadline = time.monotonic() + t_wire
+                execute_rounds(self.mailbox, n, self.rounds, self.counters)
+                if t_wire:
+                    sleep_until(deadline)
+                self._await("grad", all_wids - got_grad)
+                for i in range(P):
+                    easgd_flat.worker_step(
+                        algo, self.workers_w[i], self.workers_v[i],
+                        self.grad_bufs[i], self.center, e)
+                easgd_flat.sync_master_easgd(
+                    self.center, self.mailbox[0, :n] / P, P, e)
+            else:                                     # sync_sgd
+                self._await("grad", all_wids)
+                self.mailbox[:P, :n] = self.grad_bufs
+                deadline = time.monotonic() + t_wire
+                execute_rounds(self.mailbox, n, self.rounds, self.counters)
+                if t_wire:
+                    sleep_until(deadline)
+                easgd_flat.sync_master_sgd(
+                    self.center, self.master_vel, self.mailbox[0, :n] / P, e)
+                self.workers_w[:] = self.center
+            self.iters += P * self.tau
+            self._maybe_eval()
+
+    # -- top level -----------------------------------------------------------
+
+    def run(self, listener: socket.socket, token: str = DEFAULT_TOKEN,
+            procs: list | None = None):
+        """Rendezvous → serve → clean shutdown. Returns a PSResult."""
+        self._procs = procs or []
+        try:
+            self.rendezvous(listener, token)
+            self.serve()
+            total_time = time.perf_counter() - self._t0
+            self._maybe_eval(force=True)
+            for link in self.links.values():
+                link.send_simple(wire.DONE)
+            self._await("bye", set(self.links),
+                        ignore=("grad", "wstate"))
+        finally:
+            self._closing.set()
+            for link in self.links.values():
+                link.close()
+            listener.close()
+            for proc in self._procs:
+                try:
+                    proc.wait(timeout=10)
+                except subprocess.TimeoutExpired:
+                    proc.kill()
+        return PSResult(
+            algorithm=self.cfg.algorithm, transport="tcp",
+            schedule=(self.sched_name if self.cfg.algorithm in SYNC
+                      else "master"),
+            history=self.history, total_time_s=total_time,
+            total_iters=self.iters,
+            counters={k: v.value for k, v in self.counters.items()},
+            final_metric=self.history[-1][2],
+            center=self.center.copy(), workers=self.workers_w.copy())
+
+
+def run_ps_tcp(problem, easgd, cfg, eval_fn_override=None,
+               join_timeout_s: float = 600.0):
+    """The tcp transport's ``run_ps``: bind, spawn localhost workers (unless
+    ``cfg.spawn_workers`` is off — then external workers join, see
+    launch/cluster), serve, return the same PSResult the shared-memory
+    transports produce."""
+    master = MasterServer(problem, easgd, cfg,
+                          eval_fn_override=eval_fn_override,
+                          join_timeout_s=join_timeout_s)
+    listener = socket.socket()
+    listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    listener.bind((cfg.tcp_host, cfg.tcp_port))
+    listener.listen(cfg.n_workers + 2)
+    port = listener.getsockname()[1]
+    procs = (spawn_local_workers(cfg.tcp_host, port, cfg.n_workers)
+             if cfg.spawn_workers else [])
+    return master.run(listener, procs=procs)

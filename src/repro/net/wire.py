@@ -1,0 +1,307 @@
+"""The repro.net wire: a length-prefixed binary protocol for the PS runtime.
+
+One frame = one 16-byte header + payload:
+
+    !2sBBhBBQ  =  magic "RN" | version | type | wid | flags | codec | length
+
+Frame types mirror the runtime's message vocabulary (``comm.Message`` is the
+in-memory form; these are the same exchanges serialized): HELLO/WELCOME/READY
+for rendezvous, WEIGHTS (master→worker, W⁽ⁱ⁾ or W̄ down), GRAD (worker→master,
+∇ up — with τ>1 the payload stacks [grad|w|v] since the worker's local state
+diverged), WSTATE (worker→master start-of-exchange weights for the sync
+family's overlap under τ>1), HEARTBEAT, DONE/BYE for clean shutdown, ERROR.
+
+Array payloads are float64 and move through two codecs:
+
+ * ``none``    — raw bytes. Zero-copy on both sides: ``sendall`` takes a
+   memoryview of the numpy buffer, ``recv_into`` lands directly in the
+   receiver's preallocated array (no intermediate bytes objects for the
+   big-buffer path).
+ * ``sign_ef`` — 1-bit sign compression with error feedback
+   (``core.compression.sign_ef_encode_np``): the EF state lives HERE, per
+   link per direction — the sender of a link carries its own quantization
+   residual forward, exactly like the per-pod EF buffers of the jitted path.
+
+This module is deliberately jax-free: TCP worker processes import it (plus
+numpy and the problem factory) and nothing else.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import struct
+import threading
+import time
+
+import numpy as np
+
+from repro.core.compression import (
+    sign_ef_decode_np,
+    sign_ef_encode_np,
+    sign_ef_wire_nbytes,
+)
+
+MAGIC = b"RN"
+VERSION = 1
+_HEADER = struct.Struct("!2sBBhBBQ")
+HEADER_SIZE = _HEADER.size                      # 16
+
+# frame types
+HELLO = 1
+WELCOME = 2
+READY = 3
+WEIGHTS = 4
+GRAD = 5
+WSTATE = 6
+HEARTBEAT = 7
+DONE = 8
+BYE = 9
+ERROR = 10
+
+FRAME_NAMES = {HELLO: "HELLO", WELCOME: "WELCOME", READY: "READY",
+               WEIGHTS: "WEIGHTS", GRAD: "GRAD", WSTATE: "WSTATE",
+               HEARTBEAT: "HEARTBEAT", DONE: "DONE", BYE: "BYE",
+               ERROR: "ERROR"}
+
+CODEC_NONE = 0
+CODEC_SIGN_EF = 1
+CODECS = {"none": CODEC_NONE, "sign_ef": CODEC_SIGN_EF}
+
+
+class WireError(ConnectionError):
+    """Framing violation or peer gone."""
+
+
+class Frame:
+    __slots__ = ("ftype", "wid", "flags", "codec", "size")
+
+    def __init__(self, ftype, wid, flags, codec, size):
+        self.ftype = ftype
+        self.wid = wid
+        self.flags = flags
+        self.codec = codec
+        self.size = size
+
+    def __repr__(self):
+        return (f"Frame({FRAME_NAMES.get(self.ftype, self.ftype)}, "
+                f"wid={self.wid}, codec={self.codec}, size={self.size})")
+
+
+def sleep_until(deadline: float) -> None:
+    """Absolute-deadline sleep on the ``time.monotonic`` clock (oversleep on
+    a loaded box does not accumulate — same discipline as ``repro.ps``)."""
+    dt = deadline - time.monotonic()
+    if dt > 0:
+        time.sleep(dt)
+
+
+def _recv_exact(sock: socket.socket, view: memoryview) -> None:
+    """Fill ``view`` completely, looping over partial reads."""
+    got = 0
+    n = len(view)
+    while got < n:
+        k = sock.recv_into(view[got:], n - got)
+        if k == 0:
+            raise WireError("peer closed mid-frame "
+                            f"({got}/{n} bytes received)")
+        got += k
+
+
+class Link:
+    """One framed endpoint: send lock (header+payload atomic per frame),
+    per-direction error-feedback state, byte/message counters, last-seen
+    timestamp (heartbeats refresh it)."""
+
+    def __init__(self, sock: socket.socket, codec: str = "none",
+                 counters=None):
+        try:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass                        # AF_UNIX socketpair (tests) — no Nagle
+        self.sock = sock
+        self.codec = CODECS[codec]
+        self.counters = counters            # dict of slots with .value, or None
+        self.last_seen = time.monotonic()
+        self._send_lock = threading.Lock()
+        self._hdr_buf = bytearray(HEADER_SIZE)
+        self._ef = {}                       # payload size -> EF state (send)
+
+    # -- send ---------------------------------------------------------------
+
+    def _count(self, nbytes: int) -> None:
+        if self.counters is not None:
+            self.counters["messages"].value += 1
+            self.counters["wire_bytes"].value += HEADER_SIZE + nbytes
+
+    def _send(self, ftype: int, wid: int, flags: int, codec: int,
+              payload) -> int:
+        header = _HEADER.pack(MAGIC, VERSION, ftype, wid, flags, codec,
+                              len(payload))
+        with self._send_lock:
+            self.sock.sendall(header)
+            if len(payload):
+                self.sock.sendall(payload)
+        self._count(len(payload))
+        return len(payload)
+
+    def send_simple(self, ftype: int, wid: int = 0) -> int:
+        return self._send(ftype, wid, 0, CODEC_NONE, b"")
+
+    def send_json(self, ftype: int, obj, wid: int = 0) -> int:
+        return self._send(ftype, wid, 0, CODEC_NONE,
+                          json.dumps(obj).encode())
+
+    def send_array(self, ftype: int, arr: np.ndarray, wid: int = 0,
+                   segments: int = 1) -> int:
+        """Send a flat float64 array through the link's codec. Returns the
+        payload byte count that actually crossed the wire.
+
+        ``segments``: number of equal-size logical segments in ``arr``
+        (τ>1 exchanges stack [grad|w|v] into one frame). sign_ef encodes
+        EACH segment with its own scale and error-feedback state — one
+        shared scale would let weight magnitudes drown the gradient's.
+        EF state is keyed by (frame type, segment), so e.g. a WSTATE
+        weights stream never shares residuals with a GRAD stream of the
+        same size."""
+        arr = np.ascontiguousarray(arr, np.float64)
+        if self.codec == CODEC_SIGN_EF:
+            assert arr.size % max(segments, 1) == 0, (arr.size, segments)
+            segs = arr.reshape(max(segments, 1), -1)
+            parts = []
+            for i in range(segs.shape[0]):
+                key = (ftype, segs.shape[1], i)
+                err = self._ef.get(key)
+                if err is None:
+                    err = self._ef[key] = np.zeros(segs.shape[1], np.float64)
+                payload, self._ef[key] = sign_ef_encode_np(segs[i], err)
+                parts.append(payload)
+            return self._send(ftype, wid, max(segments, 1), CODEC_SIGN_EF,
+                              b"".join(parts))
+        # zero-copy: hand the numpy buffer straight to sendall
+        return self._send(ftype, wid, max(segments, 1), CODEC_NONE,
+                          memoryview(arr).cast("B"))
+
+    # -- recv ---------------------------------------------------------------
+
+    def recv_header(self, skip_heartbeat: bool = True) -> Frame:
+        while True:
+            _recv_exact(self.sock, memoryview(self._hdr_buf))
+            magic, ver, ftype, wid, flags, codec, size = _HEADER.unpack(
+                bytes(self._hdr_buf))
+            if magic != MAGIC or ver != VERSION:
+                raise WireError(f"bad frame header: magic={magic!r} v={ver}")
+            self.last_seen = time.monotonic()
+            frame = Frame(ftype, wid, flags, codec, size)
+            if skip_heartbeat and ftype == HEARTBEAT:
+                self.recv_discard(frame)
+                continue
+            return frame
+
+    def recv_payload(self, frame: Frame) -> bytearray:
+        buf = bytearray(frame.size)
+        if frame.size:
+            _recv_exact(self.sock, memoryview(buf))
+        self._count(frame.size)
+        return buf
+
+    def recv_discard(self, frame: Frame) -> None:
+        if frame.size:
+            self.recv_payload(frame)
+
+    def recv_json(self, frame: Frame) -> dict:
+        return json.loads(bytes(self.recv_payload(frame)).decode())
+
+    def recv_array(self, frame: Frame, out: np.ndarray | None = None
+                   ) -> np.ndarray:
+        """Decode an array payload. With codec none and a preallocated
+        ``out``, the socket writes STRAIGHT into the target buffer
+        (``recv_into`` — the zero-copy big-buffer path)."""
+        if frame.codec == CODEC_NONE:
+            n = frame.size // 8
+            if out is not None:
+                assert out.dtype == np.float64 and out.size == n, \
+                    (out.dtype, out.size, n)
+                _recv_exact(self.sock, memoryview(out).cast("B"))
+                self._count(frame.size)
+                return out
+            buf = self.recv_payload(frame)
+            return np.frombuffer(buf, np.float64)
+        if frame.codec == CODEC_SIGN_EF:
+            buf = self.recv_payload(frame)
+            if frame.flags <= 1:
+                arr = sign_ef_decode_np(buf)
+            else:                       # per-segment scales (see send_array)
+                mv = memoryview(buf)
+                parts, off = [], 0
+                for _ in range(frame.flags):
+                    n_i = int(np.frombuffer(mv[off:off + 8], np.uint64)[0])
+                    nb = sign_ef_wire_nbytes(n_i)
+                    parts.append(sign_ef_decode_np(mv[off:off + nb]))
+                    off += nb
+                arr = np.concatenate(parts)
+            if out is not None:
+                out[:] = arr
+                return out
+            return arr
+        raise WireError(f"unknown payload codec {frame.codec}")
+
+    def close(self) -> None:
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self.sock.close()
+
+
+# ---------------------------------------------------------------------------
+# link micro-benchmark — the measured α–β of a real socket pair, reported by
+# ``ps.calibrate`` for the DES comparison (the emulated-wire deadline pacing
+# COMPOSES with this: pacing sleeps only the excess over the real transfer).
+# ---------------------------------------------------------------------------
+
+def measure_link(host: str = "127.0.0.1", reps: int = 40,
+                 big_bytes: int = 4_000_000) -> tuple[float, float]:
+    """(alpha_s, beta_s_per_byte) of a loopback/host TCP link, measured with
+    this module's own framing: α from small-frame round-trips, β from a
+    one-way big-buffer transfer."""
+    srv = socket.socket()
+    srv.bind((host, 0))
+    srv.listen(1)
+    port = srv.getsockname()[1]
+    out = {}
+
+    def _echo():
+        conn, _ = srv.accept()
+        link = Link(conn)
+        small = np.zeros(8, np.float64)
+        for _ in range(reps):
+            f = link.recv_header()
+            link.recv_array(f, small)
+            link.send_array(WEIGHTS, small)
+        f = link.recv_header()
+        big = link.recv_array(f)
+        out["big_ok"] = big.size
+        link.send_simple(BYE)
+        link.close()
+
+    th = threading.Thread(target=_echo, daemon=True)
+    th.start()
+    cli = Link(socket.create_connection((host, port), timeout=10))
+    small = np.zeros(8, np.float64)
+    cli.send_array(WEIGHTS, small)          # warm the path
+    cli.recv_array(cli.recv_header(), small)
+    t0 = time.perf_counter()
+    for _ in range(reps - 1):
+        cli.send_array(WEIGHTS, small)
+        cli.recv_array(cli.recv_header(), small)
+    alpha = (time.perf_counter() - t0) / (reps - 1) / 2   # one-way
+    big = np.zeros(big_bytes // 8, np.float64)
+    t0 = time.perf_counter()
+    cli.send_array(GRAD, big)
+    f = cli.recv_header()                   # BYE: peer finished reading
+    cli.recv_discard(f)
+    beta = (time.perf_counter() - t0 - alpha) / big_bytes
+    cli.close()
+    srv.close()
+    th.join(timeout=5)
+    return max(alpha, 1e-7), max(beta, 1e-12)

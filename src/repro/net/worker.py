@@ -1,0 +1,187 @@
+"""The repro.net worker: a thin gradient client, runnable on any host.
+
+    PYTHONPATH=src python -m repro.net.worker --connect HOST:PORT --wid 0
+
+Deliberately minimal: numpy, the wire, and the problem factory named by the
+master's WELCOME — no jax, no optimizer state beyond what τ>1 local steps
+need. All concurrency disciplines look identical from here (the master
+decides when WEIGHTS arrive):
+
+    HELLO → WELCOME (problem spec + algorithm + τ) → build + warmup → READY
+    then per exchange:  recv WEIGHTS → [τ−1 local steps] → grad → send GRAD
+    until DONE → BYE.
+
+A background thread heartbeats every ``hb_interval_s`` so the master can
+tell a slow gradient from a dead host. With τ>1 the worker's local (w, v)
+evolve between exchanges (``easgd_flat.local_step`` — the same rule the
+shared-memory transports run), so frames stack [w|v] down and [grad|w|v]
+up; sync_easgd instead posts its evolved weights (WSTATE) BEFORE computing
+the exchange gradient, keeping the master's allreduce overlapped with
+compute (paper §6.1.3).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import socket
+import sys
+import threading
+import time
+from types import SimpleNamespace
+
+import numpy as np
+
+from repro.core import easgd_flat
+from repro.net import wire
+from repro.net.wire import Link
+
+SYNC = easgd_flat.SYNC_FAMILY
+
+
+def _connect(host: str, port: int, timeout_s: float = 30.0) -> socket.socket:
+    deadline = time.monotonic() + timeout_s
+    while True:
+        try:
+            return socket.create_connection((host, port), timeout=10)
+        except OSError:
+            if time.monotonic() > deadline:
+                raise
+            time.sleep(0.2)
+
+
+def _build_problem(factory: str, kwargs):
+    mod_name, fn_name = factory.split(":")
+    fn = getattr(importlib.import_module(mod_name), fn_name)
+    return fn(**dict((k, v) for k, v in kwargs))
+
+
+def worker_loop(host: str, port: int, wid: int,
+                token: str = "repro-net", timeout_s: float = 600.0) -> None:
+    link = Link(_connect(host, port))
+    link.sock.settimeout(timeout_s)
+    link.send_json(wire.HELLO, {"wid": wid, "token": token}, wid=wid)
+    frame = link.recv_header()
+    if frame.ftype == wire.ERROR:
+        raise RuntimeError(f"master rejected us: {link.recv_json(frame)}")
+    assert frame.ftype == wire.WELCOME, frame
+    cfg = link.recv_json(frame)
+    link.codec = wire.CODECS[cfg.get("codec", "none")]
+    algo, n, tau = cfg["algorithm"], int(cfg["n"]), int(cfg["tau"])
+    local_cfg = SimpleNamespace(eta=cfg["eta"], mu=cfg["mu"])
+    velocity = easgd_flat.uses_velocity(algo) and algo not in SYNC
+
+    stop_hb = threading.Event()
+
+    def _heartbeat():
+        interval = float(cfg.get("hb_interval_s", 2.0))
+        while not stop_hb.wait(interval):
+            try:
+                link.send_simple(wire.HEARTBEAT, wid=wid)
+            except OSError:
+                return
+
+    # heartbeat from BEFORE the problem build: a slow build (jax import +
+    # jit in a fresh interpreter) must read as alive, not silent
+    hb = threading.Thread(target=_heartbeat, daemon=True)
+    hb.start()
+
+    _, grad_fn, _ = _build_problem(cfg["factory"], cfg["kwargs"])
+    w = np.zeros(n)
+    v = np.zeros(n) if velocity else None
+    down = np.zeros(2 * n) if (velocity and tau > 1) else w
+    for k in range(int(cfg.get("warmup", 2))):   # private RNG streams ≤ −2:
+        grad_fn(w, k, -(wid + 2))                # worker streams untouched
+    link.send_simple(wire.READY, wid=wid)
+
+    step = 0
+    try:
+        while True:
+            frame = link.recv_header()
+            if frame.ftype == wire.DONE:
+                link.recv_discard(frame)
+                link.send_simple(wire.BYE, wid=wid)
+                return
+            if frame.ftype == wire.ERROR:
+                raise RuntimeError(
+                    f"master error: {link.recv_json(frame)}")
+            assert frame.ftype == wire.WEIGHTS, frame
+            link.recv_array(frame, down)
+            if down is not w:
+                w[:] = down[:n]
+                v[:] = down[n:]
+            for _ in range(tau - 1):             # τ−1 local-only steps
+                grad = grad_fn(w, step, wid)
+                easgd_flat.local_step(algo, w, v if velocity else w,
+                                      grad, local_cfg)
+                step += 1
+            if algo == "sync_easgd" and tau > 1:
+                # post evolved weights FIRST: the master's allreduce
+                # overlaps the gradient we are about to compute
+                link.send_array(wire.WSTATE, w, wid=wid)
+            grad = grad_fn(w, step, wid)
+            step += 1
+            if tau > 1 and algo not in SYNC:
+                # stacked upload: one frame, but each segment keeps its own
+                # sign-EF scale/state (grad and weight magnitudes must not
+                # share a quantization scale)
+                up = (np.concatenate([grad, w, v]) if velocity
+                      else np.concatenate([grad, w]))
+                link.send_array(wire.GRAD, up, wid=wid,
+                                segments=3 if velocity else 2)
+            else:
+                link.send_array(wire.GRAD, grad, wid=wid)
+    except BaseException as exc:                 # noqa: BLE001 — tell master
+        try:
+            link.send_json(wire.ERROR, {"msg": repr(exc)}, wid=wid)
+        except OSError:
+            pass
+        raise
+    finally:
+        stop_hb.set()
+        link.close()
+
+
+def burn_main(spec_json: str, samples: int, wid: int) -> None:
+    """Calibration burner: the EXACT worker substrate (same interpreter,
+    same jax-free import footprint), measuring its own per-gradient wall
+    period while its siblings run. Protocol: build+warm, print "R", wait
+    for a line on stdin (the gate), burn, print the per-grad seconds.
+    ``ps.calibrate`` uses the median across burners as the tcp transport's
+    concurrent compute rate."""
+    import json
+    spec = json.loads(spec_json)
+    w0, grad_fn, _ = _build_problem(spec["factory"], spec["kwargs"])
+    w = np.asarray(w0, np.float64).copy()
+    for k in range(5):
+        grad_fn(w, k, -(wid + 2))
+    print("R", flush=True)
+    sys.stdin.readline()
+    t0 = time.perf_counter()
+    for k in range(samples):
+        grad_fn(w, k, -(wid + 2))
+    print((time.perf_counter() - t0) / samples, flush=True)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--connect", default=None, metavar="HOST:PORT")
+    ap.add_argument("--wid", type=int, required=True)
+    ap.add_argument("--token", default="repro-net")
+    ap.add_argument("--timeout", type=float, default=600.0)
+    ap.add_argument("--burn", default=None, metavar="SPEC_JSON",
+                    help="calibration mode: measure this interpreter's "
+                         "concurrent gradient rate instead of training")
+    ap.add_argument("--samples", type=int, default=20)
+    args = ap.parse_args(argv)
+    if args.burn is not None:
+        burn_main(args.burn, args.samples, args.wid)
+        return
+    if args.connect is None:
+        ap.error("--connect is required (unless --burn)")
+    host, port = args.connect.rsplit(":", 1)
+    worker_loop(host, int(port), args.wid, token=args.token,
+                timeout_s=args.timeout)
+
+
+if __name__ == "__main__":
+    main()

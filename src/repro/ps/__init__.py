@@ -1,29 +1,41 @@
 """repro.ps — the real asynchronous parameter-server runtime.
 
 Executes all nine algorithms of the paper (Original/Async/Hogwild EASGD,
-Async M(EA)SGD, Sync SGD/EASGD) on genuine shared-memory transports —
-in-process threads (lock / lock-free master) and multiprocessing — with the
-optimizer math shared with the DES simulator (``core.easgd_flat``) and the
-sync exchange executing the ``repro.comm`` registry's message rounds.
-See DESIGN.md §ps.
+Async M(EA)SGD, Sync SGD/EASGD) on genuine transports — in-process threads
+(lock / lock-free master), multiprocessing on shared RawArrays, and TCP
+sockets (repro.net — the runtime spans hosts) — with the optimizer math
+shared with the DES simulator (``core.easgd_flat``) and the sync exchange
+executing the ``repro.comm`` registry's message rounds. See DESIGN.md §ps
+and §net.
+
+Exports resolve lazily (PEP 562): ``repro.ps.problems`` is numpy-only and
+must stay importable without paying the jax import — that is what keeps
+repro.net TCP worker processes starting in well under a second.
 """
-from repro.core.async_engine import ALGORITHMS
-from repro.ps.problems import (
-    NUMPY_MLP,
-    NUMPY_MLP_LARGE,
-    NUMPY_MLP_MED,
-    ProblemSpec,
-    make_numpy_mlp,
-    spec,
-)
-from repro.ps.runtime import (
-    Calibration,
-    PSConfig,
-    PSResult,
-    calibrate,
-    calibrate_sim,
-    execute_rounds,
-    run_ps,
-    run_vs_des,
-)
-from repro.ps.transport import TRANSPORTS, get_transport
+_RUNTIME = ("Calibration", "PSConfig", "PSResult", "calibrate",
+            "calibrate_sim", "execute_rounds", "run_ps", "run_vs_des")
+_PROBLEMS = ("NUMPY_MLP", "NUMPY_MLP_LARGE", "NUMPY_MLP_MED", "JAX_MLP",
+             "ProblemSpec", "make_numpy_mlp", "make_jax_mlp", "spec")
+_TRANSPORT = ("TRANSPORTS", "get_transport")
+_SUBMODULES = ("problems", "runtime", "transport")
+
+__all__ = ("ALGORITHMS",) + _RUNTIME + _PROBLEMS + _TRANSPORT + _SUBMODULES
+
+
+def __getattr__(name):
+    import importlib
+    if name in _PROBLEMS:
+        from repro.ps import problems
+        return getattr(problems, name)
+    if name in _RUNTIME:
+        from repro.ps import runtime
+        return getattr(runtime, name)
+    if name in _TRANSPORT:
+        from repro.ps import transport
+        return getattr(transport, name)
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.ps.{name}")
+    if name == "ALGORITHMS":
+        from repro.core.async_engine import ALGORITHMS
+        return ALGORITHMS
+    raise AttributeError(f"module 'repro.ps' has no attribute '{name}'")

@@ -129,3 +129,68 @@ NUMPY_MLP_MED = spec("repro.ps.problems:make_numpy_mlp",
 NUMPY_MLP_LARGE = spec("repro.ps.problems:make_numpy_mlp",
                        d_in=128, d_hidden=512, batch=32, n_train=4096,
                        n_test=1024, n_classes=4)
+
+
+# ---------------------------------------------------------------------------
+# jax-backed problem, spawn-safe: the factory gates the platform BEFORE the
+# first jax import, so spawned/remote workers rebuild it on CPU without
+# grabbing an accelerator (and without re-initializing the parent's devices)
+# ---------------------------------------------------------------------------
+
+def make_jax_mlp(seed: int = 0, n_train: int = 2048, n_test: int = 512,
+                 d_in: int = 32, d_hidden: int = 64, n_classes: int = 4,
+                 batch: int = 16, noise: float = 1.6, depth: int = 2):
+    """The thread transport's jax closures, packaged as a ``ProblemSpec``
+    factory so PROCESS and TCP workers can run jax-backed problems too:
+    same jit/grad structure as ``benchmarks.common.make_mlp_problem`` (f32
+    compute inside jit, float64 at the runtime boundary — no global x64
+    flip), but rebuildable from a dotted path inside a fresh interpreter.
+
+    Platform gate: a spawned child must never race the parent for a GPU/TPU,
+    so if this process hasn't initialized jax yet we pin it to CPU.
+    """
+    import os
+    import sys
+    if "jax" not in sys.modules:
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax
+    import jax.numpy as jnp
+    from jax import flatten_util
+
+    from repro.models import cnn
+
+    x, y = make_classification_dataset(n_train + n_test, shape=(d_in,),
+                                       n_classes=n_classes, noise=noise,
+                                       seed=seed)
+    xtr, ytr = x[:n_train], y[:n_train]
+    xte, yte = x[n_train:], y[n_train:]
+    params = cnn.mlp_init(jax.random.PRNGKey(seed), d_in=d_in,
+                          d_hidden=d_hidden, depth=depth,
+                          n_classes=n_classes)
+    flat, unravel = flatten_util.ravel_pytree(params)
+
+    @jax.jit
+    def loss_flat(w, xb, yb):
+        return cnn.xent_loss(cnn.mlp_apply(unravel(w), xb), yb)
+
+    gfn = jax.jit(jax.grad(loss_flat))
+
+    @jax.jit
+    def err_flat(w):
+        return 1.0 - cnn.accuracy(cnn.mlp_apply(unravel(w), xte), yte)
+
+    rngs = {}
+
+    def grad_fn(w, step, worker):
+        rng = rngs.setdefault(worker, np.random.RandomState(1000 + worker))
+        idx = rng.randint(0, n_train, size=batch)
+        return np.asarray(gfn(jnp.asarray(w, jnp.float32), xtr[idx],
+                              ytr[idx]), np.float64)
+
+    def eval_fn(w):
+        return float(err_flat(jnp.asarray(w, jnp.float32)))
+
+    return np.asarray(flat, np.float64), grad_fn, eval_fn
+
+
+JAX_MLP = spec("repro.ps.problems:make_jax_mlp")

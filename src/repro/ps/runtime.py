@@ -22,7 +22,16 @@ Concurrency disciplines (paper §4–5):
    gradients, so the exchange genuinely overlaps compute (paper §6.1.3);
    sync SGD needs the gradients first, so it cannot (§5.1).
 
-τ (communication period) is 1 throughout, matching the DES engine.
+τ (``EASGDConfig.tau``, the communication period) is honored by every
+loop: workers take τ−1 local-only steps (``easgd_flat.local_step``)
+between exchanges, so communication drops by 1/τ — Table 3's bandwidth
+lever, executed. The DES cross-check and the bitwise tests run at τ=1
+(the DES models τ=1 event orders).
+
+``transport="tcp"`` dispatches the whole run to the repro.net master
+server (workers are processes on other ends of a real wire — localhost
+subprocesses by default, other hosts via launch/cluster); the PSResult
+comes back in the same shape.
 """
 from __future__ import annotations
 
@@ -51,7 +60,7 @@ _DEFAULT_NET = costmodel.Network("PCIe3x16", 5e-6, 1 / 12e9)
 class PSConfig:
     algorithm: str
     n_workers: int = 4
-    transport: str = "thread"        # "thread" | "process"
+    transport: str = "thread"        # "thread" | "process" | "tcp"
     schedule: str = "ring"           # sync-family exchange ("auto" allowed)
     total_iters: int = 1000
     deterministic: bool = False      # cyclic admission == DES zero-jitter
@@ -66,9 +75,26 @@ class PSConfig:
     # to the DES (Calibration.sim_config(net=...)) for a fair cross-check.
     emulate_net: Optional[costmodel.Network] = None
     seed: int = 0
+    # -- tcp transport only (repro.net) ------------------------------------
+    wire_compression: str = "none"   # "none" | "sign_ef": per-link payload
+    #                                  codec with error-feedback state (the
+    #                                  framed 1-bit wire — core.compression)
+    tcp_host: str = "127.0.0.1"
+    tcp_port: int = 0                # 0: ephemeral (launch/cluster pins one
+    #                                  for multi-host rendezvous)
+    spawn_workers: bool = True       # False: external workers join (--hosts)
+    hb_interval_s: float = 2.0       # worker heartbeat period
+    hb_timeout_s: float = 60.0       # master declares a silent link dead
 
     def __post_init__(self):
         assert self.algorithm in ALGORITHMS, self.algorithm
+        assert self.wire_compression in ("none", "sign_ef"), \
+            self.wire_compression
+        # the shared-memory transports have no wire to compress — a config
+        # that claims compression there would silently report raw bytes
+        assert self.wire_compression == "none" or self.transport == "tcp", (
+            f"wire_compression='{self.wire_compression}' is a tcp-transport "
+            f"feature (transport='{self.transport}' moves no frames)")
 
     def resolved_schedule(self, n_bytes: float) -> str:
         if self.schedule == "auto":
@@ -155,7 +181,8 @@ def _comm_executor(ctx: PSContext) -> None:
     v = ctx.views()
     counters = {"sync_rounds": ctx.sync_rounds, "messages": ctx.messages,
                 "wire_bytes": ctx.wire_bytes}
-    n_rounds = -(-ctx.cfg.total_iters // ctx.cfg.n_workers)
+    tau = max(ctx.easgd.tau, 1)
+    n_rounds = -(-ctx.cfg.total_iters // (ctx.cfg.n_workers * tau))
     third = ctx.cfg.algorithm == "sync_sgd"
     # emulated wire: the message rounds serialize, so one exchange costs
     # Σ (α + max_frac·n·β) on top of the real copies — paced as a single
@@ -220,19 +247,33 @@ def _turnstile_worker(ctx, wid, grad_fn):
     w, vel = v.workers_w[wid], v.workers_v[wid]
     serial_compute = algo == "original_easgd"
     t_msg = ctx.cfg.t_msg_emulated(ctx.n * 8)
+    tau = max(e.tau, 1)
+    total_turns = -(-total // tau)           # one turn = one exchange = τ steps
     local_step = 0
+
+    def _tau_block():
+        """τ−1 local-only steps + the exchange gradient."""
+        nonlocal local_step
+        for _ in range(tau - 1):
+            g = grad_fn(w, local_step, wid)
+            easgd_flat.local_step(algo, w, vel, g, e)
+            local_step += 1
+        g = grad_fn(w, local_step, wid)
+        local_step += 1
+        return g
+
     while True:
-        grad = None if serial_compute else grad_fn(w, local_step, wid)
+        grad = None if serial_compute else _tau_block()
         with ctx.turn_cond:
-            while ctx.turn.value < total and ctx.turn.value % P != wid:
+            while ctx.turn.value < total_turns and ctx.turn.value % P != wid:
                 ctx.turn_cond.wait(0.05)
-            if ctx.turn.value >= total:
+            if ctx.turn.value >= total_turns:
                 ctx.turn_cond.notify_all()
                 return
             if t_msg:                        # master → worker (W̄ down)
                 _sleep_until(time.monotonic() + t_msg)
             if serial_compute:
-                grad = grad_fn(w, local_step, wid)
+                grad = _tau_block()
                 easgd_flat.master_absorb_round_robin(
                     v.center, w, vel, grad, e)
             else:
@@ -241,11 +282,10 @@ def _turnstile_worker(ctx, wid, grad_fn):
             if t_msg:                        # worker → master (W⁽ⁱ⁾ up)
                 _sleep_until(time.monotonic() + t_msg)
             ctx.turn.value += 1
-            ctx.iters.value += 1
+            ctx.iters.value += tau
             ctx.messages.value += 2          # worker↔master, both ways
             ctx.wire_bytes.value += 2 * ctx.n * 8
             ctx.turn_cond.notify_all()
-        local_step += 1
 
 
 def _fcfs_worker(ctx, wid, grad_fn):
@@ -254,9 +294,15 @@ def _fcfs_worker(ctx, wid, grad_fn):
     algo, total = ctx.cfg.algorithm, ctx.cfg.total_iters
     w, vel = v.workers_w[wid], v.workers_v[wid]
     t_msg = ctx.cfg.t_msg_emulated(ctx.n * 8)
+    tau = max(e.tau, 1)
     local_step = 0
     while ctx.iters.value < total:
+        for _ in range(tau - 1):             # τ−1 local-only steps
+            g = grad_fn(w, local_step, wid)
+            easgd_flat.local_step(algo, w, vel, g, e)
+            local_step += 1
         grad = grad_fn(w, local_step, wid)
+        local_step += 1
         deadline = None
         with ctx.master_lock:
             if ctx.iters.value >= total:
@@ -271,12 +317,11 @@ def _fcfs_worker(ctx, wid, grad_fn):
                 ctx.wire_free_at.value = deadline
             easgd_flat.master_absorb(
                 algo, v.center, v.master_vel, w, vel, grad, e)
-            ctx.iters.value += 1
+            ctx.iters.value += tau
             ctx.messages.value += 2
             ctx.wire_bytes.value += 2 * ctx.n * 8
         if deadline is not None:
             _sleep_until(deadline)
-        local_step += 1
 
 
 def _hogwild_worker(ctx, wid, grad_fn):
@@ -287,9 +332,14 @@ def _hogwild_worker(ctx, wid, grad_fn):
     algo, P, total = ctx.cfg.algorithm, ctx.cfg.n_workers, ctx.cfg.total_iters
     w, vel = v.workers_w[wid], v.workers_v[wid]
     t_msg = ctx.cfg.t_msg_emulated(ctx.n * 8)
+    tau = max(e.tau, 1)
     quota = total // P + (1 if wid < total % P else 0)
     for local_step in range(quota):
         grad = grad_fn(w, local_step, wid)
+        if (local_step + 1) % tau and local_step != quota - 1:
+            easgd_flat.local_step(algo, w, vel, grad, e)   # τ local-only
+            ctx.iters.value += 1             # racy — monitoring only
+            continue
         deadline = (time.monotonic() + 2 * t_msg) if t_msg else None
         easgd_flat.master_absorb(
             algo, v.center, v.master_vel, w, vel, grad, e)
@@ -317,34 +367,49 @@ def _sync_worker(ctx, wid, grad_fn):
     algo, P, total = ctx.cfg.algorithm, ctx.cfg.n_workers, ctx.cfg.total_iters
     w, vel = v.workers_w[wid], v.workers_v[wid]
     n = ctx.n
-    n_rounds = -(-total // P)
+    tau = max(e.tau, 1)
+    n_rounds = -(-total // (P * tau))
+    it = 0
+
+    def _local_block():
+        """τ−1 local-only steps before the barriered exchange step."""
+        nonlocal it
+        for _ in range(tau - 1):
+            g = grad_fn(w, it, wid)
+            easgd_flat.local_step(algo, w, vel, g, e)
+            it += 1
+
     if algo == "sync_easgd":
         versions = (v.center, v.center_alt)
         for step in range(n_rounds):
+            _local_block()
             c_read, c_write = versions[step % 2], versions[(step + 1) % 2]
-            v.mailbox[wid, :n] = w           # start-of-step weights
+            v.mailbox[wid, :n] = w           # start-of-exchange-step weights
             ctx.barrier.wait()               # A — exchange begins
-            grad = grad_fn(w, step, wid)     # …and overlaps this compute
+            grad = grad_fn(w, it, wid)       # …and overlaps this compute
+            it += 1
             ctx.barrier.wait()               # B — sum of W_t in every row
             easgd_flat.worker_step(algo, w, vel, grad, c_read, e)
             if wid == 0:
                 c_write[:] = c_read
                 easgd_flat.sync_master_easgd(
                     c_write, v.mailbox[0, :n] / P, P, e)
-                ctx.iters.value += P
+                ctx.iters.value += P * tau
         # NOTE: after an odd round count the final W̄ lives in center_alt;
         # the LAUNCHER copies it back post-join (doing it here would race
         # with the other workers' last worker_step, which reads .center)
         return
     for step in range(n_rounds):             # sync_sgd
-        grad = grad_fn(w, step, wid)
+        _local_block()
+        grad = grad_fn(w, it, wid)
+        it += 1
         v.mailbox[wid, :n] = grad
         ctx.barrier.wait()                   # A — gradient allreduce
         ctx.barrier.wait()                   # B
         if wid == 0:
             easgd_flat.sync_master_sgd(
                 v.center, v.master_vel, v.mailbox[0, :n] / P, e)
-            ctx.iters.value += P
+            ctx.iters.value += P * tau
         ctx.barrier.wait()                   # C — W̄ updated
         w[:] = v.center
 
@@ -358,6 +423,12 @@ def run_ps(problem, easgd: EASGDConfig, cfg: PSConfig,
     """Run one algorithm for real. ``problem`` is a ``ProblemSpec`` or a
     prebuilt (w0, grad_fn, eval_fn) triple (thread transport only)."""
     tr = get_transport(cfg.transport)
+    if hasattr(tr, "run"):
+        # network transports own the whole run (no shared buffers to hand
+        # out): repro.net's master server returns the same PSResult shape
+        return tr.run(problem, easgd, cfg,
+                      eval_fn_override=eval_fn_override,
+                      join_timeout_s=join_timeout_s)
     built = problem.build() if hasattr(problem, "build") else problem
     w0, _, eval_fn = built
     if eval_fn_override is not None:
@@ -449,7 +520,8 @@ def run_ps(problem, easgd: EASGDConfig, cfg: PSConfig,
             f"ps run failed (algorithm={cfg.algorithm}, "
             f"transport={cfg.transport}, err={ctx.err.value}, joined={ok})")
 
-    if cfg.algorithm == "sync_easgd" and (-(-cfg.total_iters // P)) % 2 == 1:
+    n_sync_rounds = -(-cfg.total_iters // (P * max(easgd.tau, 1)))
+    if cfg.algorithm == "sync_easgd" and n_sync_rounds % 2 == 1:
         v.center[:] = v.center_alt           # final version of the flip
     total_iters = (cfg.total_iters if cfg.algorithm.startswith("hogwild")
                    else ctx.iters.value)
@@ -479,7 +551,10 @@ class Calibration:
     workers run at once on this transport (measured with real threads /
     real processes: GIL, caches, and cgroup CPU quotas included);
     ``t_axpy`` / ``alpha`` — shared-memory 'wire' bandwidth and
-    small-message overhead.
+    small-message overhead; ``link_alpha`` / ``link_beta`` — the measured
+    α–β of the real socket link (tcp transport: loopback or host NIC,
+    micro-benchmarked with the repro.net framing itself), reported so the
+    DES charges the wire the run actually has.
     """
 
     n: int
@@ -489,6 +564,8 @@ class Calibration:
     t_grad_concurrent: float
     t_axpy: float
     alpha: float
+    link_alpha: float = 0.0
+    link_beta: float = 0.0
 
     def sim_config(self, algorithm: str, schedule: str,
                    eval_every_iters: int = 200, seed: int = 0,
@@ -505,16 +582,52 @@ class Calibration:
             t_compute = self.t_grad_serial
         else:
             t_compute = self.t_grad_concurrent
+        if net is None:
+            net = (costmodel.Network("tcp-link", self.link_alpha,
+                                     self.link_beta)
+                   if self.transport == "tcp" and self.link_alpha
+                   else costmodel.Network("shm", self.alpha,
+                                          self.t_axpy / (self.n * 8)))
         return SimConfig(
             n_workers=self.n_workers,
-            net=net or costmodel.Network("shm", self.alpha,
-                                         self.t_axpy / (self.n * 8)),
+            net=net,
             schedule=schedule,
             t_compute=t_compute,
             compute_jitter=0.0,
             t_update_per_byte=self.t_axpy / (self.n * 8),
             eval_every_iters=eval_every_iters,
             seed=seed)
+
+
+def _tcp_concurrent_rate(problem, P: int, samples: int) -> float:
+    """Median per-gradient wall period across P jax-free worker
+    interpreters running at once (``repro.net.worker --burn``). The stdin
+    gate excludes interpreter startup + problem build from the clock."""
+    import json
+    import subprocess
+    import sys as _sys
+
+    from repro.net.server import worker_env
+    env = worker_env()
+    spec_json = json.dumps({"factory": problem.factory,
+                            "kwargs": list(problem.kwargs)})
+    procs = [subprocess.Popen(
+        [_sys.executable, "-m", "repro.net.worker", "--wid", str(i),
+         "--burn", spec_json, "--samples", str(samples)],
+        stdin=subprocess.PIPE, stdout=subprocess.PIPE, text=True, env=env)
+        for i in range(P)]
+    try:
+        for pr in procs:
+            assert pr.stdout.readline().strip() == "R"   # built + warm
+        for pr in procs:
+            pr.stdin.write("go\n")
+            pr.stdin.flush()
+        periods = [float(pr.stdout.readline()) for pr in procs]
+    finally:
+        for pr in procs:
+            pr.stdin.close()
+            pr.wait()
+    return float(np.median(periods))
 
 
 def _process_burner(problem, samples, wid, gate):
@@ -555,6 +668,12 @@ def calibrate(problem, cfg: PSConfig, samples: int = 10) -> Calibration:
         for th in ths:
             th.join()
         t_concurrent = (time.perf_counter() - t) / samples
+    elif cfg.transport == "tcp" and hasattr(problem, "build"):
+        # the tcp transport's workers are jax-free, self-paced
+        # subprocesses — calibrate with EXACTLY that substrate
+        # (repro.net.worker --burn): each burner times its own gradient
+        # period while all P run; the median is the concurrent rate
+        t_concurrent = _tcp_concurrent_rate(problem, P, samples)
     elif hasattr(problem, "build"):
         # real processes from a gate: spawn/import excluded from the clock
         import multiprocessing
@@ -584,9 +703,17 @@ def calibrate(problem, cfg: PSConfig, samples: int = 10) -> Calibration:
     for _ in range(100):
         np.copyto(tiny_dst, tiny_src)
     alpha = (time.perf_counter() - t) / 100 + 15e-6   # + wakeup allowance
+    link_alpha = link_beta = 0.0
+    if cfg.transport == "tcp":
+        # the REAL α–β of the socket link (loopback here; the host NIC on a
+        # real cluster), measured through the repro.net framing itself —
+        # this is what the DES charges when no wire is emulated
+        from repro.net.wire import measure_link
+        link_alpha, link_beta = measure_link(cfg.tcp_host)
     return Calibration(n=n, n_workers=P, transport=cfg.transport,
                        t_grad_serial=t_serial, t_grad_concurrent=t_concurrent,
-                       t_axpy=t_axpy, alpha=alpha)
+                       t_axpy=t_axpy, alpha=alpha,
+                       link_alpha=link_alpha, link_beta=link_beta)
 
 
 def calibrate_sim(problem, cfg: PSConfig, samples: int = 10,

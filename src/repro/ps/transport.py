@@ -187,7 +187,26 @@ class ProcessTransport:
         return not alive
 
 
-TRANSPORTS = {"thread": ThreadTransport, "process": ProcessTransport}
+class TcpTransport:
+    """The repro.net socket transport: workers are PROCESSES ON OTHER ENDS
+    OF A WIRE (localhost subprocesses by default, any host via
+    launch/cluster --hosts). No shared buffers exist, so this transport
+    does not hand out arrays/locks — it owns the whole run: ``run_ps``
+    dispatches to ``run`` (the repro.net master server), which returns the
+    same PSResult the shared-memory transports produce."""
+
+    name = "tcp"
+
+    def run(self, problem, easgd, cfg, eval_fn_override=None,
+            join_timeout_s: float = 600.0):
+        from repro.net.server import run_ps_tcp
+        return run_ps_tcp(problem, easgd, cfg,
+                          eval_fn_override=eval_fn_override,
+                          join_timeout_s=join_timeout_s)
+
+
+TRANSPORTS = {"thread": ThreadTransport, "process": ProcessTransport,
+              "tcp": TcpTransport}
 
 
 def get_transport(name: str):

@@ -89,6 +89,39 @@ def test_collectives_counted_with_trips(subproc):
     """, n_devices=8)
 
 
+def test_sign_ef_collective_bytes_by_dtype(subproc):
+    """Post-compression wire accounting: a sign-EF exchange's collective
+    payload parses as int8 signs (1 byte/element — exactly the model's
+    ``jit_wire_bytes_per_element``) plus a scalar f32 scale, so the HLO
+    report and ``comm.choose``'s auto decision agree on bytes."""
+    subproc("""
+        import jax, jax.numpy as jnp
+        from functools import partial
+        from jax.sharding import PartitionSpec as P
+        from repro.launch import hloparse
+        from repro import comm
+        from repro.core import compression
+        from repro.utils.jaxcompat import auto_mesh, shard_map
+        mesh = auto_mesh((4,), ('pod',))
+        plan = comm.make_plan('psum', 'sign_ef', n_total=4, axis_name='pod')
+        n = 4096
+        @partial(shard_map, mesh=mesh, in_specs=(P('pod'), P('pod')),
+                 out_specs=P('pod'), check_vma=False)
+        def body(delta, ef):
+            mean, _ = plan.reduce_mean_flat(delta, ef)
+            return mean[None]
+        x = jnp.ones((4, 1, n)); e = jnp.zeros((4, 1, n))
+        c = jax.jit(body).lower(x, e).compile()
+        pc = hloparse.parse_costs(c.as_text())
+        by_dt = pc.collective_bytes_by_dtype
+        assert by_dt.get('s8', 0) == n, by_dt        # signs: 1 byte/element
+        assert 0 < by_dt.get('f32', 0) <= 64, by_dt  # the scalar scale
+        model = plan.wire_bytes(n)                   # jit accounting
+        assert abs(by_dt['s8'] - model) < 1, (by_dt, model)
+        print('OK')
+    """, n_devices=4)
+
+
 def test_tensor_bytes_parsing():
     assert hloparse._tensor_bytes_public("f32[128,256]{1,0}") == 128 * 256 * 4
     assert hloparse._tensor_bytes_public(
