@@ -234,6 +234,37 @@ def run_real(iters: int = 240, n_workers: int = 4, seed: int = 0,
     bytes_ratio = (sign_runs["none"]["bytes_per_round"]
                    / max(sign_runs["sign_ef"]["bytes_per_round"], 1))
 
+    # p2p sync data plane (repro.net.peer): the same deterministic
+    # sync_easgd/ring run on both planes — identical final weights
+    # (bitwise), while the Θ(P·N)-per-round master incast collapses to the
+    # control plane's Θ(N_center) and the per-worker ring traffic spreads
+    # ~2N(P−1)/P over direct worker↔worker links
+    import numpy as _np
+    p2p_rows, p2p_weights = [], {}
+    for plane in ("master", "p2p"):
+        cfg = dataclasses.replace(
+            tcp_base, algorithm="sync_easgd", schedule="ring",
+            sync_plane=plane, deterministic=True,
+            total_iters=max(iters // 2, 60))
+        res, _, rec = ps.run_vs_des(ps.NUMPY_MLP_MED, easgd, cfg,
+                                    cal=cal_tcp)
+        p2p_weights[plane] = res.center
+        rec["sync_plane"] = plane
+        rec["master_link_bytes"] = res.counters["master_link_bytes"]
+        if plane == "p2p":
+            rec["peer_link_bytes"] = res.counters["peer_link_bytes"]
+            rec["max_peer_link_bytes"] = max(
+                res.counters["peer_link_bytes"].values())
+        p2p_rows.append(rec)
+        csv_row(f"ps_runtime/tcp/p2p/{plane}", rec["measured_us_per_iter"],
+                f"des={rec['des_us_per_iter']:.1f}us;"
+                f"ratio={rec['measured_over_des']:.2f};"
+                f"master_bytes={rec['master_link_bytes']}")
+    p2p_reduction = (p2p_rows[0]["master_link_bytes"]
+                     / max(p2p_rows[1]["master_link_bytes"], 1))
+    p2p_bitwise = bool(_np.array_equal(p2p_weights["master"],
+                                       p2p_weights["p2p"]))
+
     by = {r["algorithm"]: r for r in records}
     ips = {a: by[a]["iters_per_sec"] for a in by}
     checks = {
@@ -257,6 +288,10 @@ def run_real(iters: int = 240, n_workers: int = 4, seed: int = 0,
         "sign_ef_matched_loss": (
             sign_runs["sign_ef"]["final_err"]
             <= sign_runs["none"]["final_err"] + 0.08),
+        # p2p data plane acceptance (ISSUE 4): ≥4x fewer bytes through the
+        # master link at bitwise-identical final weights
+        "p2p_master_bytes_ge_4x": p2p_reduction >= 4.0,
+        "p2p_bitwise_equal_weights": p2p_bitwise,
     }
     for k, v in checks.items():
         csv_row(f"ps_runtime/check/{k}", 0.0, "PASS" if v else "FAIL")
@@ -286,6 +321,11 @@ def run_real(iters: int = 240, n_workers: int = 4, seed: int = 0,
                 "beta_s_per_byte": cal_tcp.link_beta,
             },
             "sign_ef": {**sign_runs, "bytes_per_round_ratio": bytes_ratio},
+            "p2p": {
+                "rows": p2p_rows,
+                "master_link_bytes_reduction": p2p_reduction,
+                "bitwise_equal_weights": p2p_bitwise,
+            },
         },
         "checks": checks,
     }

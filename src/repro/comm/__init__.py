@@ -7,15 +7,39 @@ simulatable (DES engines) and benchmarkable (table3/table4 sweeps).
 ``ExchangePlan`` composes schedule × packing × compression × overlap into
 the single ``exchange(weights) -> mean_weights`` callable the Sync-EASGD
 runtime consumes. See DESIGN.md §comm for the paper mapping.
+
+Exports resolve lazily (PEP 562): the round STRUCTURE (``repro.comm.rounds``
+— Message, the per-schedule round builders, wire serialization) is
+stdlib-only and must stay importable without paying the jax import, because
+the repro.net TCP workers execute those rounds over direct worker↔worker
+links in interpreters that never load jax.
 """
-from repro.comm.schedules import (
-    SCHEDULES,
-    Schedule,
-    choose,
-    get,
-    hierarchical_allreduce,
-    names,
-    register,
-    shard_map_allreduce,
-)
-from repro.comm.plan import ExchangePlan, make_plan
+_SCHEDULES = ("SCHEDULES", "Schedule", "choose", "get",
+              "hierarchical_allreduce", "names", "register",
+              "shard_map_allreduce")
+_ROUNDS = ("MASTER", "Message", "bytes_from_rounds", "peer_pairs",
+           "rounds_from_wire", "rounds_to_wire")
+_PLAN = ("ExchangePlan", "make_plan")
+_SUBMODULES = ("plan", "rounds", "schedules")
+
+__all__ = _SCHEDULES + _ROUNDS + _PLAN + _SUBMODULES
+
+
+def __getattr__(name):
+    import importlib
+    if name in _SCHEDULES:
+        from repro.comm import schedules
+        return getattr(schedules, name)
+    if name in _ROUNDS:
+        from repro.comm import rounds
+        return getattr(rounds, name)
+    if name in _PLAN:
+        from repro.comm import plan
+        return getattr(plan, name)
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.comm.{name}")
+    raise AttributeError(f"module 'repro.comm' has no attribute '{name}'")
+
+
+def __dir__():
+    return sorted(__all__)

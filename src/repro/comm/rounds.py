@@ -1,0 +1,196 @@
+"""Exchange-schedule round structure — the wire pattern as DATA, jax-free.
+
+Each schedule in the ``repro.comm`` registry can describe itself as a list
+of ROUNDS; a round is a list of point-to-point messages that fly
+concurrently. This is the bridge between four consumers:
+
+ * the α–β cost of a round is α + max_frac·n·β, and summing rounds
+   reproduces the closed-form ``Schedule.cost_fn`` exactly (pinned by
+   tests),
+ * the repro.ps shared-memory runtime EXECUTES the same rounds over its
+   transport mailboxes (``ps.execute_rounds``),
+ * the repro.net MASTER executes them on its local mailbox for the
+   centralized sync plane, and
+ * the repro.net WORKERS execute them over direct worker↔worker TCP links
+   for the peer-to-peer sync plane (``net.peer``) — each worker owns one
+   mailbox row and ``Message.span`` tells it which byte range of the row a
+   SEGMENT frame moves.
+
+This module is deliberately jax-free (stdlib + ``core.costmodel`` only):
+TCP worker processes deserialize rounds from the master's WELCOME and
+import nothing heavier than numpy. The registry (``comm.schedules``)
+re-exports everything here, so jax-side consumers see one definition.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import costmodel
+
+MASTER = -1   # in a parameter-server wiring the master is an endpoint of
+#               its own, distinct from the p workers (round_robin uses it;
+#               peer-to-peer schedules do not)
+
+
+@dataclasses.dataclass(frozen=True)
+class Message:
+    """One point-to-point transfer inside a round.
+
+    ``src``/``dst`` are worker ranks (or ``MASTER``). ``frac`` is the
+    fraction of the buffer moved (ring moves 1/p chunks). For chunked
+    schedules, the buffer is viewed as ``chunks`` equal slices and the
+    receiver applies ``op`` to slice ``chunk``; chunk=None means the whole
+    buffer. ``op`` is "add" (accumulate into the receiver) or "set"
+    (overwrite) — receivers always read the sender's PRE-round value.
+    """
+
+    src: int
+    dst: int
+    frac: float = 1.0
+    chunk: int | None = None
+    chunks: int = 1
+    op: str = "add"
+
+    def span(self, n_elements: int) -> tuple[int, int]:
+        """Element offsets ``[start, stop)`` of the buffer segment this
+        message moves in an ``n_elements`` buffer (``chunks`` must divide
+        it — the runtime pads rows to a multiple of P for exactly this).
+        This is the SEGMENT frame's address on the p2p wire and the
+        executor's slice on the shared-memory mailbox: one definition of
+        which bytes a message touches."""
+        if self.chunk is None:
+            return 0, n_elements
+        assert n_elements % self.chunks == 0, (n_elements, self.chunks)
+        seg = n_elements // self.chunks
+        return self.chunk * seg, (self.chunk + 1) * seg
+
+    def nbytes(self, n_bytes: float) -> float:
+        """Payload bytes this message moves out of an n_bytes buffer."""
+        return self.frac * n_bytes
+
+
+def round_robin_rounds(p, n_bytes=0.0, net=None):
+    """2·p serialized master↔worker messages: gather (add into the master,
+    rank order — the same summation order as ``np.mean`` over workers, which
+    the DES↔real bitwise cross-check relies on), then broadcast."""
+    gather = [[Message(i, MASTER, op="add")] for i in range(p)]
+    bcast = [[Message(MASTER, i, op="set")] for i in range(p)]
+    return gather + bcast
+
+
+def tree_rounds(p, n_bytes=0.0, net=None):
+    rounds = []
+    d = 1
+    while d < p:
+        rounds.append([Message(i + d, i, op="add")
+                       for i in range(0, p, 2 * d)])
+        d *= 2
+    d = p // 2
+    while d >= 1:
+        rounds.append([Message(i, i + d, op="set")
+                       for i in range(0, p, 2 * d)])
+        d //= 2
+    return rounds
+
+
+def butterfly_rounds(p, n_bytes=0.0, net=None):
+    rounds = []
+    d = 1
+    while d < p:
+        rounds.append([Message(i, i ^ d, op="add") for i in range(p)])
+        d *= 2
+    return rounds
+
+
+def ring_rounds(p, n_bytes=0.0, net=None):
+    rounds = []
+    for s in range(p - 1):      # reduce-scatter
+        rounds.append([Message(r, (r + 1) % p, frac=1.0 / p,
+                               chunk=(r - s) % p, chunks=p, op="add")
+                       for r in range(p)])
+    for s in range(p - 1):      # all-gather
+        rounds.append([Message(r, (r + 1) % p, frac=1.0 / p,
+                               chunk=(r + 1 - s) % p, chunks=p, op="set")
+                       for r in range(p)])
+    return rounds
+
+
+def psum_rounds(p, n_bytes=0.0, net=None):
+    """psum is 'whatever a tuned library picks': butterfly when the α–β
+    model says latency-bound (and p is a power of two), else ring."""
+    net = net or costmodel.TPU_ICI
+    if p & (p - 1) == 0 and costmodel.t_butterfly_allreduce(n_bytes, p, net) \
+            <= costmodel.t_ring_allreduce(n_bytes, p, net):
+        return butterfly_rounds(p)
+    return ring_rounds(p)
+
+
+def _inner_size(p: int) -> int:
+    """Two-level split p = inner × outer for the hierarchical schedule:
+    inner = 2^⌈log2(p)/2⌉ (the near-square decomposition, paper §6.2's
+    ICI-pod × DCI split collapsed onto one axis)."""
+    if p <= 1:
+        return 1
+    log2p = p.bit_length() - 1
+    return 1 << ((log2p + 1) // 2)
+
+
+def hierarchical_rounds(p, n_bytes=0.0, net=None):
+    m = _inner_size(p)
+    rounds = []
+    for s in range(m - 1):      # inner grouped-ring reduce-scatter
+        rounds.append([Message(g * m + j, g * m + (j + 1) % m, frac=1.0 / m,
+                               chunk=(j - s) % m, chunks=m, op="add")
+                       for g in range(p // m) for j in range(m)])
+    for s in range(m - 1):      # inner grouped-ring all-gather
+        rounds.append([Message(g * m + j, g * m + (j + 1) % m, frac=1.0 / m,
+                               chunk=(j + 1 - s) % m, chunks=m, op="set")
+                       for g in range(p // m) for j in range(m)])
+    d = m                       # outer butterfly across groups
+    while d < p:
+        rounds.append([Message(i, i ^ d, op="add") for i in range(p)])
+        d *= 2
+    return rounds
+
+
+# ---------------------------------------------------------------------------
+# derived structure — what the p2p data plane needs to wire itself up
+# ---------------------------------------------------------------------------
+
+def bytes_from_rounds(rounds, n_bytes: float) -> float:
+    """TOTAL payload bytes all messages of ``rounds`` move for an n-byte
+    buffer (cost_from_rounds prices the same structure in TIME: per round
+    α + max_frac·n·β, messages concurrent; this sums them in BYTES, every
+    message counted — what the p2p per-link byte counters must add up to)."""
+    return sum(m.nbytes(n_bytes) for rnd in rounds for m in rnd)
+
+
+def peer_pairs(rounds) -> list[tuple[int, int]]:
+    """The worker↔worker links a round structure needs: unordered (i, j)
+    pairs with i < j, first-use order, MASTER-endpoint messages excluded
+    (those ride the existing master links)."""
+    pairs: list[tuple[int, int]] = []
+    seen = set()
+    for rnd in rounds:
+        for m in rnd:
+            if m.src == MASTER or m.dst == MASTER:
+                continue
+            pair = (min(m.src, m.dst), max(m.src, m.dst))
+            if pair not in seen:
+                seen.add(pair)
+                pairs.append(pair)
+    return pairs
+
+
+def rounds_to_wire(rounds) -> list:
+    """JSON-ready form of a round structure (the master ships this to the
+    p2p workers in WELCOME — workers never import the jax-side registry)."""
+    return [[[m.src, m.dst, m.frac, m.chunk, m.chunks, m.op] for m in rnd]
+            for rnd in rounds]
+
+
+def rounds_from_wire(obj) -> list:
+    """Inverse of ``rounds_to_wire``."""
+    return [[Message(src, dst, frac, chunk, chunks, op)
+             for src, dst, frac, chunk, chunks, op in rnd]
+            for rnd in obj]

@@ -33,6 +33,21 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core import costmodel
+from repro.comm.rounds import (       # noqa: F401 — re-exported: one
+    MASTER,                           # definition of the round structure,
+    Message,                          # importable jax-free from comm.rounds
+    _inner_size,                      # (the TCP workers' p2p data plane)
+    butterfly_rounds,
+    bytes_from_rounds,
+    hierarchical_rounds,
+    peer_pairs,
+    psum_rounds,
+    ring_rounds,
+    round_robin_rounds,
+    rounds_from_wire,
+    rounds_to_wire,
+    tree_rounds,
+)
 from repro.utils.jaxcompat import axis_size, shard_map
 
 
@@ -125,16 +140,6 @@ def ring_allreduce(x, axis_name):
     return out[:n] if pad else out
 
 
-def _inner_size(p: int) -> int:
-    """Two-level split p = inner × outer for the hierarchical schedule:
-    inner = 2^⌈log2(p)/2⌉ (the near-square decomposition, paper §6.2's
-    ICI-pod × DCI split collapsed onto one axis)."""
-    if p <= 1:
-        return 1
-    log2p = p.bit_length() - 1
-    return 1 << ((log2p + 1) // 2)
-
-
 def _grouped_ring(x, axis_name, p, m, r):
     """Ring reduce-scatter + all-gather WITHIN groups of ``m`` consecutive
     ranks (all groups in parallel). 1-D x; requires m | p."""
@@ -221,111 +226,13 @@ def round_robin_allreduce(x, axis_name):
 # round structure — the wire pattern as DATA
 # ---------------------------------------------------------------------------
 #
-# Each schedule can describe itself as a list of ROUNDS; a round is a list
-# of point-to-point messages that fly concurrently. This is the bridge
-# between the three consumers: the α–β cost of a round is α + max_frac·n·β,
-# and summing rounds reproduces the closed-form ``cost_fn`` exactly (pinned
-# by tests) — while the repro.ps runtime EXECUTES the same rounds over its
-# shared-memory transports, so the real system and the simulator move the
-# identical message pattern.
-
-MASTER = -1   # in a parameter-server wiring the master is an endpoint of
-#               its own, distinct from the p workers (round_robin uses it;
-#               peer-to-peer schedules do not)
-
-
-@dataclasses.dataclass(frozen=True)
-class Message:
-    """One point-to-point transfer inside a round.
-
-    ``src``/``dst`` are worker ranks (or ``MASTER``). ``frac`` is the
-    fraction of the buffer moved (ring moves 1/p chunks). For chunked
-    schedules, the buffer is viewed as ``chunks`` equal slices and the
-    receiver applies ``op`` to slice ``chunk``; chunk=None means the whole
-    buffer. ``op`` is "add" (accumulate into the receiver) or "set"
-    (overwrite) — receivers always read the sender's PRE-round value.
-    """
-
-    src: int
-    dst: int
-    frac: float = 1.0
-    chunk: int | None = None
-    chunks: int = 1
-    op: str = "add"
-
-
-def round_robin_rounds(p, n_bytes=0.0, net=None):
-    """2·p serialized master↔worker messages: gather (add into the master,
-    rank order — the same summation order as ``np.mean`` over workers, which
-    the DES↔real bitwise cross-check relies on), then broadcast."""
-    gather = [[Message(i, MASTER, op="add")] for i in range(p)]
-    bcast = [[Message(MASTER, i, op="set")] for i in range(p)]
-    return gather + bcast
-
-
-def tree_rounds(p, n_bytes=0.0, net=None):
-    rounds = []
-    d = 1
-    while d < p:
-        rounds.append([Message(i + d, i, op="add")
-                       for i in range(0, p, 2 * d)])
-        d *= 2
-    d = p // 2
-    while d >= 1:
-        rounds.append([Message(i, i + d, op="set")
-                       for i in range(0, p, 2 * d)])
-        d //= 2
-    return rounds
-
-
-def butterfly_rounds(p, n_bytes=0.0, net=None):
-    rounds = []
-    d = 1
-    while d < p:
-        rounds.append([Message(i, i ^ d, op="add") for i in range(p)])
-        d *= 2
-    return rounds
-
-
-def ring_rounds(p, n_bytes=0.0, net=None):
-    rounds = []
-    for s in range(p - 1):      # reduce-scatter
-        rounds.append([Message(r, (r + 1) % p, frac=1.0 / p,
-                               chunk=(r - s) % p, chunks=p, op="add")
-                       for r in range(p)])
-    for s in range(p - 1):      # all-gather
-        rounds.append([Message(r, (r + 1) % p, frac=1.0 / p,
-                               chunk=(r + 1 - s) % p, chunks=p, op="set")
-                       for r in range(p)])
-    return rounds
-
-
-def psum_rounds(p, n_bytes=0.0, net=None):
-    """psum is 'whatever a tuned library picks': butterfly when the α–β
-    model says latency-bound (and p is a power of two), else ring."""
-    net = net or costmodel.TPU_ICI
-    if p & (p - 1) == 0 and costmodel.t_butterfly_allreduce(n_bytes, p, net) \
-            <= costmodel.t_ring_allreduce(n_bytes, p, net):
-        return butterfly_rounds(p)
-    return ring_rounds(p)
-
-
-def hierarchical_rounds(p, n_bytes=0.0, net=None):
-    m = _inner_size(p)
-    rounds = []
-    for s in range(m - 1):      # inner grouped-ring reduce-scatter
-        rounds.append([Message(g * m + j, g * m + (j + 1) % m, frac=1.0 / m,
-                               chunk=(j - s) % m, chunks=m, op="add")
-                       for g in range(p // m) for j in range(m)])
-    for s in range(m - 1):      # inner grouped-ring all-gather
-        rounds.append([Message(g * m + j, g * m + (j + 1) % m, frac=1.0 / m,
-                               chunk=(j + 1 - s) % m, chunks=m, op="set")
-                       for g in range(p // m) for j in range(m)])
-    d = m                       # outer butterfly across groups
-    while d < p:
-        rounds.append([Message(i, i ^ d, op="add") for i in range(p)])
-        d *= 2
-    return rounds
+# The round structure itself lives in ``repro.comm.rounds`` (jax-free:
+# the repro.net TCP workers execute it over direct worker↔worker links
+# without importing this module) and is re-exported above. The α–β cost of
+# a round is α + max_frac·n·β, and summing rounds reproduces the
+# closed-form ``cost_fn`` exactly (pinned by tests) — while the repro.ps
+# runtime EXECUTES the same rounds over its transports, so the real system
+# and the simulator move the identical message pattern.
 
 
 def t_hierarchical_allreduce(n: float, p: int, net: costmodel.Network
@@ -396,6 +303,15 @@ class Schedule:
         messages fly concurrently); rounds are serialized."""
         return sum(net.alpha + max(m.frac for m in rnd) * n_bytes * net.beta
                    for rnd in self.rounds(p, n_bytes, net))
+
+    def bytes_from_rounds(self, n_bytes: float, p: int,
+                          net: costmodel.Network = costmodel.TPU_ICI
+                          ) -> float:
+        """TOTAL payload bytes the schedule's messages move for one
+        exchange of an n-byte buffer (every message counted — this is what
+        the p2p data plane's measured per-link byte counters must sum to;
+        ``cost_from_rounds`` prices the same structure in time)."""
+        return bytes_from_rounds(self.rounds(p, n_bytes, net), n_bytes)
 
 
 SCHEDULES: dict[str, Schedule] = {}

@@ -22,6 +22,17 @@ starts the clock only after every worker reported READY (problem built,
 caches warm). Heartbeats let the master tell a slow gradient from a dead
 host; DONE/BYE shuts everything down cleanly. ``--compression sign_ef``
 turns on 1-bit sign+error-feedback payloads on every link.
+
+``--sync-plane p2p`` (sync family): the workers execute the schedule's
+rounds over direct worker↔worker links instead of the master's mailbox —
+the master degrades to a control-plane coordinator and its links carry
+Θ(N_center) instead of Θ(P·N) per round. With --hosts the printed worker
+one-liners pin each peer listener to --port+1+wid, so the whole p2p mesh
+is firewall-predictable and launchable verbatim:
+
+    PYTHONPATH=src python -m repro.launch.cluster --workers 4 \
+        --algorithm sync_easgd --schedule ring --sync-plane p2p \
+        --hosts knl01,knl02 --port 29500
 """
 from __future__ import annotations
 
@@ -69,6 +80,13 @@ def main(argv=None):
                     choices=["none", "sign_ef"],
                     help="per-link wire codec (sign_ef: 1 bit/element + "
                          "error feedback)")
+    ap.add_argument("--sync-plane", default="master",
+                    choices=["master", "p2p"],
+                    help="sync-family data plane: 'master' centralizes the "
+                         "allreduce at the master (Θ(P·N) through its "
+                         "links per round); 'p2p' has the workers execute "
+                         "Schedule.rounds over direct worker↔worker links "
+                         "(master degrades to control plane)")
     ap.add_argument("--emulate", default="none", choices=["wire", "none"],
                     help="'wire': deadline-pace every message under "
                          "costmodel.PS_WIRE on top of the real socket")
@@ -88,8 +106,17 @@ def main(argv=None):
     if args.compression != "none" and args.transport != "tcp":
         ap.error("--compression is a tcp wire feature; the shared-memory "
                  "transports move no frames")
+    if args.sync_plane == "p2p" and args.transport != "tcp":
+        ap.error("--sync-plane p2p is a tcp feature: the p2p data plane is "
+                 "worker↔worker sockets")
     algos = (list(ps.ALGORITHMS) if args.algorithm == "all"
              else [args.algorithm])
+    if args.sync_plane == "p2p":
+        from repro.core.easgd_flat import SYNC_FAMILY
+        bad = [a for a in algos if a not in SYNC_FAMILY]
+        if bad:
+            ap.error(f"--sync-plane p2p applies to the sync family only; "
+                     f"{bad} exchange through the master by definition")
     easgd = EASGDConfig(eta=args.eta, rho=args.rho, mu=0.9, tau=args.tau)
     emulate = costmodel.PS_WIRE if args.emulate == "wire" else None
     multi_host = bool(args.hosts)
@@ -100,7 +127,8 @@ def main(argv=None):
         emulate_net=emulate, wire_compression=args.compression,
         tcp_host="0.0.0.0" if multi_host else "127.0.0.1",
         tcp_port=args.port if multi_host else 0,
-        spawn_workers=not multi_host)
+        spawn_workers=not multi_host,
+        sync_plane=args.sync_plane)
 
     results = []
     for algo in algos:
@@ -109,10 +137,21 @@ def main(argv=None):
         if multi_host:
             hosts = [h for h in args.hosts.split(",") if h]
             addr = _advertised_addr(args.port)
-            print(f"# master: {algo} on {addr}; start each worker:")
+            p2p = args.sync_plane == "p2p"
+            note = ""
+            if p2p:
+                # pinned peer-listener range so the worker↔worker data
+                # plane is firewall-predictable: wid i binds --port+1+i
+                note = (f" (p2p data plane: peer listeners bind ports "
+                        f"{args.port + 1}..{args.port + args.workers})")
+            print(f"# master: {algo} on {addr} "
+                  f"sync_plane={args.sync_plane}{note}; start each worker:")
             for wid in range(args.workers):
                 host = hosts[wid % len(hosts)]
-                cmd = worker_command(addr, wid)
+                cmd = worker_command(
+                    addr, wid,
+                    sync_plane=args.sync_plane if p2p else None,
+                    peer_port=args.port + 1 + wid if p2p else None)
                 print(f"#   [{host}] {cmd}")
                 if args.ssh:
                     ssh_procs.append(subprocess.Popen(

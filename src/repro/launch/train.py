@@ -50,6 +50,9 @@ def run_ps_mode(args) -> list:
         raise SystemExit(
             f"--mode ps --transport tcp supports wire compression "
             f"none|sign_ef, got '{wire_codec}'")
+    if args.sync_plane == "p2p" and args.transport != "tcp":
+        raise SystemExit("--sync-plane p2p needs --transport tcp (the p2p "
+                         "data plane is worker↔worker sockets)")
     base = ps.PSConfig(
         algorithm=algos[0], n_workers=args.ps_workers,
         transport=args.transport, schedule=args.schedule or "ring",
@@ -57,8 +60,12 @@ def run_ps_mode(args) -> list:
         emulate_net=net, wire_compression=wire_codec)
     cal = ps.calibrate(ps.NUMPY_MLP_MED, base)
     out = []
+    from repro.core.easgd_flat import SYNC_FAMILY as _SYNC
     for algo in algos:
-        cfg = _dc.replace(base, algorithm=algo)
+        # the p2p plane only exists for the sync family; `--algorithm all
+        # --sync-plane p2p` runs the rest through the master as usual
+        plane = args.sync_plane if algo in _SYNC else "master"
+        cfg = _dc.replace(base, algorithm=algo, sync_plane=plane)
         res, _, rec = ps.run_vs_des(ps.NUMPY_MLP_MED, easgd, cfg, cal=cal)
         print(f"{algo:16s} [{res.transport}/{res.schedule}] "
               f"iters={res.total_iters} err={res.final_metric:.3f} "
@@ -105,6 +112,11 @@ def main(argv=None):
     ap.add_argument("--ps-workers", type=int, default=4)
     ap.add_argument("--ps-iters", type=int, default=400)
     ap.add_argument("--ps-eval-every", type=int, default=200)
+    ap.add_argument("--sync-plane", default="master",
+                    choices=["master", "p2p"],
+                    help="tcp sync family: 'p2p' executes Schedule.rounds "
+                         "over direct worker↔worker links (the master "
+                         "becomes control plane — see repro.net.peer)")
     ap.add_argument("--emulate", default="wire", choices=["wire", "none"],
                     help="ps wire emulation: 'wire' sleeps each message's "
                          "α+nβ under costmodel.PS_WIRE (paper's regime); "

@@ -1,0 +1,288 @@
+"""The repro.net peer-to-peer data plane: workers execute ``Schedule.rounds``
+over direct worker↔worker TCP links.
+
+Under the centralized sync plane the master executes the allreduce on its
+local mailbox, so every training round funnels Θ(P·N) bytes through the
+master's links — the rank-ordered incast the paper's §5.1/§6.1 schedules
+exist to eliminate. Here each worker owns ONE mailbox row and moves exactly
+the registry's message pattern itself: for every ``Message`` whose ``src``
+is this worker, the ``Message.span`` slice of the row goes out as a SEGMENT
+frame on the persistent link to ``dst``; for every message whose ``dst`` is
+this worker, the matching slice is received and combined (``add``/``set``).
+The master degrades to a control-plane coordinator (rendezvous, eval,
+heartbeats, shutdown) and its links carry only Θ(N_center) — worker 0's
+CENTER reports — while per-worker ring traffic is ~2N(P−1)/P per exchange.
+
+Wiring: every worker opens a peer listener BEFORE saying HELLO and
+advertises its (host, port); the master's WELCOME carries the full
+directory plus the resolved rounds (``comm.rounds`` wire form — this
+module, like the worker, never imports the jax-side registry). For each
+unordered pair (i, j) that appears in the rounds, the HIGHER wid dials the
+lower's listener (PEERS handshake: {"wid", "token"} out, {"wid"} ack back);
+dials complete against the listener backlog before anyone blocks in
+accept, so the mesh setup cannot deadlock.
+
+Execution is alloc-free in steady state: the per-round send/recv plan and
+the per-(peer, segment) receive buffers are precomputed once, sends are
+``sendall`` on memoryviews of the row, ``op=set`` raw segments land via
+``recv_into`` DIRECTLY in the row slice. Within a round every send happens
+before any receive is applied — receivers read senders' PRE-round values,
+the exact snapshot discipline of ``ps.execute_rounds`` — which, together
+with IEEE-754 addition's commutativity (ring/tree literally copy one
+accumulation chain to every rank; butterfly/hierarchical rows differ only
+in addend ORDER of the same pairwise sums), makes every worker's row
+bitwise equal to the centralized ``mailbox[0]``. That is what lets each
+worker advance a local center replica bit-for-bit in lockstep with the
+master-plane run (the thread↔tcp↔p2p triangle pinned in tests/test_net.py).
+
+Per-link sign-EF composes exactly as on the master links: the sender of a
+link carries its own quantization residual forward, keyed by (frame type,
+segment length, ef_tag=chunk index), so every (peer, vector-segment)
+stream has its own scale and error-feedback state.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+from time import monotonic as _monotonic
+
+import numpy as np
+
+from repro.comm.rounds import MASTER, Message
+from repro.net import wire
+from repro.net.wire import Link
+
+# Above this per-message payload size the round executor moves sends to a
+# helper thread: with everyone inside a round sending before receiving, a
+# segment larger than the kernel's socket buffering would otherwise leave
+# every worker blocked in sendall with nobody draining — a distributed
+# deadlock. 64 KiB sits safely under Linux's default wmem/rmem (~208 KiB
+# each side), so the common model-sized path stays inline and alloc-free.
+INLINE_SEND_MAX = 64 * 1024
+
+
+def predicted_link_bytes(rounds, padded_elements: int) -> dict:
+    """Exact wire bytes (header + raw-f64 payload) per unordered worker
+    pair for ONE exchange of the given rounds — what each endpoint's
+    per-link counter must report per exchange under ``codec=none``. Both
+    directions of a pair are summed, matching a Link's counter (it counts
+    its sends AND its receives)."""
+    out: dict[tuple, int] = {}
+    for rnd in rounds:
+        for m in rnd:
+            if m.src == MASTER or m.dst == MASTER:
+                continue
+            a, b = m.span(padded_elements)
+            pair = (min(m.src, m.dst), max(m.src, m.dst))
+            out[pair] = out.get(pair, 0) + wire.HEADER_SIZE + (b - a) * 8
+    return out
+
+
+class PeerMesh:
+    """One worker's endpoint of the p2p data plane: listener + persistent
+    links to every peer its rounds talk to, plus the round executor."""
+
+    def __init__(self, wid: int, token: str, codec: str = "none",
+                 bind_host: str = "0.0.0.0", port: int = 0,
+                 timeout_s: float = 600.0):
+        self.wid = wid
+        self.token = token
+        self.codec = codec
+        self.timeout_s = timeout_s
+        self.listener = socket.socket()
+        self.listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        try:
+            self.listener.bind((bind_host, port))
+        except OSError:
+            # bind_host is the interface the master link runs over; if it
+            # is not bindable (NAT'd advertisement), fall back to any
+            self.listener.bind(("0.0.0.0", port))
+        self.listener.listen(16)
+        self.port = self.listener.getsockname()[1]
+        self.links: dict[int, Link] = {}
+        self.counters: dict[int, dict] = {}
+        self.rounds_executed = 0
+        self._plan: list = []            # [(sends, recvs)] per round
+        self._scratch: dict = {}         # (src, a, b) -> recv buffer
+
+    # -- mesh setup ----------------------------------------------------------
+
+    def _register(self, peer: int, sock: socket.socket) -> Link:
+        sock.settimeout(self.timeout_s)
+        link = Link(sock, codec=self.codec)
+        self.links[peer] = link
+        return link
+
+    def connect(self, directory: dict, pairs) -> None:
+        """Establish one persistent link per pair involving this worker.
+        ``directory``: wid -> (host, port). The higher wid dials, the lower
+        accepts; all dials are issued (and their PEERS hello sent) before
+        this worker blocks in accept, so setup cannot deadlock."""
+        dial = sorted(p for (p, q) in pairs if q == self.wid)
+        expect = {q for (p, q) in pairs if p == self.wid}
+        dialed = {}
+        for peer in dial:                # dials complete against backlogs
+            host, port = directory[str(peer)] if str(peer) in directory \
+                else directory[peer]
+            sock = socket.create_connection((host, int(port)),
+                                            timeout=self.timeout_s)
+            link = self._register(peer, sock)
+            link.send_json(wire.PEERS, {"wid": self.wid, "token": self.token},
+                           wid=self.wid)
+            dialed[peer] = link
+        deadline = _monotonic() + self.timeout_s
+        self.listener.settimeout(1.0)
+        while expect:
+            if _monotonic() > deadline:
+                raise wire.WireError(
+                    f"p2p mesh setup timeout: still waiting for peers "
+                    f"{sorted(expect)} to dial worker {self.wid}")
+            try:
+                conn, _ = self.listener.accept()
+            except socket.timeout:
+                continue
+            # a stray connection (scanner, wrong peer) must neither crash
+            # the worker nor stall the accept loop — short handshake
+            # timeout, errors close just that socket
+            conn.settimeout(10.0)
+            probe = Link(conn, codec=self.codec)
+            try:
+                frame = probe.recv_header()
+                if frame.ftype != wire.PEERS:
+                    probe.close()
+                    continue
+                hello = probe.recv_json(frame)
+                peer = int(hello.get("wid", -99))
+                if hello.get("token") != self.token or peer not in expect:
+                    probe.send_json(wire.ERROR,
+                                    {"msg": f"bad peer hello {peer}"})
+                    probe.close()
+                    continue
+                probe.send_json(wire.PEERS, {"wid": self.wid}, wid=self.wid)
+            except (socket.timeout, wire.WireError, OSError, ValueError):
+                probe.close()
+                continue
+            conn.settimeout(self.timeout_s)
+            self.links[peer] = probe
+            expect.discard(peer)
+        for peer, link in dialed.items():          # acks from the acceptors
+            frame = link.recv_header()
+            if frame.ftype != wire.PEERS:
+                raise wire.WireError(
+                    f"peer {peer} rejected the handshake: "
+                    f"{wire.FRAME_NAMES.get(frame.ftype, frame.ftype)}")
+            ack = link.recv_json(frame)
+            assert int(ack["wid"]) == peer, (ack, peer)
+        # counters attach only now: stats contain SEGMENT traffic, not the
+        # handshake (predicted_link_bytes prices the data plane alone)
+        for peer, link in self.links.items():
+            self.counters[peer] = {"messages": wire.Slot(),
+                                   "wire_bytes": wire.Slot()}
+            link.counters = self.counters[peer]
+
+    # -- the round executor --------------------------------------------------
+
+    def set_rounds(self, rounds: list, padded: int) -> None:
+        """Precompute the per-round send/recv plan and the receive buffers
+        so ``execute_exchange`` is alloc-free: sends are (link, span) pairs,
+        receives get a preallocated per-(peer, segment) scratch buffer
+        (``op=set`` raw receives land directly in the row on the inline
+        path). The sign-EF tag is (chunk, op): a ring link carries a
+        chunk's reduce-scatter partial sums AND its all-gather broadcast
+        values — two streams whose quantization residuals must not mix."""
+        self._plan = []
+        self._scratch = {}
+        max_send = 0
+        for rnd in rounds:
+            sends = []
+            recvs = []
+            for m in rnd:
+                if m.src == self.wid:
+                    a, b = m.span(padded)
+                    max_send = max(max_send, (b - a) * 8)
+                    sends.append((self.links[m.dst], a, b, (m.chunk, m.op)))
+                elif m.dst == self.wid:
+                    a, b = m.span(padded)
+                    key = (m.src, a, b)
+                    if key not in self._scratch:
+                        self._scratch[key] = np.zeros(b - a)
+                    recvs.append((self.links[m.src], a, b, m.op,
+                                  self._scratch[key]))
+            self._plan.append((sends, recvs))
+        # segments past the kernel's socket buffering would deadlock the
+        # everyone-sends-first cycle — move those sends to a helper thread
+        self._threaded = max_send > INLINE_SEND_MAX
+
+    def _do_sends(self, row, sends, seq, err_box=None) -> None:
+        try:
+            for link, a, b, tag in sends:
+                link.send_array(wire.SEGMENT, row[a:b], wid=seq, ef_tag=tag)
+        except BaseException as e:               # noqa: BLE001 — re-raised
+            if err_box is None:
+                raise
+            err_box.append(e)
+
+    def execute_exchange(self, row: np.ndarray) -> None:
+        """One allreduce: this worker's share of every round, in schedule
+        order, receivers reading senders' PRE-round values. Inline path
+        (segments ≤ INLINE_SEND_MAX): all sends complete against kernel
+        buffers (``sendall`` returns once the kernel owns the bytes), then
+        receives apply — zero-copy ``recv_into`` the row for raw ``set``
+        segments. Threaded path (large segments): sends run in a helper
+        thread while receives drain into scratch, and the row is only
+        mutated after the sends — which read it — have finished."""
+        for r_idx, (sends, recvs) in enumerate(self._plan):
+            seq = r_idx & 0x7FFF         # rides the header's wid field
+            sender = None
+            err_box: list = []
+            if self._threaded and sends:
+                sender = threading.Thread(
+                    target=self._do_sends, args=(row, sends, seq, err_box))
+                sender.start()
+            else:
+                self._do_sends(row, sends, seq)
+            pending = []
+            for link, a, b, op, scratch in recvs:
+                frame = link.recv_header()
+                if frame.ftype != wire.SEGMENT or frame.wid != seq:
+                    raise wire.WireError(
+                        f"p2p desync: expected SEGMENT round {seq}, got "
+                        f"{wire.FRAME_NAMES.get(frame.ftype, frame.ftype)} "
+                        f"round {frame.wid}")
+                if sender is None and op == "set" \
+                        and frame.codec == wire.CODEC_NONE:
+                    link.recv_array(frame, row[a:b])   # straight into the row
+                else:
+                    link.recv_array(frame, scratch)
+                    pending.append((a, b, op, scratch))
+            if sender is not None:
+                sender.join()
+                if err_box:
+                    raise err_box[0]
+            for a, b, op, scratch in pending:          # row mutations only
+                if op == "set":                        # after sends read it
+                    row[a:b] = scratch
+                else:
+                    row[a:b] += scratch
+            self.rounds_executed += 1
+
+    # -- accounting / teardown ----------------------------------------------
+
+    def stats(self) -> dict:
+        """JSON-ready per-link counters, reported to the master in BYE."""
+        return {
+            "sync_rounds": self.rounds_executed,
+            "peer_links": {
+                str(peer): {"messages": c["messages"].value,
+                            "wire_bytes": c["wire_bytes"].value}
+                for peer, c in sorted(self.counters.items())},
+        }
+
+    def close(self) -> None:
+        for link in self.links.values():
+            link.close()
+        self.links.clear()
+        try:
+            self.listener.close()
+        except OSError:
+            pass

@@ -23,6 +23,13 @@ workers hold only what they need to compute gradients:
    (same numpy executor as the thread transport ⇒ same summation order ⇒
    same bits) while the workers' gradient computation genuinely overlaps
    (paper §6.1.3), then absorbs the GRADs and applies the center update.
+   Under ``PSConfig.sync_plane="p2p"`` the master instead degrades to a
+   CONTROL-PLANE coordinator: WELCOME ships the peer directory + the
+   resolved rounds, the workers execute them over direct worker↔worker
+   links (``net.peer``) and advance bitwise-identical center replicas,
+   and the master links carry only worker 0's CENTER reports at eval
+   rounds plus one final WSTATE per worker — Θ(N_center) instead of the
+   centralized plane's Θ(P·N) per round (see DESIGN.md §net).
 
 τ>1 communication periods: workers take τ−1 local steps
 (``easgd_flat.local_step``) between exchanges, so their local (w, v)
@@ -91,18 +98,24 @@ def spawn_local_workers(host: str, port: int, n_workers: int,
     ]
 
 
-def worker_command(addr: str, wid: int, token: str = DEFAULT_TOKEN) -> str:
+def worker_command(addr: str, wid: int, token: str = DEFAULT_TOKEN,
+                   sync_plane: str | None = None,
+                   peer_port: int | None = None) -> str:
     """The shell line a REMOTE host runs to join this master (printed by
-    launch/cluster for --hosts; also what --ssh executes)."""
-    return (f"PYTHONPATH=src python -m repro.net.worker "
-            f"--connect {addr} --wid {wid} --token {token}")
+    launch/cluster for --hosts; also what --ssh executes). For a p2p run
+    the line pins the worker's peer-listener port (``--peer-port``) so the
+    worker↔worker data plane is firewall-predictable, and carries
+    ``--sync-plane`` so the one-liner is launchable verbatim."""
+    cmd = (f"PYTHONPATH=src python -m repro.net.worker "
+           f"--connect {addr} --wid {wid} --token {token}")
+    if sync_plane is not None:
+        cmd += f" --sync-plane {sync_plane}"
+    if peer_port is not None:
+        cmd += f" --peer-port {peer_port}"
+    return cmd
 
 
-class _Slot:
-    __slots__ = ("value",)
-
-    def __init__(self, value=0):
-        self.value = value
+_Slot = wire.Slot          # the Link counter cell (one definition, wire.py)
 
 
 class MasterServer:
@@ -134,7 +147,17 @@ class MasterServer:
         self.rounds = (comm_schedules.get(self.sched_name)
                        .rounds(P, self.n * 8, cfg.net)
                        if cfg.algorithm in SYNC else [])
+        self.sync_p2p = (cfg.algorithm in SYNC
+                         and getattr(cfg, "sync_plane", "master") == "p2p")
+        if self.sync_p2p and any(
+                m.src == comm_schedules.MASTER or m.dst == comm_schedules.MASTER
+                for rnd in self.rounds for m in rnd):
+            raise ValueError(
+                f"schedule '{self.sched_name}' routes through the master "
+                f"endpoint — it IS the master plane; pick a peer schedule "
+                f"(ring/tree/butterfly/hierarchical) for sync_plane='p2p'")
         padded = self.n + (-self.n) % max(P, 1)
+        self.padded = padded
         # -- master-owned optimizer state (thread-transport layout) --------
         self.center = self.w0.copy()
         self.master_vel = np.zeros(self.n)
@@ -142,9 +165,19 @@ class MasterServer:
         self.workers_v = np.zeros((P, self.n))
         self.mailbox = np.zeros((P + 1, padded))
         # -- wiring --------------------------------------------------------
+        # master_link_bytes counts ONLY frames on the master's own links
+        # (wire_bytes additionally absorbs the local-mailbox round bytes of
+        # the centralized sync plane) — the p2p-vs-master incast comparison
+        # reads this slot on both planes
         self.counters = {"sync_rounds": _Slot(), "messages": _Slot(),
-                         "wire_bytes": _Slot()}
+                         "wire_bytes": _Slot(),
+                         "master_link_bytes": _Slot()}
+        self.link_counters = {"messages": self.counters["messages"],
+                              "wire_bytes": self.counters["wire_bytes"],
+                              "link_bytes": self.counters["master_link_bytes"]}
         self.links: dict[int, Link] = {}
+        self.peer_addrs: dict[int, list] = {}
+        self.bye_stats: dict[int, dict] = {}
         self.events: queue.Queue = queue.Queue()
         self.grad_bufs = [np.zeros(self._up_elems()) for _ in range(P)]
         self.wstate_bufs = [np.zeros(self.n) for _ in range(P)]
@@ -211,6 +244,30 @@ class MasterServer:
                 self.cfg.t_msg_emulated(
                     wire_payload_nbytes(self._up_elems(), codec)))
 
+    # -- sync-family round arithmetic (shared by both planes) ---------------
+
+    def _n_sync_rounds(self) -> int:
+        return -(-self.cfg.total_iters // (self.cfg.n_workers * self.tau))
+
+    def _t_sync_wire(self) -> float:
+        """Emulated α–β time of one full exchange: the rounds serialize,
+        each costs α + max_frac·n·β (its messages fly concurrently)."""
+        return sum(
+            self.cfg.t_msg_emulated(max(m.frac for m in rnd) * self.n * 8)
+            for rnd in self.rounds)
+
+    def _eval_rounds(self) -> list:
+        """Exchange-round indices after which the eval cadence fires —
+        the `_maybe_eval` trigger precomputed, so the p2p workers and this
+        master agree on exactly when worker 0 reports its CENTER."""
+        evals, last = [], 0
+        per = self.cfg.n_workers * self.tau
+        for k in range(self._n_sync_rounds()):
+            if (k + 1) * per - last >= self.cfg.eval_every_iters:
+                evals.append(k)
+                last = (k + 1) * per
+        return evals
+
     # -- lifecycle -----------------------------------------------------------
 
     def rendezvous(self, listener: socket.socket, token: str) -> None:
@@ -231,7 +288,7 @@ class MasterServer:
                 continue
             conn.settimeout(30.0)       # a connected-but-silent client must
             link = Link(conn, codec=cfg.wire_compression,   # not stall HELLO
-                        counters=self.counters)
+                        counters=self.link_counters)
             try:
                 frame = link.recv_header()
             except (socket.timeout, wire.WireError, OSError):
@@ -250,21 +307,46 @@ class MasterServer:
                 link.send_json(wire.ERROR, {"msg": f"bad wid {wid}"})
                 link.close()
                 continue
+            if "peer" in hello:
+                self.peer_addrs[wid] = list(hello["peer"])
             self.links[wid] = link
+        if self.sync_p2p:
+            missing = [w for w in self.links if w not in self.peer_addrs]
+            if missing:
+                for link in self.links.values():
+                    link.send_json(wire.ERROR, {
+                        "msg": f"sync_plane=p2p but worker(s) {missing} "
+                               f"advertised no peer listener "
+                               f"(started with --sync-plane master?)"})
+                raise RuntimeError(
+                    f"p2p rendezvous failed: worker(s) {missing} advertised "
+                    f"no peer listener")
         e = self.easgd
         for wid, link in self.links.items():
-            link.send_json(wire.WELCOME, {
+            welcome = {
                 "wid": wid,
                 "factory": self.problem.factory,
                 "kwargs": list(self.problem.kwargs),
                 "algorithm": cfg.algorithm,
                 "n": self.n,
                 "tau": self.tau,
-                "eta": e.eta, "mu": e.mu,
+                "eta": e.eta, "mu": e.mu, "rho": e.rho,
                 "codec": cfg.wire_compression,
                 "warmup": 2,
                 "hb_interval_s": cfg.hb_interval_s,
-            })
+            }
+            if self.sync_p2p:
+                welcome.update({
+                    "sync_plane": "p2p",
+                    "p": P,
+                    "padded": self.padded,
+                    "rounds": comm_schedules.rounds_to_wire(self.rounds),
+                    "n_rounds": self._n_sync_rounds(),
+                    "eval_rounds": self._eval_rounds(),
+                    "t_wire_s": self._t_sync_wire(),
+                    "peers": {str(w): a for w, a in self.peer_addrs.items()},
+                })
+            link.send_json(wire.WELCOME, welcome)
         for wid, link in self.links.items():
             self._threads.append(threading.Thread(
                 target=self._reader, args=(wid, link), daemon=True))
@@ -290,11 +372,19 @@ class MasterServer:
                 elif frame.ftype == wire.WSTATE:
                     link.recv_array(frame, self.wstate_bufs[wid])
                     self.events.put((wid, "wstate", None))
+                elif frame.ftype == wire.CENTER:
+                    # eval-cadence only — the fresh array keeps a slow eval
+                    # from racing the next report into a shared buffer
+                    self.events.put((wid, "center",
+                                     link.recv_array(frame).copy()))
                 elif frame.ftype == wire.READY:
                     link.recv_discard(frame)
                     self.events.put((wid, "ready", None))
                 elif frame.ftype == wire.BYE:
-                    link.recv_discard(frame)
+                    if frame.size:      # p2p workers attach per-link stats
+                        self.bye_stats[wid] = link.recv_json(frame)
+                    else:
+                        link.recv_discard(frame)
                     self.events.put((wid, "bye", None))
                     return
                 elif frame.ftype == wire.ERROR:
@@ -379,7 +469,9 @@ class MasterServer:
     def serve(self) -> None:
         algo = self.cfg.algorithm
         self._t0 = time.perf_counter()
-        if algo in SYNC:
+        if self.sync_p2p:
+            self._serve_sync_p2p()
+        elif algo in SYNC:
             self._serve_sync()
         elif algo == "original_easgd":
             self._serve_original()
@@ -532,10 +624,8 @@ class MasterServer:
         e, cfg = self.easgd, self.cfg
         algo, P, n = cfg.algorithm, cfg.n_workers, self.n
         all_wids = set(self.links)
-        n_rounds = -(-cfg.total_iters // (P * self.tau))
-        t_wire = sum(
-            cfg.t_msg_emulated(max(m.frac for m in rnd) * n * 8)
-            for rnd in self.rounds)
+        n_rounds = self._n_sync_rounds()
+        t_wire = self._t_sync_wire()
         for _ in range(n_rounds):
             for wid in self.links:
                 self._send_weights(wid)
@@ -582,6 +672,39 @@ class MasterServer:
             self.iters += P * self.tau
             self._maybe_eval()
 
+    def _serve_sync_p2p(self) -> None:
+        """The control plane of the p2p sync family: the workers execute
+        the rounds among themselves (net/peer.py), so this loop only
+        consumes worker 0's CENTER reports (eval cadence precomputed in
+        ``_eval_rounds`` — both sides agree without extra traffic), each
+        worker's one final WSTATE, and the heartbeat/error machinery of
+        ``_next_event``. No WEIGHTS go out, no GRADs come back: the master
+        link moves Θ(N_center), not Θ(P·N) per round."""
+        P = self.cfg.n_workers
+        eval_rounds = self._eval_rounds()
+        per = P * self.tau
+        evals_done = 0
+        final_center = False
+        wstates: set = set()
+        while not (final_center and len(wstates) == P):
+            wid, kind, detail = self._next_event(self.timeout)
+            if kind == "center":
+                self.center[:] = detail
+                if evals_done < len(eval_rounds):
+                    self.iters = (eval_rounds[evals_done] + 1) * per
+                    evals_done += 1
+                    self._maybe_eval(force=True)
+                else:                    # the final center update
+                    self.iters = self._n_sync_rounds() * per
+                    final_center = True
+            elif kind == "wstate":
+                self.workers_w[wid] = self.wstate_bufs[wid]
+                wstates.add(wid)
+            else:
+                raise RuntimeError(
+                    f"protocol violation on the p2p control plane: "
+                    f"got {kind} from worker {wid}")
+
     # -- top level -----------------------------------------------------------
 
     def run(self, listener: socket.socket, token: str = DEFAULT_TOKEN,
@@ -596,7 +719,7 @@ class MasterServer:
             for link in self.links.values():
                 link.send_simple(wire.DONE)
             self._await("bye", set(self.links),
-                        ignore=("grad", "wstate"))
+                        ignore=("grad", "wstate", "center"))
         finally:
             self._closing.set()
             for link in self.links.values():
@@ -607,13 +730,32 @@ class MasterServer:
                     proc.wait(timeout=10)
                 except subprocess.TimeoutExpired:
                     proc.kill()
+        counters = {k: v.value for k, v in self.counters.items()}
+        if self.sync_p2p:
+            # fold the workers' per-link data-plane counters in: each
+            # unordered link (i, j) once, from the LOWER endpoint's report
+            # (both endpoints count every frame on the link — sends and
+            # receives — so the two reports agree; tests pin that)
+            link_bytes: dict[str, int] = {}
+            msgs = 0
+            for wid, st in sorted(self.bye_stats.items()):
+                for peer, c in st.get("peer_links", {}).items():
+                    if wid < int(peer):
+                        link_bytes[f"{wid}-{peer}"] = c["wire_bytes"]
+                        msgs += c["messages"]
+            counters["peer_link_bytes"] = link_bytes
+            counters["peer_wire_bytes"] = sum(link_bytes.values())
+            counters["peer_messages"] = msgs
+            counters["sync_rounds"] = (
+                self.bye_stats.get(0, {}).get("sync_rounds", 0))
         return PSResult(
             algorithm=self.cfg.algorithm, transport="tcp",
-            schedule=(self.sched_name if self.cfg.algorithm in SYNC
+            schedule=((self.sched_name + "+p2p") if self.sync_p2p
+                      else self.sched_name if self.cfg.algorithm in SYNC
                       else "master"),
             history=self.history, total_time_s=total_time,
             total_iters=self.iters,
-            counters={k: v.value for k, v in self.counters.items()},
+            counters=counters,
             final_metric=self.history[-1][2],
             center=self.center.copy(), workers=self.workers_w.copy())
 

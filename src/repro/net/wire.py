@@ -57,19 +57,44 @@ HEARTBEAT = 7
 DONE = 8
 BYE = 9
 ERROR = 10
+SEGMENT = 11        # p2p data plane: one Message of a Schedule round over a
+#                     worker↔worker link; the round index (mod 0x8000)
+#                     rides the header's wid field as a desync detector
+#                     (the link itself identifies the peer); payload is the
+#                     Message.span slice of the sender's mailbox row
+PEERS = 12          # p2p handshake on a worker↔worker link: JSON
+#                     {"wid", "token"} from the connector, {"wid"} ack back
+CENTER = 13         # p2p control plane: worker 0 → master, the center
+#                     replica at an eval round (finality is by count — the
+#                     master knows the eval schedule it shipped in WELCOME)
 
 FRAME_NAMES = {HELLO: "HELLO", WELCOME: "WELCOME", READY: "READY",
                WEIGHTS: "WEIGHTS", GRAD: "GRAD", WSTATE: "WSTATE",
                HEARTBEAT: "HEARTBEAT", DONE: "DONE", BYE: "BYE",
-               ERROR: "ERROR"}
+               ERROR: "ERROR", SEGMENT: "SEGMENT", PEERS: "PEERS",
+               CENTER: "CENTER"}
 
 CODEC_NONE = 0
 CODEC_SIGN_EF = 1
 CODECS = {"none": CODEC_NONE, "sign_ef": CODEC_SIGN_EF}
 
+_COUNT_LOCK = threading.Lock()    # guards every counters-dict update (the
+#                                   dicts are shared across links/threads)
+
 
 class WireError(ConnectionError):
     """Framing violation or peer gone."""
+
+
+class Slot:
+    """A mutable counter cell (mirrors mp.RawValue's ``.value``) — the unit
+    of the Link counter protocol, shared by the master server's aggregate
+    counters and the peer mesh's per-link counters."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, value=0):
+        self.value = value
 
 
 class Frame:
@@ -130,8 +155,18 @@ class Link:
 
     def _count(self, nbytes: int) -> None:
         if self.counters is not None:
-            self.counters["messages"].value += 1
-            self.counters["wire_bytes"].value += HEADER_SIZE + nbytes
+            # locked: counts may run concurrently — a send and a receive on
+            # one link (the p2p threaded-sender path), or several links
+            # sharing one counters dict (the master's P reader threads) —
+            # and `slot.value += n` alone loses increments between threads.
+            # One module-wide lock keeps any sharing pattern exact; at
+            # frame granularity the contention cost is noise.
+            with _COUNT_LOCK:
+                self.counters["messages"].value += 1
+                self.counters["wire_bytes"].value += HEADER_SIZE + nbytes
+                extra = self.counters.get("link_bytes")
+                if extra is not None:   # an additional per-link-class slot
+                    extra.value += HEADER_SIZE + nbytes
 
     def _send(self, ftype: int, wid: int, flags: int, codec: int,
               payload) -> int:
@@ -152,7 +187,7 @@ class Link:
                           json.dumps(obj).encode())
 
     def send_array(self, ftype: int, arr: np.ndarray, wid: int = 0,
-                   segments: int = 1) -> int:
+                   segments: int = 1, ef_tag=0, raw: bool = False) -> int:
         """Send a flat float64 array through the link's codec. Returns the
         payload byte count that actually crossed the wire.
 
@@ -160,16 +195,22 @@ class Link:
         (τ>1 exchanges stack [grad|w|v] into one frame). sign_ef encodes
         EACH segment with its own scale and error-feedback state — one
         shared scale would let weight magnitudes drown the gradient's.
-        EF state is keyed by (frame type, segment), so e.g. a WSTATE
-        weights stream never shares residuals with a GRAD stream of the
-        same size."""
+        EF state is keyed by (frame type, segment, ef_tag), so e.g. a
+        WSTATE weights stream never shares residuals with a GRAD stream of
+        the same size. ``ef_tag`` (any hashable) distinguishes same-size
+        streams of one frame type on one link: the p2p data plane tags
+        SEGMENT frames with (chunk index, op), so every (peer, vector
+        segment, direction-of-flow) carries its own quantization residual
+        forward. ``raw=True`` bypasses a lossy codec for this one frame —
+        one-shot reports (the p2p final CENTER/WSTATE) must arrive exact;
+        error feedback can only amortize quantization across a STREAM."""
         arr = np.ascontiguousarray(arr, np.float64)
-        if self.codec == CODEC_SIGN_EF:
+        if self.codec == CODEC_SIGN_EF and not raw:
             assert arr.size % max(segments, 1) == 0, (arr.size, segments)
             segs = arr.reshape(max(segments, 1), -1)
             parts = []
             for i in range(segs.shape[0]):
-                key = (ftype, segs.shape[1], i)
+                key = (ftype, segs.shape[1], i, ef_tag)
                 err = self._ef.get(key)
                 if err is None:
                     err = self._ef[key] = np.zeros(segs.shape[1], np.float64)

@@ -4,12 +4,24 @@
 
 Deliberately minimal: numpy, the wire, and the problem factory named by the
 master's WELCOME — no jax, no optimizer state beyond what τ>1 local steps
-need. All concurrency disciplines look identical from here (the master
-decides when WEIGHTS arrive):
+need. Under the MASTER sync plane all concurrency disciplines look
+identical from here (the master decides when WEIGHTS arrive):
 
     HELLO → WELCOME (problem spec + algorithm + τ) → build + warmup → READY
     then per exchange:  recv WEIGHTS → [τ−1 local steps] → grad → send GRAD
     until DONE → BYE.
+
+Under the P2P sync plane (``PSConfig.sync_plane="p2p"``, sync family only)
+the worker IS the data plane: it opens a peer listener before HELLO and
+advertises it, receives the peer directory + the registry's resolved
+``Schedule.rounds`` in WELCOME, wires a ``net.peer.PeerMesh`` to every peer
+its rounds talk to, and then trains WITHOUT per-round master traffic —
+each exchange executes the rounds over direct worker↔worker SEGMENT
+frames, every worker advancing its own bitwise-identical center replica
+(see net/peer.py for why the rows agree). The master link carries only
+control traffic plus worker 0's CENTER reports at eval rounds and one
+final WSTATE per worker, so the Θ(P·N) master incast of the centralized
+plane collapses to Θ(N_center).
 
 A background thread heartbeats every ``hb_interval_s`` so the master can
 tell a slow gradient from a dead host. With τ>1 the worker's local (w, v)
@@ -17,7 +29,9 @@ evolve between exchanges (``easgd_flat.local_step`` — the same rule the
 shared-memory transports run), so frames stack [w|v] down and [grad|w|v]
 up; sync_easgd instead posts its evolved weights (WSTATE) BEFORE computing
 the exchange gradient, keeping the master's allreduce overlapped with
-compute (paper §6.1.3).
+compute (paper §6.1.3) — in p2p mode the same overlap is preserved by
+running the round executor in a background thread while the exchange
+gradient is computed.
 """
 from __future__ import annotations
 
@@ -33,7 +47,8 @@ import numpy as np
 
 from repro.core import easgd_flat
 from repro.net import wire
-from repro.net.wire import Link
+from repro.net.peer import PeerMesh
+from repro.net.wire import Link, sleep_until
 
 SYNC = easgd_flat.SYNC_FAMILY
 
@@ -56,10 +71,24 @@ def _build_problem(factory: str, kwargs):
 
 
 def worker_loop(host: str, port: int, wid: int,
-                token: str = "repro-net", timeout_s: float = 600.0) -> None:
+                token: str = "repro-net", timeout_s: float = 600.0,
+                peer_host: str | None = None, peer_port: int = 0,
+                sync_plane: str = "auto") -> None:
     link = Link(_connect(host, port))
     link.sock.settimeout(timeout_s)
-    link.send_json(wire.HELLO, {"wid": wid, "token": token}, wid=wid)
+    # the peer listener binds BEFORE HELLO so its port can ride in it
+    # (sync_plane="master" skips it — no point advertising a dead port).
+    # It binds to the interface the master link runs over — a loopback-only
+    # run must not expose worker listeners on every interface — and
+    # advertises that same address unless --peer-host overrides it.
+    local_addr = link.sock.getsockname()[0]
+    mesh = (PeerMesh(wid, token, bind_host=peer_host or local_addr,
+                     port=peer_port, timeout_s=timeout_s)
+            if sync_plane != "master" else None)
+    hello = {"wid": wid, "token": token}
+    if mesh is not None:
+        hello["peer"] = [peer_host or local_addr, mesh.port]
+    link.send_json(wire.HELLO, hello, wid=wid)
     frame = link.recv_header()
     if frame.ftype == wire.ERROR:
         raise RuntimeError(f"master rejected us: {link.recv_json(frame)}")
@@ -67,8 +96,18 @@ def worker_loop(host: str, port: int, wid: int,
     cfg = link.recv_json(frame)
     link.codec = wire.CODECS[cfg.get("codec", "none")]
     algo, n, tau = cfg["algorithm"], int(cfg["n"]), int(cfg["tau"])
-    local_cfg = SimpleNamespace(eta=cfg["eta"], mu=cfg["mu"])
+    local_cfg = SimpleNamespace(eta=cfg["eta"], mu=cfg["mu"],
+                                rho=cfg.get("rho", 0.0),
+                                alpha=cfg["eta"] * cfg.get("rho", 0.0))
     velocity = easgd_flat.uses_velocity(algo) and algo not in SYNC
+    p2p = cfg.get("sync_plane") == "p2p"
+    if p2p and mesh is None:
+        raise RuntimeError(
+            "master runs sync_plane=p2p but this worker was started with "
+            "--sync-plane master (no peer listener to join the mesh with)")
+    if not p2p and mesh is not None:
+        mesh.close()                             # advertised, never needed
+        mesh = None
 
     stop_hb = threading.Event()
 
@@ -85,12 +124,29 @@ def worker_loop(host: str, port: int, wid: int,
     hb = threading.Thread(target=_heartbeat, daemon=True)
     hb.start()
 
-    _, grad_fn, _ = _build_problem(cfg["factory"], cfg["kwargs"])
+    w0, grad_fn, _ = _build_problem(cfg["factory"], cfg["kwargs"])
     w = np.zeros(n)
     v = np.zeros(n) if velocity else None
     down = np.zeros(2 * n) if (velocity and tau > 1) else w
     for k in range(int(cfg.get("warmup", 2))):   # private RNG streams ≤ −2:
         grad_fn(w, k, -(wid + 2))                # worker streams untouched
+    try:
+        if p2p:
+            _p2p_sync_loop(link, mesh, cfg, grad_fn,
+                           np.asarray(w0, np.float64), wid, local_cfg)
+            return
+    except BaseException as exc:                 # noqa: BLE001 — tell master
+        try:
+            link.send_json(wire.ERROR, {"msg": repr(exc)}, wid=wid)
+        except OSError:
+            pass
+        raise
+    finally:
+        if p2p:
+            stop_hb.set()
+            if mesh is not None:
+                mesh.close()
+            link.close()
     link.send_simple(wire.READY, wid=wid)
 
     step = 0
@@ -141,6 +197,89 @@ def worker_loop(host: str, port: int, wid: int,
         link.close()
 
 
+def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
+                   w0: np.ndarray, wid: int, local_cfg) -> None:
+    """The p2p sync family: this worker executes its share of the
+    registry's rounds over the peer mesh and advances its OWN center
+    replica — bitwise in lockstep with every other worker and with the
+    centralized planes (same ops on bitwise-equal rows, see net/peer.py).
+    The master link goes quiet between READY and DONE except for worker
+    0's CENTER reports at the eval rounds shipped in WELCOME."""
+    from repro.comm.rounds import peer_pairs, rounds_from_wire
+
+    algo, n, tau = cfg["algorithm"], int(cfg["n"]), int(cfg["tau"])
+    P, padded = int(cfg["p"]), int(cfg["padded"])
+    n_rounds = int(cfg["n_rounds"])
+    eval_rounds = set(int(k) for k in cfg["eval_rounds"])
+    t_wire = float(cfg.get("t_wire_s", 0.0))
+    rounds = rounds_from_wire(cfg["rounds"])
+    directory = {int(k): v for k, v in cfg["peers"].items()}
+    mesh.codec = cfg.get("codec", "none")
+    mesh.connect(directory, peer_pairs(rounds))
+    mesh.set_rounds(rounds, padded)
+    link.send_simple(wire.READY, wid=wid)        # mesh up, clock may start
+
+    w = w0.copy()                  # same bits as the master's problem build
+    center = w0.copy()             # the center replica (all workers agree)
+    vel = np.zeros(n)              # sync_sgd's master velocity replica
+    row = np.zeros(padded)         # this worker's mailbox row
+    exc_box: list = []
+
+    def _exchange():
+        try:
+            deadline = time.monotonic() + t_wire
+            mesh.execute_exchange(row)
+            if t_wire:
+                sleep_until(deadline)
+        except BaseException as e:               # noqa: BLE001 — re-raised
+            exc_box.append(e)
+
+    step = 0
+    for k in range(n_rounds):
+        for _ in range(tau - 1):                 # τ−1 local-only steps
+            g = grad_fn(w, step, wid)
+            easgd_flat.local_step(algo, w, vel, g, local_cfg)
+            step += 1
+        if algo == "sync_easgd":
+            row[:n] = w                          # start-of-exchange weights
+            comm = threading.Thread(target=_exchange)
+            comm.start()                         # allreduce overlaps this
+            grad = grad_fn(w, step, wid)         # compute (paper §6.1.3)
+            step += 1
+            comm.join()
+            if exc_box:
+                raise exc_box[0]
+            easgd_flat.worker_step(algo, w, vel, grad, center, local_cfg)
+            easgd_flat.sync_master_easgd(center, row[:n] / P, P, local_cfg)
+        else:                                    # sync_sgd: no overlap (§5.1)
+            grad = grad_fn(w, step, wid)
+            step += 1
+            row[:n] = grad
+            _exchange()                          # synchronous, same pacing
+            if exc_box:
+                raise exc_box[0]
+            easgd_flat.sync_master_sgd(center, vel, row[:n] / P, local_cfg)
+            w[:] = center
+        if wid == 0 and k in eval_rounds:
+            # control-plane reports go RAW even under wire compression:
+            # these are one-shot exact-state transfers, not a stream error
+            # feedback could correct over time
+            link.send_array(wire.CENTER, center, wid=wid, raw=True)
+    if wid == 0:                                 # the final center update —
+        link.send_array(wire.CENTER, center, wid=wid,   # Θ(N), not Θ(P·N)
+                        raw=True)
+    link.send_array(wire.WSTATE, w, wid=wid, raw=True)  # final weights
+    while True:                                  # control plane: DONE → BYE
+        frame = link.recv_header()
+        if frame.ftype == wire.DONE:
+            link.recv_discard(frame)
+            link.send_json(wire.BYE, mesh.stats(), wid=wid)
+            return
+        if frame.ftype == wire.ERROR:
+            raise RuntimeError(f"master error: {link.recv_json(frame)}")
+        link.recv_discard(frame)
+
+
 def burn_main(spec_json: str, samples: int, wid: int) -> None:
     """Calibration burner: the EXACT worker substrate (same interpreter,
     same jax-free import footprint), measuring its own per-gradient wall
@@ -168,6 +307,17 @@ def main(argv=None):
     ap.add_argument("--wid", type=int, required=True)
     ap.add_argument("--token", default="repro-net")
     ap.add_argument("--timeout", type=float, default=600.0)
+    ap.add_argument("--sync-plane", default="auto",
+                    choices=["auto", "master", "p2p"],
+                    help="auto/p2p: open a peer listener and advertise it "
+                         "in HELLO (the master's WELCOME decides whether "
+                         "the p2p data plane is used); master: skip it")
+    ap.add_argument("--peer-port", type=int, default=0,
+                    help="fixed bind port for the peer listener (multi-host "
+                         "p2p behind firewalls; 0 = ephemeral)")
+    ap.add_argument("--peer-host", default=None,
+                    help="address to advertise for the peer listener "
+                         "(default: the local endpoint of the master link)")
     ap.add_argument("--burn", default=None, metavar="SPEC_JSON",
                     help="calibration mode: measure this interpreter's "
                          "concurrent gradient rate instead of training")
@@ -180,7 +330,8 @@ def main(argv=None):
         ap.error("--connect is required (unless --burn)")
     host, port = args.connect.rsplit(":", 1)
     worker_loop(host, int(port), args.wid, token=args.token,
-                timeout_s=args.timeout)
+                timeout_s=args.timeout, peer_host=args.peer_host,
+                peer_port=args.peer_port, sync_plane=args.sync_plane)
 
 
 if __name__ == "__main__":

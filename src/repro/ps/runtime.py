@@ -79,6 +79,14 @@ class PSConfig:
     wire_compression: str = "none"   # "none" | "sign_ef": per-link payload
     #                                  codec with error-feedback state (the
     #                                  framed 1-bit wire — core.compression)
+    sync_plane: str = "master"       # "master": the net master executes the
+    #                                  sync-family rounds on its local
+    #                                  mailbox (every round funnels Θ(P·N)
+    #                                  through its links); "p2p": workers
+    #                                  execute the SAME rounds over direct
+    #                                  worker↔worker links (net.peer) and
+    #                                  the master degrades to control plane
+    #                                  — Θ(N_center) on the master link
     tcp_host: str = "127.0.0.1"
     tcp_port: int = 0                # 0: ephemeral (launch/cluster pins one
     #                                  for multi-host rendezvous)
@@ -95,6 +103,15 @@ class PSConfig:
         assert self.wire_compression == "none" or self.transport == "tcp", (
             f"wire_compression='{self.wire_compression}' is a tcp-transport "
             f"feature (transport='{self.transport}' moves no frames)")
+        assert self.sync_plane in ("master", "p2p"), self.sync_plane
+        # the p2p data plane is worker↔worker sockets executing the sync
+        # family's rounds — it has no meaning off tcp or off that family
+        assert self.sync_plane == "master" or (
+            self.transport == "tcp" and self.algorithm in SYNC), (
+            f"sync_plane='p2p' needs transport='tcp' and a sync-family "
+            f"algorithm (got transport='{self.transport}', "
+            f"algorithm='{self.algorithm}') — only the sync family "
+            f"executes Schedule.rounds, and only repro.net has peer links")
 
     def resolved_schedule(self, n_bytes: float) -> str:
         if self.schedule == "auto":
@@ -137,19 +154,17 @@ def _sleep_until(deadline: float) -> None:
 
 def _apply_round(mailbox, n: int, rnd, counters=None) -> None:
     """One message round: receivers read the senders' PRE-round values
-    (snapshot, then apply) — messages within a round are concurrent."""
+    (snapshot, then apply) — messages within a round are concurrent.
+    ``Message.span`` addresses the slice each message moves — the same
+    offsets the p2p data plane puts on the wire as SEGMENT frames."""
+    row_len = mailbox.shape[-1]
     payloads = []
     for m in rnd:
-        src = mailbox[m.src]
-        if m.chunk is None:
-            payloads.append((m, src[:].copy()))
-        else:
-            payloads.append(
-                (m, src.reshape(m.chunks, -1)[m.chunk].copy()))
+        a, b = m.span(row_len)
+        payloads.append((m, mailbox[m.src, a:b].copy()))
     for m, pay in payloads:
-        dst = mailbox[m.dst]
-        tgt = dst if m.chunk is None else \
-            dst.reshape(m.chunks, -1)[m.chunk]
+        a, b = m.span(row_len)
+        tgt = mailbox[m.dst, a:b]
         if m.op == "add":
             tgt += pay
         else:

@@ -251,6 +251,8 @@ def test_tcp_worker_is_jax_free(subproc):
     subproc("""
         import sys
         import repro.net.worker
+        import repro.net.peer
+        import repro.comm.rounds
         import repro.ps.problems
         assert "jax" not in sys.modules, "worker pulled jax in"
     """, n_devices=1)
@@ -305,6 +307,208 @@ def test_tcp_sign_ef_cuts_wire_bytes_4x_at_matched_loss():
     assert b_none >= 4 * b_sign, (b_none, b_sign)
     # matched loss: EF keeps the compressed run within noise of the raw one
     assert runs["sign_ef"].final_metric <= runs["none"].final_metric + 0.10
+
+
+# ---------------------------------------------------------------------------
+# (4) the p2p sync data plane (ISSUE 4): workers execute Schedule.rounds
+#     over direct worker↔worker links; the master degrades to control plane
+# ---------------------------------------------------------------------------
+
+def _plane_run(algo, P, plane, schedule, iters=48, transport="tcp", **kw):
+    kw.setdefault("deterministic", True)
+    cfg = ps.PSConfig(algorithm=algo, n_workers=P, total_iters=iters,
+                      transport=transport, schedule=schedule,
+                      eval_every_iters=10**9,
+                      **({"sync_plane": plane} if transport == "tcp" else {}),
+                      **kw)
+    return ps.run_ps(ps.NUMPY_MLP, CFG, cfg)
+
+
+@pytest.mark.parametrize("algo,P,schedule", [
+    ("sync_easgd", 2, "tree"),
+    ("sync_easgd", 3, "ring"),             # non-power-of-two ring
+    ("sync_sgd", 4, "butterfly"),
+])
+def test_p2p_thread_tcp_triangle_bitwise(algo, P, schedule):
+    """The thread↔tcp cross-check extended to a thread↔tcp↔p2p TRIANGLE:
+    under deterministic admission all three planes produce bit-identical
+    float64 weights. The p2p side holds because every worker's mailbox row
+    ends bitwise equal to the centralized mailbox[0] (ring/tree copy one
+    accumulation chain everywhere; butterfly rows differ only in the ORDER
+    of commutative IEEE additions), so the per-worker center replicas
+    advance in lockstep with the master-plane center."""
+    thread = _plane_run(algo, P, None, schedule, transport="thread")
+    master = _plane_run(algo, P, "master", schedule)
+    p2p = _plane_run(algo, P, "p2p", schedule)
+    assert thread.total_iters == master.total_iters == p2p.total_iters
+    np.testing.assert_array_equal(thread.center, master.center)
+    np.testing.assert_array_equal(thread.center, p2p.center)
+    np.testing.assert_array_equal(thread.workers, p2p.workers)
+    assert p2p.schedule == f"{schedule}+p2p"
+
+
+@pytest.mark.parametrize("schedule,P", [
+    ("ring", 2), ("ring", 4), ("butterfly", 2), ("butterfly", 4),
+])
+def test_p2p_per_link_bytes_match_registry(schedule, P):
+    """Measured per-link byte counters == the registry's prediction: each
+    worker pair's counter must equal exchanges × Σ (header + span bytes)
+    over that pair's messages — every SEGMENT frame accounted, nothing
+    else on the peer links."""
+    from repro.net.peer import predicted_link_bytes
+
+    from repro import comm
+    iters = 24
+    res = _plane_run("sync_easgd", P, "p2p", schedule, iters=iters)
+    n = res.center.size
+    padded = n + (-n) % P
+    exchanges = -(-iters // P)
+    per_exchange = predicted_link_bytes(
+        comm.get(schedule).rounds(P, n * 8), padded)
+    want = {f"{i}-{j}": exchanges * b for (i, j), b in per_exchange.items()}
+    assert res.counters["peer_link_bytes"] == want
+    # and the registry's total-byte accounting agrees (modulo headers and
+    # the row padding the wire moves)
+    frames = res.counters["peer_messages"]
+    payload = res.counters["peer_wire_bytes"] - frames * wire.HEADER_SIZE
+    expect_payload = exchanges * comm.get(schedule).bytes_from_rounds(
+        padded * 8, P)
+    np.testing.assert_allclose(payload, expect_payload, rtol=1e-12)
+
+
+def test_p2p_master_link_bytes_collapse_4x():
+    """THE acceptance criterion: ring at P=4 on loopback moves ≥4x fewer
+    bytes through the master link under sync_plane='p2p' than under
+    'master', at bitwise-identical final weights (deterministic
+    admission). Also pins the ~2N(P−1)/P per-worker ring traffic."""
+    master = _plane_run("sync_easgd", 4, "master", "ring", iters=64)
+    p2p = _plane_run("sync_easgd", 4, "p2p", "ring", iters=64)
+    np.testing.assert_array_equal(master.center, p2p.center)
+    np.testing.assert_array_equal(master.workers, p2p.workers)
+    b_master = master.counters["master_link_bytes"]
+    b_p2p = p2p.counters["master_link_bytes"]
+    assert b_master >= 4 * b_p2p, (b_master, b_p2p)
+    # per-link ring traffic: each of the P ring links carries 2(P−1)
+    # chunks of padded/P elements per exchange — ≈ 2N(P−1)/P per worker
+    n, P = p2p.center.size, 4
+    padded = n + (-n) % P
+    exchanges = 64 // P
+    per_link = exchanges * 2 * (P - 1) * (padded // P * 8 + wire.HEADER_SIZE)
+    assert all(b == per_link
+               for b in p2p.counters["peer_link_bytes"].values()), \
+        p2p.counters["peer_link_bytes"]
+
+
+def test_p2p_sign_ef_per_peer_link_matched_loss():
+    """sign-EF composes per peer link exactly as per master link: 1-bit
+    SEGMENT payloads with per-(link, segment) error feedback cut peer
+    bytes ≥4x while the barriered sync run stays at matched loss (the
+    event order is deterministic, so these numbers are stable)."""
+    e = EASGDConfig(eta=0.1, rho=0.1, mu=0.9)
+    runs = {}
+    for codec in ("none", "sign_ef"):
+        runs[codec] = _plane_run("sync_sgd", 2, "p2p", "butterfly",
+                                 iters=240, deterministic=False,
+                                 wire_compression=codec)
+    assert (runs["none"].counters["peer_wire_bytes"]
+            >= 4 * runs["sign_ef"].counters["peer_wire_bytes"])
+    assert (runs["sign_ef"].final_metric
+            <= runs["none"].final_metric + 0.10), \
+        {k: r.final_metric for k, r in runs.items()}
+
+
+def test_p2p_large_segments_use_threaded_sender_no_deadlock():
+    """Segments past the kernel's socket buffering would deadlock the
+    everyone-sends-first round cycle; PeerMesh must detect them and move
+    sends to a helper thread. Two real meshes exchange a 2 MB butterfly
+    buffer over loopback — inline sendall would block both sides forever."""
+    from repro.comm.rounds import butterfly_rounds, peer_pairs
+    from repro.net.peer import INLINE_SEND_MAX, PeerMesh
+
+    n = 256 * 1024                          # 2 MB rows, one full-row message
+    rounds = butterfly_rounds(2)
+    meshes = [PeerMesh(w, "t", bind_host="127.0.0.1", timeout_s=30)
+              for w in (0, 1)]
+    directory = {w: ("127.0.0.1", m.port) for w, m in enumerate(meshes)}
+    rows = [np.arange(n) * 1.0, np.arange(n) * 2.0]
+    want = rows[0] + rows[1]
+    errs, threads = [], []
+
+    def _run(wid):
+        try:
+            meshes[wid].connect(directory, peer_pairs(rounds))
+            meshes[wid].set_rounds(rounds, n)
+            assert meshes[wid]._threaded, \
+                (n * 8, "should exceed", INLINE_SEND_MAX)
+            meshes[wid].execute_exchange(rows[wid])
+        except BaseException as e:          # noqa: BLE001
+            errs.append(e)
+
+    for wid in (0, 1):
+        threads.append(threading.Thread(target=_run, args=(wid,)))
+        threads[-1].start()
+    for th in threads:
+        th.join(timeout=60)
+    alive = [th for th in threads if th.is_alive()]
+    for m in meshes:
+        m.close()
+    assert not alive, "p2p exchange deadlocked on large segments"
+    assert not errs, errs
+    np.testing.assert_array_equal(rows[0], want)
+    np.testing.assert_array_equal(rows[1], want)
+
+
+def test_p2p_sign_ef_control_plane_reports_are_exact():
+    """CENTER / final WSTATE are one-shot state transfers — they must
+    bypass the lossy wire codec (a sign-quantized 'final center' would
+    collapse every |w| to one magnitude and the master would eval the
+    wrong model)."""
+    e = EASGDConfig(eta=0.1, rho=0.1, mu=0.9)
+    res = _plane_run("sync_sgd", 2, "p2p", "butterfly", iters=40,
+                     deterministic=False, wire_compression="sign_ef")
+    # trained weights have a rich magnitude spectrum; sign*scale has 1
+    assert len(np.unique(np.abs(res.center))) > res.center.size // 2
+    assert len(np.unique(np.abs(res.workers[0]))) > res.center.size // 2
+
+
+def test_segment_ef_streams_keyed_by_chunk_and_op():
+    """A ring link carries a chunk's reduce-scatter partials AND its
+    all-gather broadcasts: two sign-EF streams whose residuals must not
+    mix. The EF state must key on (chunk, op), not chunk alone."""
+    tx, rx = _link_pair(codec_a="sign_ef")
+    arr = np.random.RandomState(5).randn(64)
+    tx.send_array(wire.SEGMENT, arr, ef_tag=(0, "add"))
+    tx.send_array(wire.SEGMENT, arr, ef_tag=(0, "set"))
+    assert len(tx._ef) == 2, list(tx._ef)   # distinct residual per stream
+    rx.recv_discard(rx.recv_header())
+    rx.recv_discard(rx.recv_header())
+    tx.close(), rx.close()
+
+
+def test_p2p_rejected_off_tcp_and_off_sync_family():
+    with pytest.raises(AssertionError, match="sync_plane"):
+        ps.PSConfig(algorithm="sync_easgd", transport="thread",
+                    sync_plane="p2p")
+    with pytest.raises(AssertionError, match="sync_plane"):
+        ps.PSConfig(algorithm="async_easgd", transport="tcp",
+                    sync_plane="p2p")
+
+
+def test_p2p_rejects_master_routed_schedule():
+    """round_robin's rounds address the MASTER endpoint — there is no p2p
+    version of a schedule that IS the master plane."""
+    with pytest.raises(ValueError, match="master plane"):
+        _plane_run("sync_easgd", 2, "p2p", "round_robin", iters=8)
+
+
+def test_p2p_emulated_wire_changes_clock_not_math():
+    slow = costmodel.Network("tiny-emu", 1e-3, 1e-9)
+    a = _plane_run("sync_easgd", 2, "p2p", "ring", iters=40)
+    b = _plane_run("sync_easgd", 2, "p2p", "ring", iters=40,
+                   emulate_net=slow)
+    np.testing.assert_array_equal(a.center, b.center)
+    # ring P=2 has 2 rounds per exchange, each paced ≥ α=1ms, 20 exchanges
+    assert b.total_time_s > 20 * 2 * 1e-3
 
 
 def test_tcp_counters_count_real_frames():

@@ -111,6 +111,40 @@ def test_round_robin_rounds_any_p():
 
 
 @pytest.mark.parametrize("name", list(comm.names()))
+def test_message_spans_pin_segment_bytes(name):
+    """Every message's explicit segment offsets (``Message.span`` — the
+    SEGMENT frame's address on the p2p wire) must agree with its ``frac``,
+    and summing them must reproduce ``Schedule.bytes_from_rounds`` — the
+    byte side of the same structure ``cost_from_rounds`` prices in time."""
+    sched = comm.get(name)
+    for p in (2, 4, 8):
+        n = 24 * p                       # divisible by every chunk count
+        span_bytes = 0.0
+        for rnd in sched.rounds(p, n * 8, NET):
+            for m in rnd:
+                a, b = m.span(n)
+                assert 0 <= a < b <= n, (name, p, m)
+                np.testing.assert_allclose((b - a) / n, m.frac, rtol=1e-12)
+                span_bytes += (b - a) * 8
+        np.testing.assert_allclose(
+            span_bytes, sched.bytes_from_rounds(n * 8, p, NET), rtol=1e-12,
+            err_msg=f"{name} p={p}")
+
+
+def test_rounds_wire_serialization_roundtrip():
+    """The master ships rounds to jax-free p2p workers as JSON; the
+    roundtrip must be lossless for every schedule."""
+    import json
+
+    from repro.comm.rounds import rounds_from_wire, rounds_to_wire
+    for name in comm.names():
+        for p in (2, 4):
+            rounds = comm.get(name).rounds(p, 1e4, NET)
+            wire_form = json.loads(json.dumps(rounds_to_wire(rounds)))
+            assert rounds_from_wire(wire_form) == rounds, (name, p)
+
+
+@pytest.mark.parametrize("name", list(comm.names()))
 def test_rounds_execute_allreduce(name):
     """ps.execute_rounds applied to the registry's rounds must leave every
     worker holding the global sum — for every schedule."""
