@@ -154,6 +154,109 @@ def hierarchical_rounds(p, n_bytes=0.0, net=None):
 
 
 # ---------------------------------------------------------------------------
+# bucketed view — the SAME rounds, clipped at bucket boundaries
+# ---------------------------------------------------------------------------
+#
+# Bucketing for comm/compute overlap must not change a single bit of the
+# result, so it is defined as a VIEW of the monolithic schedule rather than
+# a per-bucket re-run of the schedule builder: every message keeps its
+# src/dst/op and its position in the round order, and bucket b simply clips
+# the message's element span to [lo_b, hi_b). Because buckets partition the
+# row into disjoint element ranges, each element still sees exactly the
+# same operations from the same sources in the same order as in the
+# monolithic exchange — which is why bucketed ring/tree chains are
+# bit-identical to monolithic ones (pinned by tests). Re-chunking the
+# schedule per bucket instead (e.g. ring with chunks=p over each bucket)
+# would reassign which rank owns which element's reduction chain and change
+# the addition order — NOT bitwise-safe. Don't do that.
+
+# jax-free copy of core.packing.ELASTIC_UPDATE_BLOCK (that module imports
+# jax at the top; this one must stay importable in jax-free workers) —
+# pinned equal by tests/test_bucketing.py
+ELASTIC_UPDATE_ALIGN = 8 * 128 * 128
+
+
+def default_bucket_boundaries(sizes, n_elements: int,
+                              bucket_bytes: int) -> list[int]:
+    """The runtime's boundary policy for ``bucket_bytes`` f64 payload bytes
+    per bucket: align cuts to the fused-update kernel's block only when the
+    buckets themselves are at least one block (small test problems need
+    small buckets; the kernel falls back below a block anyway)."""
+    target = max(1, int(bucket_bytes) // 8)
+    align = ELASTIC_UPDATE_ALIGN if target >= ELASTIC_UPDATE_ALIGN else None
+    return bucket_boundaries(sizes, n_elements, target, align=align)
+
+
+def bucket_boundaries(sizes, n_elements: int, target_elems: int,
+                      align: int | None = None) -> list[int]:
+    """Cut offsets ``[0, b1, ..., n_elements]`` grouping consecutive layers
+    into buckets of ~``target_elems`` elements.
+
+    ``sizes`` is the per-layer element count sequence (e.g.
+    ``Packer`` leaf sizes, or ``grad_fn.layer_sizes``); a cut is emitted at
+    the first layer edge where the open bucket has reached ``target_elems``.
+    With ``align``, each cut is rounded UP to a multiple of ``align`` (the
+    fused-update kernel wants block-aligned buckets); cuts that would
+    collide or overrun are dropped. Empty/None ``sizes`` falls back to
+    uniform ``target_elems`` slabs. Always returns at least ``[0, n]``."""
+    assert n_elements > 0 and target_elems > 0
+    edges: list[int] = []
+    if sizes:
+        off = 0
+        for s in sizes:
+            off += int(s)
+            edges.append(off)
+    else:
+        edges = list(range(target_elems, n_elements, target_elems))
+        edges.append(n_elements)
+    cuts = [0]
+    for e in edges:
+        if e >= n_elements:
+            break
+        if e - cuts[-1] >= target_elems:
+            c = e if align is None else -(-e // align) * align
+            if cuts[-1] < c < n_elements:
+                cuts.append(c)
+    cuts.append(n_elements)
+    # align-rounding can make a later layer edge land on/before a cut
+    out = [cuts[0]]
+    for c in cuts[1:]:
+        if c > out[-1]:
+            out.append(c)
+    return out
+
+
+def clip_span(m: Message, n_elements: int, lo: int, hi: int
+              ) -> tuple[int, int] | None:
+    """Intersection of ``m.span(n_elements)`` with bucket ``[lo, hi)`` —
+    ``None`` when the message moves no bytes of this bucket."""
+    a, b = m.span(n_elements)
+    a, b = max(a, lo), min(b, hi)
+    return (a, b) if a < b else None
+
+
+def bucket_rounds(rounds, n_elements: int, boundaries) -> list:
+    """Per-bucket execution plans: element ``boundaries`` ``[0, .., n]`` →
+    one plan per bucket, each a list of rounds of ``(message, (start,
+    stop))`` pairs with spans clipped to the bucket (messages that miss the
+    bucket are dropped, empty rounds kept so round indices — and therefore
+    p2p frame sequence numbers — stay aligned across buckets)."""
+    assert boundaries[0] == 0 and boundaries[-1] == n_elements, boundaries
+    plans = []
+    for lo, hi in zip(boundaries[:-1], boundaries[1:]):
+        plan = []
+        for rnd in rounds:
+            clipped = []
+            for m in rnd:
+                span = clip_span(m, n_elements, lo, hi)
+                if span is not None:
+                    clipped.append((m, span))
+            plan.append(clipped)
+        plans.append(plan)
+    return plans
+
+
+# ---------------------------------------------------------------------------
 # derived structure — what the p2p data plane needs to wire itself up
 # ---------------------------------------------------------------------------
 

@@ -110,6 +110,22 @@ class Packer:
     def zeros(self) -> jnp.ndarray:
         return jnp.zeros((self.buffer_size,), self.buffer_dtype)
 
+    # -- bucketing ----------------------------------------------------------
+    def layer_sizes(self) -> list:
+        """Per-leaf element counts in packed order — the layer structure
+        the bucketed exchange cuts on (comm.rounds.bucket_boundaries)."""
+        return [s.size for s in self.specs]
+
+    def bucket_bounds(self, target_elems: int) -> list:
+        """Bucket cut offsets over the PADDED buffer: leaf edges grouped to
+        ~``target_elems`` elements and rounded up to this packer's align,
+        so every bucket is a whole number of fused-update kernel tiles.
+        Same policy as the PS runtime's ``default_bucket_boundaries`` —
+        the packed-collective and wire data planes bucket identically."""
+        from repro.comm.rounds import bucket_boundaries
+        return bucket_boundaries(self.layer_sizes(), self.buffer_size,
+                                 target_elems, align=self.align)
+
 
 def packed_apply(packer: Packer, fn, tree):
     """Apply ``fn`` to the packed representation and unpack the result.

@@ -20,6 +20,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
 from jax.experimental import pallas as pl
 
 from repro.core.packing import ELASTIC_UPDATE_BLOCK
@@ -64,3 +66,105 @@ def fused_elastic_update(w, v, g, c, mean_w, *, eta: float, rho: float,
         ],
         interpret=interpret,
     )(w, v, g, c, mean_w)
+
+
+# ---------------------------------------------------------------------------
+# f64 per-bucket sync-family updates — the p2p data plane's hot path
+# ---------------------------------------------------------------------------
+#
+# These two kernels are BITWISE replacements for the easgd_flat update pair
+# the p2p worker runs on each completed bucket (``net.worker._p2p_sync_loop``
+# with ``update_backend="pallas"``): same f64 dtype, same operation ASTs as
+# the numpy expressions, so IEEE-754 guarantees equal bits — PROVIDED the
+# XLA CPU backend does not contract a·b+c into fused multiply-adds (an fma
+# keeps the product's infinite precision through the add; numpy rounds
+# twice). The worker/launcher therefore pin ``XLA_FLAGS=--xla_cpu_max_isa=
+# SSE4_2`` before the first jax import — SSE4.2 predates the FMA ISA
+# extension, so LLVM cannot emit fma and the kernels match numpy bit for
+# bit (pinned at zero tolerance by tests/test_bucketing.py). Without the
+# flag the results are still correct to ~1 ulp, just not identical.
+
+def _sync_easgd_kernel(w_ref, g_ref, c_ref, r_ref, w_out, c_out, *,
+                       eta: float, rho: float, alpha_p: float, p: int):
+    w = w_ref[...]
+    g = g_ref[...]
+    c = c_ref[...]
+    r = r_ref[...]
+    # exact easgd_flat op order: worker_step's elastic rule on the PRE-
+    # update center, then eq 2 on the exchanged pre-update weight sum r
+    w_out[...] = w - eta * (g + rho * (w - c))
+    c_out[...] = c + alpha_p * (r / p - c)
+
+
+def _sync_sgd_kernel(c_ref, v_ref, r_ref, c_out, v_out, *,
+                     eta: float, mu: float, p: int):
+    c = c_ref[...]
+    v = v_ref[...]
+    r = r_ref[...]
+    v_new = mu * v - eta * (r / p)
+    c_out[...] = c + v_new
+    v_out[...] = v_new
+
+
+def _bucket_grid(n: int, block: int):
+    """(block_size, grid): buckets cut at layer edges are rarely an exact
+    multiple of the VMEM block, so an unaligned bucket runs as one block —
+    functionally identical, just untiled."""
+    bs = min(block, n)
+    if n % bs:
+        bs = n
+    return bs, (n // bs,)
+
+
+def fused_sync_easgd_update(w, grad, center, row, p: int,
+                            eta: float, rho: float, *,
+                            block: int = ELASTIC_UPDATE_BLOCK,
+                            interpret=True):
+    """One bucket's fused Sync EASGD update (worker rule + center pull in
+    a single pass over the slices — five reads, two writes):
+
+        W' = W − η(G + ρ(W − C))
+        C' = C + ηρP(R/P − C)        (R = exchanged Σ_i W_i, pre-update)
+
+    Returns ``(w', c')`` as f64 numpy arrays; the caller assigns them back
+    into its bucket slices."""
+    n = w.shape[0]
+    bs, grid = _bucket_grid(n, block)
+    spec = pl.BlockSpec((bs,), lambda i: (i,))
+    kernel = functools.partial(_sync_easgd_kernel, eta=eta, rho=rho,
+                               alpha_p=(eta * rho) * p, p=p)
+    with enable_x64():
+        w_new, c_new = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[spec] * 4,
+            out_specs=[spec] * 2,
+            out_shape=[jax.ShapeDtypeStruct((n,), jnp.float64)] * 2,
+            interpret=interpret,
+        )(w, grad, center, row)
+        return np.asarray(w_new), np.asarray(c_new)
+
+
+def fused_sync_sgd_update(center, vel, row, p: int,
+                          eta: float, mu: float, *,
+                          block: int = ELASTIC_UPDATE_BLOCK,
+                          interpret=True):
+    """One bucket's fused synchronous momentum-SGD master update:
+
+        V̄' = μV̄ − η(R/P);  C' = C + V̄'     (R = exchanged Σ_i grad_i)
+
+    Returns ``(c', v̄')`` as f64 numpy arrays."""
+    n = center.shape[0]
+    bs, grid = _bucket_grid(n, block)
+    spec = pl.BlockSpec((bs,), lambda i: (i,))
+    kernel = functools.partial(_sync_sgd_kernel, eta=eta, mu=mu, p=p)
+    with enable_x64():
+        c_new, v_new = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[spec] * 3,
+            out_specs=[spec] * 2,
+            out_shape=[jax.ShapeDtypeStruct((n,), jnp.float64)] * 2,
+            interpret=interpret,
+        )(center, vel, row)
+        return np.asarray(c_new), np.asarray(v_new)

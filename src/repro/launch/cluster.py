@@ -100,6 +100,25 @@ def main(argv=None):
     ap.add_argument("--ssh", action="store_true",
                     help="with --hosts: launch the printed worker commands "
                          "over ssh instead of just printing them")
+    ap.add_argument("--model", default="tiny-mlp",
+                    help="training problem (repro.ps.zoo): tiny-mlp "
+                         "(default, unchanged), mlp-large, jax-mlp, lenet, "
+                         "alexnet, or a repro.configs arch id — e.g. "
+                         "gemma3-27b streams a ~5.7 MB reduced LM through "
+                         "the wire")
+    ap.add_argument("--bucket-bytes", type=int, default=0,
+                    help="sync family: bucket the exchange into ~this many "
+                         "payload bytes per bucket at layer edges (0 = "
+                         "monolithic row). On the p2p plane buckets stream "
+                         "while compute runs")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="p2p: run the bucketed exchange inline instead of "
+                         "pipelined (the no-overlap baseline; math is "
+                         "bitwise identical either way)")
+    ap.add_argument("--update-backend", default="numpy",
+                    choices=["numpy", "pallas"],
+                    help="p2p per-bucket update: easgd_flat numpy or the "
+                         "fused Pallas elastic-update kernel")
     ap.add_argument("--timeout", type=float, default=600.0)
     args = ap.parse_args(argv)
 
@@ -117,9 +136,15 @@ def main(argv=None):
         if bad:
             ap.error(f"--sync-plane p2p applies to the sync family only; "
                      f"{bad} exchange through the master by definition")
+    if args.update_backend == "pallas" and (args.transport != "tcp"
+                                            or args.sync_plane != "p2p"):
+        ap.error("--update-backend pallas rides the p2p worker loop "
+                 "(--transport tcp --sync-plane p2p)")
     easgd = EASGDConfig(eta=args.eta, rho=args.rho, mu=0.9, tau=args.tau)
     emulate = costmodel.PS_WIRE if args.emulate == "wire" else None
     multi_host = bool(args.hosts)
+    from repro.ps import zoo
+    problem = zoo.resolve(args.model)
     base = ps.PSConfig(
         algorithm=algos[0], n_workers=args.workers,
         transport=args.transport, schedule=args.schedule,
@@ -128,7 +153,9 @@ def main(argv=None):
         tcp_host="0.0.0.0" if multi_host else "127.0.0.1",
         tcp_port=args.port if multi_host else 0,
         spawn_workers=not multi_host,
-        sync_plane=args.sync_plane)
+        sync_plane=args.sync_plane,
+        bucket_bytes=args.bucket_bytes, overlap=not args.no_overlap,
+        update_backend=args.update_backend)
 
     results = []
     for algo in algos:
@@ -157,7 +184,7 @@ def main(argv=None):
                     ssh_procs.append(subprocess.Popen(
                         ["ssh", host, *shlex.split(cmd)]))
         try:
-            res = ps.run_ps(ps.NUMPY_MLP_MED, easgd, cfg,
+            res = ps.run_ps(problem, easgd, cfg,
                             join_timeout_s=args.timeout)
         finally:
             for proc in ssh_procs:

@@ -41,6 +41,8 @@ def run_ps_mode(args) -> list:
     from repro import ps
     from repro.core import costmodel
 
+    from repro.ps import zoo
+
     algos = (list(ps.ALGORITHMS) if args.algorithm == "all"
              else [args.algorithm])
     easgd = EASGDConfig(eta=args.eta, rho=args.rho, mu=0.9, tau=args.tau)
@@ -53,20 +55,25 @@ def run_ps_mode(args) -> list:
     if args.sync_plane == "p2p" and args.transport != "tcp":
         raise SystemExit("--sync-plane p2p needs --transport tcp (the p2p "
                          "data plane is worker↔worker sockets)")
+    problem = zoo.resolve(args.model)
     base = ps.PSConfig(
         algorithm=algos[0], n_workers=args.ps_workers,
         transport=args.transport, schedule=args.schedule or "ring",
         total_iters=args.ps_iters, eval_every_iters=args.ps_eval_every,
-        emulate_net=net, wire_compression=wire_codec)
-    cal = ps.calibrate(ps.NUMPY_MLP_MED, base)
+        emulate_net=net, wire_compression=wire_codec,
+        bucket_bytes=args.bucket_bytes, overlap=not args.no_overlap)
+    cal = ps.calibrate(problem, base)
     out = []
     from repro.core.easgd_flat import SYNC_FAMILY as _SYNC
     for algo in algos:
         # the p2p plane only exists for the sync family; `--algorithm all
-        # --sync-plane p2p` runs the rest through the master as usual
+        # --sync-plane p2p` runs the rest through the master as usual —
+        # and the fused-kernel update path rides the p2p worker loop only
         plane = args.sync_plane if algo in _SYNC else "master"
-        cfg = _dc.replace(base, algorithm=algo, sync_plane=plane)
-        res, _, rec = ps.run_vs_des(ps.NUMPY_MLP_MED, easgd, cfg, cal=cal)
+        backend = args.update_backend if plane == "p2p" else "numpy"
+        cfg = _dc.replace(base, algorithm=algo, sync_plane=plane,
+                          update_backend=backend)
+        res, _, rec = ps.run_vs_des(problem, easgd, cfg, cal=cal)
         print(f"{algo:16s} [{res.transport}/{res.schedule}] "
               f"iters={res.total_iters} err={res.final_metric:.3f} "
               f"measured={rec['measured_us_per_iter']:.1f}us/iter "
@@ -112,6 +119,22 @@ def main(argv=None):
     ap.add_argument("--ps-workers", type=int, default=4)
     ap.add_argument("--ps-iters", type=int, default=400)
     ap.add_argument("--ps-eval-every", type=int, default=200)
+    ap.add_argument("--model", default="tiny-mlp",
+                    help="ps training problem (repro.ps.zoo): tiny-mlp "
+                         "(default, unchanged), mlp-large, jax-mlp, lenet, "
+                         "alexnet, or any repro.configs arch id (e.g. "
+                         "gemma3-4b — a real reduced-config LM on the wire)")
+    ap.add_argument("--bucket-bytes", type=int, default=0,
+                    help="bucket the sync-family exchange into ~this many "
+                         "payload bytes per bucket, cut at layer edges "
+                         "(0 = monolithic). With the tcp p2p plane buckets "
+                         "stream while compute runs — bitwise-identical "
+                         "math, overlapped wire")
+    ap.add_argument("--update-backend", default="numpy",
+                    choices=["numpy", "pallas"],
+                    help="p2p per-bucket update path: easgd_flat numpy or "
+                         "the fused Pallas elastic-update kernel (bitwise "
+                         "under the worker's pinned XLA flags)")
     ap.add_argument("--sync-plane", default="master",
                     choices=["master", "p2p"],
                     help="tcp sync family: 'p2p' executes Schedule.rounds "

@@ -1,5 +1,5 @@
 """The repro.net peer-to-peer data plane: workers execute ``Schedule.rounds``
-over direct worker↔worker TCP links.
+over direct worker↔worker TCP links, bucketed for comm/compute overlap.
 
 Under the centralized sync plane the master executes the allreduce on its
 local mailbox, so every training round funnels Θ(P·N) bytes through the
@@ -22,65 +22,105 @@ lower's listener (PEERS handshake: {"wid", "token"} out, {"wid"} ack back);
 dials complete against the listener backlog before anyone blocks in
 accept, so the mesh setup cannot deadlock.
 
-Execution is alloc-free in steady state: the per-round send/recv plan and
-the per-(peer, segment) receive buffers are precomputed once, sends are
-``sendall`` on memoryviews of the row, ``op=set`` raw segments land via
-``recv_into`` DIRECTLY in the row slice. Within a round every send happens
-before any receive is applied — receivers read senders' PRE-round values,
-the exact snapshot discipline of ``ps.execute_rounds`` — which, together
-with IEEE-754 addition's commutativity (ring/tree literally copy one
-accumulation chain to every rank; butterfly/hierarchical rows differ only
-in addend ORDER of the same pairwise sums), makes every worker's row
-bitwise equal to the centralized ``mailbox[0]``. That is what lets each
-worker advance a local center replica bit-for-bit in lockstep with the
-master-plane run (the thread↔tcp↔p2p triangle pinned in tests/test_net.py).
+BUCKETS: ``set_rounds`` accepts element boundaries that partition the row
+into per-layer-group buckets (``comm.rounds.bucket_rounds``). Each bucket
+executes the SAME rounds with every message's span clipped to the bucket —
+same sources, same op, same order per element as the monolithic exchange,
+which is why bucketed rows stay bitwise equal to monolithic ones (and to
+the centralized plane). The caller streams buckets in order and learns of
+each completion via ``on_bucket``, so bucket i+1's SEGMENT frames fly
+while bucket i's update computes — the paper's §6.1.3 overlap, on a real
+wire. Per-bucket sign-EF keys (the ef_tag carries the bucket index) keep
+every (peer, bucket, segment, direction) quantization residual separate.
 
-Per-link sign-EF composes exactly as on the master links: the sender of a
-link carries its own quantization residual forward, keyed by (frame type,
-segment length, ef_tag=chunk index), so every (peer, vector-segment)
-stream has its own scale and error-feedback state.
+ROUND ENGINE: each round's sends and receives progress together on
+non-blocking sockets under ``select`` — any link that can move bytes
+moves them, at kernel-buffer granularity. No ordering between sends and
+receives is ever required, so rows (or buckets) of ANY size stream through
+bounded socket buffers without the distributed-deadlock risk of an
+everyone-sends-first cycle, and without PR 4's helper-thread escape hatch
+(retired). Receives still apply AFTER the round's sends have snapshot
+their data: codec-none ``op=set`` segments land directly in the row only
+when their span is disjoint from every send span of the same round;
+everything else lands in scratch and is applied once the round completes —
+the exact PRE-round-value discipline of ``ps.execute_rounds``, which,
+together with IEEE-754 addition's commutativity, makes every worker's row
+bitwise equal to the centralized ``mailbox[0]`` (the thread↔tcp↔p2p
+triangle pinned in tests/test_net.py).
 """
 from __future__ import annotations
 
+import select
 import socket
-import threading
 from time import monotonic as _monotonic
 
 import numpy as np
 
-from repro.comm.rounds import MASTER, Message
+from repro.comm.rounds import MASTER, bucket_rounds, clip_span
 from repro.net import wire
 from repro.net.wire import Link
 
-# Above this per-message payload size the round executor moves sends to a
-# helper thread: with everyone inside a round sending before receiving, a
-# segment larger than the kernel's socket buffering would otherwise leave
-# every worker blocked in sendall with nobody draining — a distributed
-# deadlock. 64 KiB sits safely under Linux's default wmem/rmem (~208 KiB
-# each side), so the common model-sized path stays inline and alloc-free.
-INLINE_SEND_MAX = 64 * 1024
+# socket-op granularity of the round engine: one non-blocking send() call
+# hands the kernel at most this many bytes, so a single link can never
+# monopolize a round's progress loop (receives interleave at the same
+# grain). Purely a fairness knob — correctness never depends on it.
+SEND_OP_MAX = 256 * 1024
 
 
-def predicted_link_bytes(rounds, padded_elements: int) -> dict:
+def predicted_link_bytes(rounds, padded_elements: int,
+                         boundaries=None) -> dict:
     """Exact wire bytes (header + raw-f64 payload) per unordered worker
     pair for ONE exchange of the given rounds — what each endpoint's
     per-link counter must report per exchange under ``codec=none``. Both
     directions of a pair are summed, matching a Link's counter (it counts
-    its sends AND its receives)."""
+    its sends AND its receives). With ``boundaries``, each message is
+    clipped per bucket and each non-empty clip is its own frame (one more
+    header), exactly as the bucketed engine sends them."""
+    bounds = [0, padded_elements] if boundaries is None \
+        else [int(x) for x in boundaries]
     out: dict[tuple, int] = {}
     for rnd in rounds:
         for m in rnd:
             if m.src == MASTER or m.dst == MASTER:
                 continue
-            a, b = m.span(padded_elements)
             pair = (min(m.src, m.dst), max(m.src, m.dst))
-            out[pair] = out.get(pair, 0) + wire.HEADER_SIZE + (b - a) * 8
+            for lo, hi in zip(bounds[:-1], bounds[1:]):
+                span = clip_span(m, padded_elements, lo, hi)
+                if span is None:
+                    continue
+                a, b = span
+                out[pair] = out.get(pair, 0) + wire.HEADER_SIZE + (b - a) * 8
     return out
+
+
+class _LinkIO:
+    """Per-link engine state for one round: a FIFO of outgoing frame
+    buffers and a FIFO of expected incoming segments, each with a byte
+    cursor — resumable whenever ``select`` says the socket is ready."""
+
+    __slots__ = ("link", "send_q", "send_vi", "send_off", "recv_q",
+                 "hdr_buf", "hdr_got", "frame", "pay_view", "pay_buf",
+                 "pay_got", "recv_cur")
+
+    def __init__(self, link: Link):
+        self.link = link
+        self.send_q: list = []       # [ [views...], payload_len ]
+        self.send_vi = 0             # view index within head frame
+        self.send_off = 0            # byte offset within current view
+        self.recv_q: list = []       # (a, b, op, scratch, direct)
+        self.hdr_buf = bytearray(wire.HEADER_SIZE)
+        self.hdr_got = 0
+        self.frame = None
+        self.pay_view = None
+        self.pay_buf = None
+        self.pay_got = 0
+        self.recv_cur = None
 
 
 class PeerMesh:
     """One worker's endpoint of the p2p data plane: listener + persistent
-    links to every peer its rounds talk to, plus the round executor."""
+    links to every peer its rounds talk to, plus the bucketed round
+    executor."""
 
     def __init__(self, wid: int, token: str, codec: str = "none",
                  bind_host: str = "0.0.0.0", port: int = 0,
@@ -102,8 +142,13 @@ class PeerMesh:
         self.links: dict[int, Link] = {}
         self.counters: dict[int, dict] = {}
         self.rounds_executed = 0
-        self._plan: list = []            # [(sends, recvs)] per round
+        self.bucket_send_bytes: list[int] = []   # logical f64 payload sent,
+        #                                          per bucket, all exchanges
+        self.boundaries: list[int] = []
+        self._plans: list = []           # per bucket: [(sends, recvs)]/round
         self._scratch: dict = {}         # (src, a, b) -> recv buffer
+        self._rounds_len = 0
+        self._nonblocking = False
 
     # -- mesh setup ----------------------------------------------------------
 
@@ -182,89 +227,210 @@ class PeerMesh:
 
     # -- the round executor --------------------------------------------------
 
-    def set_rounds(self, rounds: list, padded: int) -> None:
-        """Precompute the per-round send/recv plan and the receive buffers
-        so ``execute_exchange`` is alloc-free: sends are (link, span) pairs,
-        receives get a preallocated per-(peer, segment) scratch buffer
-        (``op=set`` raw receives land directly in the row on the inline
-        path). The sign-EF tag is (chunk, op): a ring link carries a
-        chunk's reduce-scatter partial sums AND its all-gather broadcast
-        values — two streams whose quantization residuals must not mix."""
-        self._plan = []
+    @property
+    def n_buckets(self) -> int:
+        return len(self._plans)
+
+    def set_rounds(self, rounds: list, padded: int,
+                   boundaries=None) -> None:
+        """Precompute the per-bucket, per-round send/recv plans and the
+        receive buffers so execution is alloc-free: sends are (link, span,
+        ef_tag) triples, receives get a preallocated per-(peer, segment)
+        scratch buffer unless they can land directly in the row (``op=set``
+        raw segments whose span is disjoint from every same-round send
+        span). The sign-EF tag is (bucket, chunk, op): a ring link carries
+        a chunk's reduce-scatter partial sums AND its all-gather broadcast
+        values — per-bucket streams whose quantization residuals must not
+        mix."""
+        bounds = [0, padded] if boundaries is None \
+            else [int(x) for x in boundaries]
+        self.boundaries = bounds
+        self._rounds_len = len(rounds)
         self._scratch = {}
-        max_send = 0
-        for rnd in rounds:
-            sends = []
-            recvs = []
-            for m in rnd:
-                if m.src == self.wid:
-                    a, b = m.span(padded)
-                    max_send = max(max_send, (b - a) * 8)
-                    sends.append((self.links[m.dst], a, b, (m.chunk, m.op)))
-                elif m.dst == self.wid:
-                    a, b = m.span(padded)
-                    key = (m.src, a, b)
-                    if key not in self._scratch:
-                        self._scratch[key] = np.zeros(b - a)
-                    recvs.append((self.links[m.src], a, b, m.op,
-                                  self._scratch[key]))
-            self._plan.append((sends, recvs))
-        # segments past the kernel's socket buffering would deadlock the
-        # everyone-sends-first cycle — move those sends to a helper thread
-        self._threaded = max_send > INLINE_SEND_MAX
+        self._plans = []
+        self.bucket_send_bytes = [0] * (len(bounds) - 1)
+        for bidx, plan in enumerate(bucket_rounds(rounds, padded, bounds)):
+            rplan = []
+            for rnd in plan:
+                sends, recvs = [], []
+                send_spans = [(a, b) for m, (a, b) in rnd
+                              if m.src == self.wid]
+                for m, (a, b) in rnd:
+                    if m.src == self.wid:
+                        sends.append((self.links[m.dst], a, b,
+                                      (bidx, m.chunk, m.op)))
+                    elif m.dst == self.wid:
+                        direct = (m.op == "set" and self.codec == "none"
+                                  and all(b <= sa or a >= sb
+                                          for sa, sb in send_spans))
+                        scratch = None
+                        if not direct:
+                            key = (m.src, a, b)
+                            if key not in self._scratch:
+                                self._scratch[key] = np.zeros(b - a)
+                            scratch = self._scratch[key]
+                        recvs.append((self.links[m.src], a, b, m.op,
+                                      scratch, direct))
+                rplan.append((sends, recvs))
+            self._plans.append(rplan)
 
-    def _do_sends(self, row, sends, seq, err_box=None) -> None:
-        try:
-            for link, a, b, tag in sends:
-                link.send_array(wire.SEGMENT, row[a:b], wid=seq, ef_tag=tag)
-        except BaseException as e:               # noqa: BLE001 — re-raised
-            if err_box is None:
-                raise
-            err_box.append(e)
+    def _ensure_nonblocking(self) -> None:
+        if not self._nonblocking:
+            for link in self.links.values():
+                link.sock.setblocking(False)
+            self._nonblocking = True
 
-    def execute_exchange(self, row: np.ndarray) -> None:
-        """One allreduce: this worker's share of every round, in schedule
-        order, receivers reading senders' PRE-round values. Inline path
-        (segments ≤ INLINE_SEND_MAX): all sends complete against kernel
-        buffers (``sendall`` returns once the kernel owns the bytes), then
-        receives apply — zero-copy ``recv_into`` the row for raw ``set``
-        segments. Threaded path (large segments): sends run in a helper
-        thread while receives drain into scratch, and the row is only
-        mutated after the sends — which read it — have finished."""
-        for r_idx, (sends, recvs) in enumerate(self._plan):
-            seq = r_idx & 0x7FFF         # rides the header's wid field
-            sender = None
-            err_box: list = []
-            if self._threaded and sends:
-                sender = threading.Thread(
-                    target=self._do_sends, args=(row, sends, seq, err_box))
-                sender.start()
+    def _run_round(self, row: np.ndarray, sends, recvs, seq: int) -> None:
+        """Progress every pending send and receive of one round under
+        ``select`` until all complete, then apply scratch receives. Frame
+        order per link is plan order on both ends (FIFO), and the round
+        index rides the header's wid field as a desync detector."""
+        ios: dict[Link, _LinkIO] = {}
+        for link, a, b, tag in sends:
+            io = ios.get(link)
+            if io is None:
+                io = ios[link] = _LinkIO(link)
+            header, payload = link.encode_array(
+                wire.SEGMENT, row[a:b], wid=seq, ef_tag=tag)
+            io.send_q.append([[memoryview(header), payload], len(payload)])
+        for link, a, b, op, scratch, direct in recvs:
+            io = ios.get(link)
+            if io is None:
+                io = ios[link] = _LinkIO(link)
+            io.recv_q.append((a, b, op, scratch, direct))
+        by_sock = {io.link.sock: io for io in ios.values()}
+        pending = []                     # (a, b, op, array) post-round
+        deadline = _monotonic() + self.timeout_s
+        while True:
+            rl = [s for s, io in by_sock.items() if io.recv_q]
+            wl = [s for s, io in by_sock.items() if io.send_q]
+            if not rl and not wl:
+                break
+            readable, writable, _ = select.select(rl, wl, [], 1.0)
+            if not readable and not writable:
+                if _monotonic() > deadline:
+                    raise wire.WireError(
+                        f"p2p round {seq} stalled on worker {self.wid}: "
+                        f"{len(rl)} recv / {len(wl)} send links pending")
+                continue
+            for s in writable:
+                self._pump_send(by_sock[s])
+            for s in readable:
+                self._pump_recv(by_sock[s], row, seq, pending)
+        for a, b, op, arr in pending:    # row mutations only after every
+            if op == "set":              # send of the round snapshot it
+                row[a:b] = arr
             else:
-                self._do_sends(row, sends, seq)
-            pending = []
-            for link, a, b, op, scratch in recvs:
-                frame = link.recv_header()
+                row[a:b] += arr
+
+    @staticmethod
+    def _pump_send(io: _LinkIO) -> None:
+        sock = io.link.sock
+        while io.send_q:
+            views, payload_len = io.send_q[0]
+            view = views[io.send_vi]
+            chunk = view[io.send_off:io.send_off + SEND_OP_MAX]
+            try:
+                k = sock.send(chunk)
+            except (BlockingIOError, InterruptedError):
+                return
+            io.send_off += k
+            if io.send_off < len(view):
+                if k < len(chunk):       # kernel buffer full — come back
+                    return
+                continue
+            io.send_vi += 1
+            io.send_off = 0
+            if io.send_vi == len(views):
+                io.link._count(payload_len)
+                io.send_q.pop(0)
+                io.send_vi = 0
+
+    def _pump_recv(self, io: _LinkIO, row: np.ndarray, seq: int,
+                   pending: list) -> None:
+        sock = io.link.sock
+        while io.recv_q:
+            if io.frame is None:         # header phase
+                mv = memoryview(io.hdr_buf)
+                try:
+                    k = sock.recv_into(mv[io.hdr_got:])
+                except (BlockingIOError, InterruptedError):
+                    return
+                if k == 0:
+                    raise wire.WireError("peer closed mid-round "
+                                         f"(round {seq})")
+                io.hdr_got += k
+                if io.hdr_got < wire.HEADER_SIZE:
+                    return
+                io.hdr_got = 0
+                frame = wire.parse_header(bytes(io.hdr_buf))
                 if frame.ftype != wire.SEGMENT or frame.wid != seq:
                     raise wire.WireError(
                         f"p2p desync: expected SEGMENT round {seq}, got "
                         f"{wire.FRAME_NAMES.get(frame.ftype, frame.ftype)} "
                         f"round {frame.wid}")
-                if sender is None and op == "set" \
-                        and frame.codec == wire.CODEC_NONE:
-                    link.recv_array(frame, row[a:b])   # straight into the row
+                a, b, op, scratch, direct = io.recv_q[0]
+                if frame.codec == wire.CODEC_NONE:
+                    if frame.size != (b - a) * 8:
+                        raise wire.WireError(
+                            f"p2p segment size {frame.size} != span "
+                            f"{(b - a) * 8} (round {seq})")
+                    target = row[a:b] if direct else scratch
+                    io.pay_view = memoryview(target).cast("B")
+                    io.pay_buf = None
                 else:
-                    link.recv_array(frame, scratch)
-                    pending.append((a, b, op, scratch))
-            if sender is not None:
-                sender.join()
-                if err_box:
-                    raise err_box[0]
-            for a, b, op, scratch in pending:          # row mutations only
-                if op == "set":                        # after sends read it
-                    row[a:b] = scratch
-                else:
-                    row[a:b] += scratch
-            self.rounds_executed += 1
+                    io.pay_buf = bytearray(frame.size)
+                    io.pay_view = memoryview(io.pay_buf)
+                io.pay_got = 0
+                io.frame = frame
+            frame = io.frame
+            if io.pay_got < frame.size:
+                try:
+                    k = sock.recv_into(io.pay_view[io.pay_got:])
+                except (BlockingIOError, InterruptedError):
+                    return
+                if k == 0:
+                    raise wire.WireError("peer closed mid-segment "
+                                         f"(round {seq})")
+                io.pay_got += k
+                if io.pay_got < frame.size:
+                    return
+            a, b, op, scratch, direct = io.recv_q.pop(0)
+            io.frame = None
+            io.link._count(frame.size)
+            if io.pay_buf is not None:   # sign_ef: decode, defer apply
+                arr = wire.decode_array_payload(frame, io.pay_buf)
+                pending.append((a, b, op, arr))
+                io.pay_buf = None
+            elif not direct:             # raw into scratch: defer apply
+                pending.append((a, b, op, scratch))
+            io.pay_view = None
+
+    def execute_bucket(self, row: np.ndarray, bidx: int) -> None:
+        """All rounds of one bucket, in schedule order. Safe to call only
+        in bucket order (frame sequence numbers advance bucket-major)."""
+        self._ensure_nonblocking()
+        plan = self._plans[bidx]
+        for r_idx, (sends, recvs) in enumerate(plan):
+            if not sends and not recvs:
+                continue
+            seq = (bidx * self._rounds_len + r_idx) & 0x7FFF
+            for _, a, b, _tag in sends:
+                self.bucket_send_bytes[bidx] += (b - a) * 8
+            self._run_round(row, sends, recvs, seq)
+
+    def execute_exchange(self, row: np.ndarray, on_bucket=None) -> None:
+        """One allreduce: every bucket's share of every round, bucket-major
+        — all workers stream buckets in the same order, and disjoint bucket
+        spans keep the per-element operation order identical to the
+        monolithic exchange. ``on_bucket(bidx)`` fires as each bucket's
+        rounds complete, which is the overlap hook: the caller can start
+        bucket ``bidx``'s update while bucket ``bidx+1`` is on the wire."""
+        for bidx in range(len(self._plans)):
+            self.execute_bucket(row, bidx)
+            if on_bucket is not None:
+                on_bucket(bidx)
+        self.rounds_executed += self._rounds_len
 
     # -- accounting / teardown ----------------------------------------------
 
@@ -272,6 +438,8 @@ class PeerMesh:
         """JSON-ready per-link counters, reported to the master in BYE."""
         return {
             "sync_rounds": self.rounds_executed,
+            "n_buckets": len(self._plans),
+            "bucket_send_bytes": list(self.bucket_send_bytes),
             "peer_links": {
                 str(peer): {"messages": c["messages"].value,
                             "wire_bytes": c["wire_bytes"].value}

@@ -54,6 +54,7 @@ import time
 
 import numpy as np
 
+from repro.comm import rounds as comm_rounds
 from repro.comm import schedules as comm_schedules
 from repro.core import easgd_flat
 from repro.core.compression import sign_ef_wire_nbytes
@@ -72,22 +73,29 @@ def wire_payload_nbytes(n_elements: int, codec: str) -> int:
     return n_elements * 8
 
 
-def worker_env() -> dict:
+def worker_env(pallas: bool = False) -> dict:
     """Environment for a spawned worker interpreter: the repo's src dir on
     PYTHONPATH (shared by the training spawn and the calibration burners —
-    one definition of how a worker process is launched)."""
+    one definition of how a worker process is launched). ``pallas`` pins
+    the XLA CPU backend to a no-FMA ISA BEFORE the child's first jax
+    import, so the fused elastic-update kernel stays bitwise equal to
+    easgd_flat (see kernels/elastic_update.py)."""
     src = os.path.dirname(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
     env = dict(os.environ)
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    if pallas:
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        env.setdefault("XLA_FLAGS", "--xla_cpu_max_isa=SSE4_2")
     return env
 
 
 def spawn_local_workers(host: str, port: int, n_workers: int,
-                        token: str = DEFAULT_TOKEN) -> list:
+                        token: str = DEFAULT_TOKEN,
+                        pallas: bool = False) -> list:
     """Launch localhost worker processes (fresh interpreters — the same
     isolation a remote host gives, minus the cable)."""
-    env = worker_env()
+    env = worker_env(pallas=pallas)
     return [
         subprocess.Popen(
             [sys.executable, "-m", "repro.net.worker",
@@ -137,7 +145,7 @@ class MasterServer:
         self.easgd = easgd
         self.cfg = cfg
         self.timeout = join_timeout_s
-        w0, _, eval_fn = problem.build()
+        w0, grad_fn, eval_fn = problem.build()
         self.eval_fn = eval_fn_override or eval_fn
         self.w0 = np.asarray(w0, np.float64)
         self.n = self.w0.size
@@ -158,6 +166,11 @@ class MasterServer:
                 f"(ring/tree/butterfly/hierarchical) for sync_plane='p2p'")
         padded = self.n + (-self.n) % max(P, 1)
         self.padded = padded
+        self.boundaries = None
+        if getattr(cfg, "bucket_bytes", 0) > 0 and cfg.algorithm in SYNC:
+            self.boundaries = comm_rounds.default_bucket_boundaries(
+                getattr(grad_fn, "layer_sizes", None), padded,
+                cfg.bucket_bytes)
         # -- master-owned optimizer state (thread-transport layout) --------
         self.center = self.w0.copy()
         self.master_vel = np.zeros(self.n)
@@ -256,6 +269,24 @@ class MasterServer:
             self.cfg.t_msg_emulated(max(m.frac for m in rnd) * self.n * 8)
             for rnd in self.rounds)
 
+    def _t_sync_wire_buckets(self) -> list:
+        """Per-bucket emulated wire time: under bucketing each round
+        fragments into per-bucket frames, so bucket b pays α + its own
+        max clipped span·β for every round it appears in. Σ_b can exceed
+        ``_t_sync_wire`` (more frames ⇒ more α) — that extra latency is
+        exactly what the overlap pipeline is for."""
+        plans = comm_rounds.bucket_rounds(self.rounds, self.padded,
+                                          self.boundaries)
+        out = []
+        for plan in plans:
+            t = 0.0
+            for rnd in plan:
+                if rnd:
+                    t += self.cfg.t_msg_emulated(
+                        max(b - a for _, (a, b) in rnd) * 8)
+            out.append(t)
+        return out
+
     def _eval_rounds(self) -> list:
         """Exchange-round indices after which the eval cadence fires —
         the `_maybe_eval` trigger precomputed, so the p2p workers and this
@@ -345,6 +376,12 @@ class MasterServer:
                     "eval_rounds": self._eval_rounds(),
                     "t_wire_s": self._t_sync_wire(),
                     "peers": {str(w): a for w, a in self.peer_addrs.items()},
+                    "bucket_bounds": self.boundaries,
+                    "overlap": getattr(cfg, "overlap", True),
+                    "update_backend": getattr(cfg, "update_backend",
+                                              "numpy"),
+                    "t_wire_bucket_s": (self._t_sync_wire_buckets()
+                                        if self.boundaries else []),
                 })
             link.send_json(wire.WELCOME, welcome)
         for wid, link in self.links.items():
@@ -649,7 +686,8 @@ class MasterServer:
                         self.workers_w[i] = self.wstate_bufs[i]
                 self.mailbox[:P, :n] = self.workers_w
                 deadline = time.monotonic() + t_wire
-                execute_rounds(self.mailbox, n, self.rounds, self.counters)
+                execute_rounds(self.mailbox, n, self.rounds, self.counters,
+                               boundaries=self.boundaries)
                 if t_wire:
                     sleep_until(deadline)
                 self._await("grad", all_wids - got_grad)
@@ -663,7 +701,8 @@ class MasterServer:
                 self._await("grad", all_wids)
                 self.mailbox[:P, :n] = self.grad_bufs
                 deadline = time.monotonic() + t_wire
-                execute_rounds(self.mailbox, n, self.rounds, self.counters)
+                execute_rounds(self.mailbox, n, self.rounds, self.counters,
+                               boundaries=self.boundaries)
                 if t_wire:
                     sleep_until(deadline)
                 easgd_flat.sync_master_sgd(
@@ -748,6 +787,19 @@ class MasterServer:
             counters["peer_messages"] = msgs
             counters["sync_rounds"] = (
                 self.bye_stats.get(0, {}).get("sync_rounds", 0))
+            # overlap accounting: summed across workers (wall seconds of
+            # comm-thread activity vs seconds the update path sat blocked
+            # on the wire); per-bucket logical payload summed elementwise
+            for key in ("comm_s", "exposed_s", "overlapped_s"):
+                counters[key] = sum(
+                    st.get(key, 0.0) for st in self.bye_stats.values())
+            counters["n_buckets"] = (
+                self.bye_stats.get(0, {}).get("n_buckets", 1))
+            bucket_bytes = [0] * counters["n_buckets"]
+            for st in self.bye_stats.values():
+                for i, v in enumerate(st.get("bucket_send_bytes", [])):
+                    bucket_bytes[i] += int(v)
+            counters["bucket_send_bytes"] = bucket_bytes
         return PSResult(
             algorithm=self.cfg.algorithm, transport="tcp",
             schedule=((self.sched_name + "+p2p") if self.sync_p2p
@@ -774,6 +826,8 @@ def run_ps_tcp(problem, easgd, cfg, eval_fn_override=None,
     listener.bind((cfg.tcp_host, cfg.tcp_port))
     listener.listen(cfg.n_workers + 2)
     port = listener.getsockname()[1]
-    procs = (spawn_local_workers(cfg.tcp_host, port, cfg.n_workers)
-             if cfg.spawn_workers else [])
+    procs = (spawn_local_workers(
+        cfg.tcp_host, port, cfg.n_workers,
+        pallas=getattr(cfg, "update_backend", "numpy") == "pallas")
+        if cfg.spawn_workers else [])
     return master.run(listener, procs=procs)

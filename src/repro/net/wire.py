@@ -120,6 +120,15 @@ def sleep_until(deadline: float) -> None:
         time.sleep(dt)
 
 
+def parse_header(buf: bytes) -> Frame:
+    """Validate and unpack one 16-byte frame header (the p2p round engine
+    fills header buffers itself on non-blocking sockets)."""
+    magic, ver, ftype, wid, flags, codec, size = _HEADER.unpack(buf)
+    if magic != MAGIC or ver != VERSION:
+        raise WireError(f"bad frame header: magic={magic!r} v={ver}")
+    return Frame(ftype, wid, flags, codec, size)
+
+
 def _recv_exact(sock: socket.socket, view: memoryview) -> None:
     """Fill ``view`` completely, looping over partial reads."""
     got = 0
@@ -186,6 +195,36 @@ class Link:
         return self._send(ftype, wid, 0, CODEC_NONE,
                           json.dumps(obj).encode())
 
+    def encode_array(self, ftype: int, arr: np.ndarray, wid: int = 0,
+                     segments: int = 1, ef_tag=0, raw: bool = False
+                     ) -> tuple[bytes, memoryview]:
+        """Serialize an array frame WITHOUT sending: ``(header, payload)``.
+        The p2p round engine queues these on non-blocking sockets and
+        streams them itself. With codec none the payload is a zero-copy
+        memoryview of ``arr``; sign_ef encodes (and therefore snapshots)
+        the data here, advancing this link's error-feedback state — so
+        encode order must be deterministic (it is: plan order)."""
+        arr = np.ascontiguousarray(arr, np.float64)
+        if self.codec == CODEC_SIGN_EF and not raw:
+            assert arr.size % max(segments, 1) == 0, (arr.size, segments)
+            segs = arr.reshape(max(segments, 1), -1)
+            parts = []
+            for i in range(segs.shape[0]):
+                key = (ftype, segs.shape[1], i, ef_tag)
+                err = self._ef.get(key)
+                if err is None:
+                    err = self._ef[key] = np.zeros(segs.shape[1], np.float64)
+                payload, self._ef[key] = sign_ef_encode_np(segs[i], err)
+                parts.append(payload)
+            payload = memoryview(b"".join(parts))
+            codec = CODEC_SIGN_EF
+        else:
+            payload = memoryview(arr).cast("B")
+            codec = CODEC_NONE
+        header = _HEADER.pack(MAGIC, VERSION, ftype, wid, max(segments, 1),
+                              codec, len(payload))
+        return header, payload
+
     def send_array(self, ftype: int, arr: np.ndarray, wid: int = 0,
                    segments: int = 1, ef_tag=0, raw: bool = False) -> int:
         """Send a flat float64 array through the link's codec. Returns the
@@ -199,28 +238,21 @@ class Link:
         WSTATE weights stream never shares residuals with a GRAD stream of
         the same size. ``ef_tag`` (any hashable) distinguishes same-size
         streams of one frame type on one link: the p2p data plane tags
-        SEGMENT frames with (chunk index, op), so every (peer, vector
-        segment, direction-of-flow) carries its own quantization residual
-        forward. ``raw=True`` bypasses a lossy codec for this one frame —
-        one-shot reports (the p2p final CENTER/WSTATE) must arrive exact;
-        error feedback can only amortize quantization across a STREAM."""
-        arr = np.ascontiguousarray(arr, np.float64)
-        if self.codec == CODEC_SIGN_EF and not raw:
-            assert arr.size % max(segments, 1) == 0, (arr.size, segments)
-            segs = arr.reshape(max(segments, 1), -1)
-            parts = []
-            for i in range(segs.shape[0]):
-                key = (ftype, segs.shape[1], i, ef_tag)
-                err = self._ef.get(key)
-                if err is None:
-                    err = self._ef[key] = np.zeros(segs.shape[1], np.float64)
-                payload, self._ef[key] = sign_ef_encode_np(segs[i], err)
-                parts.append(payload)
-            return self._send(ftype, wid, max(segments, 1), CODEC_SIGN_EF,
-                              b"".join(parts))
-        # zero-copy: hand the numpy buffer straight to sendall
-        return self._send(ftype, wid, max(segments, 1), CODEC_NONE,
-                          memoryview(arr).cast("B"))
+        SEGMENT frames with (bucket, chunk index, op), so every (peer,
+        bucket, vector segment, direction-of-flow) carries its own
+        quantization residual forward. ``raw=True`` bypasses a lossy codec
+        for this one frame — one-shot reports (the p2p final CENTER/WSTATE)
+        must arrive exact; error feedback can only amortize quantization
+        across a STREAM."""
+        header, payload = self.encode_array(ftype, arr, wid=wid,
+                                            segments=segments, ef_tag=ef_tag,
+                                            raw=raw)
+        with self._send_lock:
+            self.sock.sendall(header)
+            if len(payload):
+                self.sock.sendall(payload)
+        self._count(len(payload))
+        return len(payload)
 
     # -- recv ---------------------------------------------------------------
 
@@ -269,17 +301,7 @@ class Link:
             return np.frombuffer(buf, np.float64)
         if frame.codec == CODEC_SIGN_EF:
             buf = self.recv_payload(frame)
-            if frame.flags <= 1:
-                arr = sign_ef_decode_np(buf)
-            else:                       # per-segment scales (see send_array)
-                mv = memoryview(buf)
-                parts, off = [], 0
-                for _ in range(frame.flags):
-                    n_i = int(np.frombuffer(mv[off:off + 8], np.uint64)[0])
-                    nb = sign_ef_wire_nbytes(n_i)
-                    parts.append(sign_ef_decode_np(mv[off:off + nb]))
-                    off += nb
-                arr = np.concatenate(parts)
+            arr = decode_array_payload(frame, buf)
             if out is not None:
                 out[:] = arr
                 return out
@@ -292,6 +314,22 @@ class Link:
         except OSError:
             pass
         self.sock.close()
+
+
+def decode_array_payload(frame: Frame, buf) -> np.ndarray:
+    """Decode a fully-received sign_ef payload buffer (shared by
+    ``Link.recv_array`` and the p2p round engine, which fills its own
+    buffers on non-blocking sockets)."""
+    if frame.flags <= 1:
+        return sign_ef_decode_np(buf)
+    mv = memoryview(buf)                # per-segment scales (see send_array)
+    parts, off = [], 0
+    for _ in range(frame.flags):
+        n_i = int(np.frombuffer(mv[off:off + 8], np.uint64)[0])
+        nb = sign_ef_wire_nbytes(n_i)
+        parts.append(sign_ef_decode_np(mv[off:off + nb]))
+        off += nb
+    return np.concatenate(parts)
 
 
 # ---------------------------------------------------------------------------

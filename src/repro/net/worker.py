@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import os
 import socket
 import sys
 import threading
@@ -204,7 +205,21 @@ def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
     replica — bitwise in lockstep with every other worker and with the
     centralized planes (same ops on bitwise-equal rows, see net/peer.py).
     The master link goes quiet between READY and DONE except for worker
-    0's CENTER reports at the eval rounds shipped in WELCOME."""
+    0's CENTER reports at the eval rounds shipped in WELCOME.
+
+    With ``bucket_bounds`` in WELCOME the exchange streams the row as
+    per-layer-group buckets and PIPELINES comm with compute: the mesh's
+    ``on_bucket`` hook hands completed buckets to this thread, which
+    applies bucket b's elastic update while bucket b+1 is still on the
+    wire. Bucket updates are elementwise on disjoint slices in schedule
+    order, so the iterates stay bitwise-identical to the monolithic path
+    — overlap moves time, never math. ``overlap=False`` runs the same
+    bucketed exchange inline first (the paper's no-overlap baseline);
+    ``update_backend="pallas"`` applies each bucket through the fused
+    elastic-update kernel instead of easgd_flat (still bitwise — see
+    kernels/elastic_update.py for the ISA pin that makes it so)."""
+    import queue as _queue
+
     from repro.comm.rounds import peer_pairs, rounds_from_wire
 
     algo, n, tau = cfg["algorithm"], int(cfg["n"]), int(cfg["tau"])
@@ -212,11 +227,30 @@ def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
     n_rounds = int(cfg["n_rounds"])
     eval_rounds = set(int(k) for k in cfg["eval_rounds"])
     t_wire = float(cfg.get("t_wire_s", 0.0))
+    bounds = cfg.get("bucket_bounds") or None
+    overlap = bool(cfg.get("overlap", True))
+    backend = cfg.get("update_backend", "numpy")
+    t_bucket = [float(x) for x in (cfg.get("t_wire_bucket_s") or [])]
     rounds = rounds_from_wire(cfg["rounds"])
     directory = {int(k): v for k, v in cfg["peers"].items()}
     mesh.codec = cfg.get("codec", "none")
     mesh.connect(directory, peer_pairs(rounds))
-    mesh.set_rounds(rounds, padded)
+    mesh.set_rounds(rounds, padded, boundaries=bounds)
+
+    fused_easgd = fused_sgd = None
+    if backend == "pallas":
+        # first jax import in this (otherwise jax-free) process: pin the
+        # CPU backend to a no-FMA ISA so the fused kernel stays BITWISE
+        # equal to easgd_flat (XLA contracts a*b+c to fma otherwise);
+        # worker_env ships the same flags, setdefault keeps them
+        if "jax" not in sys.modules:
+            os.environ.setdefault("JAX_PLATFORMS", "cpu")
+            os.environ.setdefault("XLA_FLAGS", "--xla_cpu_max_isa=SSE4_2")
+        # importlib: the kernels package re-exports an `elastic_update`
+        # FUNCTION that shadows the submodule on attribute-style imports
+        _fk = importlib.import_module("repro.kernels.elastic_update")
+        fused_easgd = _fk.fused_sync_easgd_update
+        fused_sgd = _fk.fused_sync_sgd_update
     link.send_simple(wire.READY, wid=wid)        # mesh up, clock may start
 
     w = w0.copy()                  # same bits as the master's problem build
@@ -224,15 +258,73 @@ def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
     vel = np.zeros(n)              # sync_sgd's master velocity replica
     row = np.zeros(padded)         # this worker's mailbox row
     exc_box: list = []
+    done_q: _queue.SimpleQueue = _queue.SimpleQueue()
+    n_buckets = mesh.n_buckets
+    # update slices: bucket spans clamped to the real row (beyond n is pad)
+    u_spans = [(a, min(b, n)) for a, b in zip(mesh.boundaries[:-1],
+                                              mesh.boundaries[1:])]
+    pace = t_bucket if len(t_bucket) == n_buckets else None
+    comm_s = exposed_s = 0.0                     # overlap accounting
+
+    def _on_bucket(bidx, deadlines):
+        if deadlines is not None:                # serialized-wire pacing:
+            sleep_until(deadlines[bidx])         # bucket lands on schedule
+        done_q.put(bidx)
 
     def _exchange():
+        nonlocal comm_s
+        t0 = time.perf_counter()
         try:
-            deadline = time.monotonic() + t_wire
-            mesh.execute_exchange(row)
-            if t_wire:
-                sleep_until(deadline)
+            start = time.monotonic()
+            deadlines = ([start + sum(t_bucket[:i + 1])
+                          for i in range(n_buckets)] if pace else None)
+            mesh.execute_exchange(
+                row, on_bucket=lambda b: _on_bucket(b, deadlines))
+            if t_wire and deadlines is None:
+                sleep_until(start + t_wire)
         except BaseException as e:               # noqa: BLE001 — re-raised
             exc_box.append(e)
+            done_q.put(None)                     # unblock the update loop
+        finally:
+            comm_s += time.perf_counter() - t0
+
+    def _apply_easgd(bidx, grad):
+        a, b = u_spans[bidx]
+        if a >= b:
+            return
+        if fused_easgd is not None:
+            w[a:b], center[a:b] = fused_easgd(
+                w[a:b], grad[a:b], center[a:b], row[a:b], P,
+                local_cfg.eta, local_cfg.rho)
+        else:
+            easgd_flat.worker_step(algo, w[a:b], vel[a:b], grad[a:b],
+                                   center[a:b], local_cfg)
+            easgd_flat.sync_master_easgd(center[a:b], row[a:b] / P, P,
+                                         local_cfg)
+
+    def _apply_sgd(bidx):
+        a, b = u_spans[bidx]
+        if a >= b:
+            return
+        if fused_sgd is not None:
+            center[a:b], vel[a:b] = fused_sgd(
+                center[a:b], vel[a:b], row[a:b], P,
+                local_cfg.eta, local_cfg.mu)
+        else:
+            easgd_flat.sync_master_sgd(center[a:b], vel[a:b],
+                                       row[a:b] / P, local_cfg)
+
+    def _drain(apply_fn):
+        """Apply each bucket's update as it lands; time blocked on the
+        wire is the EXPOSED communication this pipeline exists to hide."""
+        nonlocal exposed_s
+        for _ in range(n_buckets):
+            t0 = time.perf_counter()
+            bidx = done_q.get()
+            exposed_s += time.perf_counter() - t0
+            if bidx is None:
+                break
+            apply_fn(bidx)
 
     step = 0
     for k in range(n_rounds):
@@ -242,23 +334,42 @@ def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
             step += 1
         if algo == "sync_easgd":
             row[:n] = w                          # start-of-exchange weights
-            comm = threading.Thread(target=_exchange)
-            comm.start()                         # allreduce overlaps this
-            grad = grad_fn(w, step, wid)         # compute (paper §6.1.3)
-            step += 1
-            comm.join()
+            if overlap:
+                comm = threading.Thread(target=_exchange)
+                comm.start()                     # buckets fly while the
+                grad = grad_fn(w, step, wid)     # gradient computes
+                step += 1                        # (paper §6.1.3)
+                _drain(lambda b: _apply_easgd(b, grad))
+                t0 = time.perf_counter()
+                comm.join()
+                exposed_s += time.perf_counter() - t0
+            else:                                # no-overlap baseline: the
+                t0 = time.perf_counter()         # whole wire is exposed
+                _exchange()
+                exposed_s += time.perf_counter() - t0
+                grad = grad_fn(w, step, wid)
+                step += 1
+                _drain(lambda b: _apply_easgd(b, grad))
             if exc_box:
                 raise exc_box[0]
-            easgd_flat.worker_step(algo, w, vel, grad, center, local_cfg)
-            easgd_flat.sync_master_easgd(center, row[:n] / P, P, local_cfg)
-        else:                                    # sync_sgd: no overlap (§5.1)
-            grad = grad_fn(w, step, wid)
-            step += 1
+        else:                                    # sync_sgd: grads first, so
+            grad = grad_fn(w, step, wid)         # only the per-bucket master
+            step += 1                            # update overlaps (§5.1)
             row[:n] = grad
-            _exchange()                          # synchronous, same pacing
+            if overlap:
+                comm = threading.Thread(target=_exchange)
+                comm.start()
+                _drain(_apply_sgd)
+                t0 = time.perf_counter()
+                comm.join()
+                exposed_s += time.perf_counter() - t0
+            else:
+                t0 = time.perf_counter()
+                _exchange()
+                exposed_s += time.perf_counter() - t0
+                _drain(_apply_sgd)
             if exc_box:
                 raise exc_box[0]
-            easgd_flat.sync_master_sgd(center, vel, row[:n] / P, local_cfg)
             w[:] = center
         if wid == 0 and k in eval_rounds:
             # control-plane reports go RAW even under wire compression:
@@ -269,11 +380,15 @@ def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
         link.send_array(wire.CENTER, center, wid=wid,   # Θ(N), not Θ(P·N)
                         raw=True)
     link.send_array(wire.WSTATE, w, wid=wid, raw=True)  # final weights
+    stats = mesh.stats()
+    stats.update({"comm_s": comm_s, "exposed_s": exposed_s,
+                  "overlapped_s": max(0.0, comm_s - exposed_s),
+                  "overlap": overlap, "update_backend": backend})
     while True:                                  # control plane: DONE → BYE
         frame = link.recv_header()
         if frame.ftype == wire.DONE:
             link.recv_discard(frame)
-            link.send_json(wire.BYE, mesh.stats(), wid=wid)
+            link.send_json(wire.BYE, stats, wid=wid)
             return
         if frame.ftype == wire.ERROR:
             raise RuntimeError(f"master error: {link.recv_json(frame)}")

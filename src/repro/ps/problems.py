@@ -111,6 +111,9 @@ def make_numpy_mlp(seed: int = 0, n_train: int = 2048, n_test: int = 512,
         _, logits = forward(w, xte)
         return float(np.mean(logits.argmax(axis=1) != yte))
 
+    # layer structure for the bucketed exchange (bucket cuts land on layer
+    # edges — comm.rounds.default_bucket_boundaries)
+    grad_fn.layer_sizes = [int(np.prod(s)) for s in shapes]
     return w0, grad_fn, eval_fn
 
 
@@ -190,6 +193,9 @@ def make_jax_mlp(seed: int = 0, n_train: int = 2048, n_test: int = 512,
     def eval_fn(w):
         return float(err_flat(jnp.asarray(w, jnp.float32)))
 
+    grad_fn.layer_sizes = [
+        int(np.prod(leaf.shape)) if leaf.shape else 1
+        for leaf in jax.tree_util.tree_leaves(params)]
     return np.asarray(flat, np.float64), grad_fn, eval_fn
 
 

@@ -43,6 +43,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.comm import rounds as comm_rounds
 from repro.comm import schedules as comm_schedules
 from repro.core import costmodel, easgd_flat
 from repro.core.async_engine import ALGORITHMS, PSEngine, SimConfig
@@ -93,9 +94,35 @@ class PSConfig:
     spawn_workers: bool = True       # False: external workers join (--hosts)
     hb_interval_s: float = 2.0       # worker heartbeat period
     hb_timeout_s: float = 60.0       # master declares a silent link dead
+    # -- bucketed overlap (sync family) -------------------------------------
+    bucket_bytes: int = 0            # >0: partition the exchange row into
+    #                                  per-layer-group buckets of ~this many
+    #                                  payload bytes (comm.rounds.
+    #                                  bucket_boundaries over the problem's
+    #                                  layer_sizes) — a bitwise-identical
+    #                                  VIEW of the same rounds. 0: monolithic
+    overlap: bool = True             # p2p only: stream buckets while the
+    #                                  gradient / per-bucket update computes
+    #                                  (§6.1.3). False = the paper's
+    #                                  no-overlap baseline — same math, the
+    #                                  worker just waits out the wire
+    update_backend: str = "numpy"    # p2p worker update: "numpy"
+    #                                  (easgd_flat) or "pallas" (the fused
+    #                                  elastic-update kernel on the real
+    #                                  per-bucket path; workers are spawned
+    #                                  with XLA flags that keep it bitwise)
 
     def __post_init__(self):
         assert self.algorithm in ALGORITHMS, self.algorithm
+        assert self.bucket_bytes >= 0, self.bucket_bytes
+        assert self.update_backend in ("numpy", "pallas"), \
+            self.update_backend
+        # the fused-kernel update path lives in the p2p worker loop — the
+        # shared-memory planes update through easgd_flat directly
+        assert self.update_backend == "numpy" or (
+            self.transport == "tcp" and self.sync_plane == "p2p"), (
+            f"update_backend='pallas' runs in the p2p worker loop "
+            f"(transport='{self.transport}', sync_plane='{self.sync_plane}')")
         assert self.wire_compression in ("none", "sign_ef"), \
             self.wire_compression
         # the shared-memory transports have no wire to compress — a config
@@ -176,13 +203,49 @@ def _apply_round(mailbox, n: int, rnd, counters=None) -> None:
             sum(m.frac for m in rnd) * n * 8)
 
 
-def execute_rounds(mailbox, n: int, rounds, counters=None) -> None:
+def _apply_clipped_round(mailbox, rnd_clipped) -> None:
+    """``_apply_round`` over pre-clipped ``(message, (a, b))`` pairs — the
+    bucketed view's unit of work. Same snapshot-then-apply discipline."""
+    payloads = []
+    for m, (a, b) in rnd_clipped:
+        payloads.append((m, a, b, mailbox[m.src, a:b].copy()))
+    for m, a, b, pay in payloads:
+        tgt = mailbox[m.dst, a:b]
+        if m.op == "add":
+            tgt += pay
+        else:
+            tgt[:] = pay
+
+
+def execute_rounds(mailbox, n: int, rounds, counters=None,
+                   boundaries=None) -> None:
     """Apply one allreduce = the schedule's message rounds over the mailbox
     (rows 0..P-1 = workers, row P = the master endpoint used by
     round_robin). Rounds are serialized — the execution IS the α–β model's
     structure.
+
+    ``boundaries`` (bucket cuts over the row) switches to the bucketed
+    VIEW: the same rounds execute bucket-major with every message span
+    clipped per bucket (``comm.rounds.bucket_rounds``). Buckets partition
+    the row into disjoint element ranges, so each element sees the same
+    ops from the same sources in the same order — bitwise-identical to the
+    monolithic path (pinned by tests). Counters stay schedule-level: one
+    exchange contributes the SAME sync_rounds/messages/wire_bytes either
+    way (bucketing repartitions frames, not the schedule's cost).
     """
     mailbox[-1].fill(0.0)            # master endpoint accumulates from zero
+    if boundaries is not None and len(boundaries) > 2:
+        row_len = mailbox.shape[-1]
+        for plan in comm_rounds.bucket_rounds(rounds, row_len, boundaries):
+            for rnd_clipped in plan:
+                _apply_clipped_round(mailbox, rnd_clipped)
+        if counters is not None:
+            for rnd in rounds:
+                counters["sync_rounds"].value += 1
+                counters["messages"].value += len(rnd)
+                counters["wire_bytes"].value += int(
+                    sum(m.frac for m in rnd) * n * 8)
+        return
     for rnd in rounds:
         _apply_round(mailbox, n, rnd, counters)
 
@@ -209,7 +272,8 @@ def _comm_executor(ctx: PSContext) -> None:
         for _ in range(n_rounds):
             ctx.barrier.wait()       # A: mailboxes posted
             deadline = time.monotonic() + t_wire
-            execute_rounds(v.mailbox, ctx.n, ctx.rounds, counters)
+            execute_rounds(v.mailbox, ctx.n, ctx.rounds, counters,
+                           boundaries=getattr(ctx, "boundaries", None))
             if t_wire:
                 _sleep_until(deadline)
             ctx.barrier.wait()       # B: exchange complete
@@ -470,8 +534,15 @@ def run_ps(problem, easgd: EASGDConfig, cfg: PSConfig,
         "wire_bytes": tr.int_slot(), "err": tr.int_slot(),
     }
     worker_problem = built if tr.name == "thread" else problem
+    bounds = None
+    if cfg.bucket_bytes > 0 and cfg.algorithm in SYNC:
+        # layer edges come from the problem when it declares them (zoo
+        # problems attach ``layer_sizes`` to their grad_fn); uniform slabs
+        # otherwise — either way the exchange math is bitwise unchanged
+        bounds = comm_rounds.default_bucket_boundaries(
+            getattr(built[1], "layer_sizes", None), padded, cfg.bucket_bytes)
     ctx = PSContext(cfg, easgd, n, padded, buffers, shapes, worker_problem,
-                    rounds, prims)
+                    rounds, prims, boundaries=bounds)
     v = ctx.views()
     v.center[:] = w0
     v.center_alt[:] = w0

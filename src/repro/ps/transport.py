@@ -54,7 +54,7 @@ class PSContext:
     """
 
     def __init__(self, cfg, easgd, n, padded, buffers, shapes, problem,
-                 rounds, prims):
+                 rounds, prims, boundaries=None):
         self.cfg = cfg
         self.easgd = easgd
         self.n = n
@@ -63,6 +63,8 @@ class PSContext:
         self.shapes = shapes
         self.problem = problem          # ProblemSpec, or (w0, grad, eval)
         self.rounds = rounds            # sync-family message rounds
+        self.boundaries = boundaries    # bucket cuts over the padded row,
+        #                                 or None for a monolithic exchange
         for k, v in prims.items():
             setattr(self, k, v)
         self._prim_names = tuple(prims)

@@ -417,15 +417,20 @@ def test_p2p_sign_ef_per_peer_link_matched_loss():
         {k: r.final_metric for k, r in runs.items()}
 
 
-def test_p2p_large_segments_use_threaded_sender_no_deadlock():
-    """Segments past the kernel's socket buffering would deadlock the
-    everyone-sends-first round cycle; PeerMesh must detect them and move
-    sends to a helper thread. Two real meshes exchange a 2 MB butterfly
-    buffer over loopback — inline sendall would block both sides forever."""
+def test_p2p_huge_rows_stream_without_helper_threads_or_deadlock():
+    """Regression for the retired PR-4 escape hatch: rows far past the
+    kernel's socket buffering used to need a helper-thread sender to
+    survive the everyone-sends-first cycle. The select-driven round engine
+    must complete a row 4x larger than SO_SNDBUF with both sides sending
+    full-row segments to each other — and must do it on the caller's
+    thread alone (no helper threads; thread count is pinned)."""
     from repro.comm.rounds import butterfly_rounds, peer_pairs
-    from repro.net.peer import INLINE_SEND_MAX, PeerMesh
+    from repro.net.peer import PeerMesh
 
-    n = 256 * 1024                          # 2 MB rows, one full-row message
+    probe = socket.socket()
+    sndbuf = probe.getsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF)
+    probe.close()
+    n = (4 * sndbuf) // 8 + 1               # row bytes > 4 * SO_SNDBUF
     rounds = butterfly_rounds(2)
     meshes = [PeerMesh(w, "t", bind_host="127.0.0.1", timeout_s=30)
               for w in (0, 1)]
@@ -433,14 +438,16 @@ def test_p2p_large_segments_use_threaded_sender_no_deadlock():
     rows = [np.arange(n) * 1.0, np.arange(n) * 2.0]
     want = rows[0] + rows[1]
     errs, threads = [], []
+    thread_counts = {}
 
     def _run(wid):
         try:
             meshes[wid].connect(directory, peer_pairs(rounds))
             meshes[wid].set_rounds(rounds, n)
-            assert meshes[wid]._threaded, \
-                (n * 8, "should exceed", INLINE_SEND_MAX)
+            before = {t.ident for t in threading.enumerate()}
             meshes[wid].execute_exchange(rows[wid])
+            after = {t.ident for t in threading.enumerate()}
+            thread_counts[wid] = len(after - before)
         except BaseException as e:          # noqa: BLE001
             errs.append(e)
 
@@ -452,8 +459,9 @@ def test_p2p_large_segments_use_threaded_sender_no_deadlock():
     alive = [th for th in threads if th.is_alive()]
     for m in meshes:
         m.close()
-    assert not alive, "p2p exchange deadlocked on large segments"
+    assert not alive, "p2p exchange deadlocked on huge rows"
     assert not errs, errs
+    assert thread_counts == {0: 0, 1: 0}, thread_counts
     np.testing.assert_array_equal(rows[0], want)
     np.testing.assert_array_equal(rows[1], want)
 
