@@ -119,6 +119,16 @@ def main(argv=None):
                     choices=["numpy", "pallas"],
                     help="p2p per-bucket update: easgd_flat numpy or the "
                          "fused Pallas elastic-update kernel")
+    ap.add_argument("--trace", action="store_true",
+                    help="record per-thread spans on every worker and the "
+                         "master, merge onto the master clock (obs.clock "
+                         "offsets), write trace-<algo>-tcp.json (Perfetto) "
+                         "and print the measured time breakdown")
+    ap.add_argument("--trace-dir", default=None,
+                    help="directory for worker trace spills + the merged "
+                         "trace (implies --trace). Multi-host note: spills "
+                         "are written on the WORKER's filesystem — leave "
+                         "unset to carry trace buffers in-band via BYE")
     ap.add_argument("--timeout", type=float, default=600.0)
     args = ap.parse_args(argv)
 
@@ -155,7 +165,9 @@ def main(argv=None):
         spawn_workers=not multi_host,
         sync_plane=args.sync_plane,
         bucket_bytes=args.bucket_bytes, overlap=not args.no_overlap,
-        update_backend=args.update_backend)
+        update_backend=args.update_backend,
+        trace=args.trace or bool(args.trace_dir),
+        trace_dir=args.trace_dir)
 
     results = []
     for algo in algos:
@@ -193,6 +205,9 @@ def main(argv=None):
               f"iters={res.total_iters} err={res.final_metric:.3f} "
               f"time={res.total_time_s:.2f}s counters={res.counters}",
               flush=True)
+        if res.trace is not None:
+            from repro.launch.train import _report_trace
+            _report_trace(res, algo, args.trace_dir)
         results.append(res)
     return results
 

@@ -61,7 +61,9 @@ def run_ps_mode(args) -> list:
         transport=args.transport, schedule=args.schedule or "ring",
         total_iters=args.ps_iters, eval_every_iters=args.ps_eval_every,
         emulate_net=net, wire_compression=wire_codec,
-        bucket_bytes=args.bucket_bytes, overlap=not args.no_overlap)
+        bucket_bytes=args.bucket_bytes, overlap=not args.no_overlap,
+        trace=args.trace or bool(args.trace_dir),
+        trace_dir=args.trace_dir)
     cal = ps.calibrate(problem, base)
     out = []
     from repro.core.easgd_flat import SYNC_FAMILY as _SYNC
@@ -80,8 +82,27 @@ def run_ps_mode(args) -> list:
               f"des={rec['des_us_per_iter']:.1f}us/iter "
               f"ratio={rec['measured_over_des']:.2f} "
               f"counters={res.counters}", flush=True)
+        if res.trace is not None:
+            _report_trace(res, algo, args.trace_dir)
         out.append(res)
     return out
+
+
+def _report_trace(res, algo: str, trace_dir) -> None:
+    """Write the merged Chrome trace next to the run and print the measured
+    time breakdown (open the .json at https://ui.perfetto.dev)."""
+    import os as _os
+
+    from repro.obs import report as obs_report
+
+    rep = res.trace.get("report", {})
+    out_dir = trace_dir or "."
+    path = _os.path.join(out_dir, f"trace-{algo}-{res.transport}.json")
+    obs_report.write_chrome_trace(path, res.trace)
+    print(f"{algo:16s} trace: comm={rep.get('mean_comm_share', 0):.1%} "
+          f"compute={rep.get('mean_compute_share', 0):.1%} "
+          f"update={rep.get('mean_update_share', 0):.1%} -> {path}",
+          flush=True)
 
 
 def main(argv=None):
@@ -147,6 +168,15 @@ def main(argv=None):
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable compute/comm overlap (Sync EASGD1/2 "
                          "baseline, paper §6.1.3)")
+    ap.add_argument("--trace", action="store_true",
+                    help="record per-thread spans in every worker "
+                         "(repro.obs), merge them onto the master clock, "
+                         "and write a Perfetto-loadable trace-<algo>.json "
+                         "plus a measured comm/compute/update breakdown")
+    ap.add_argument("--trace-dir", default=None,
+                    help="directory for trace spill files and the merged "
+                         "trace JSON (implies --trace; default: BYE frames "
+                         "carry buffers in-band, trace written to cwd)")
     ap.add_argument("--compression", default="none")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)

@@ -53,12 +53,14 @@ from __future__ import annotations
 import select
 import socket
 from time import monotonic as _monotonic
+from time import perf_counter as _perf_counter
 
 import numpy as np
 
 from repro.comm.rounds import MASTER, bucket_rounds, clip_span
 from repro.net import wire
 from repro.net.wire import Link
+from repro.obs import trace as _trace
 
 # socket-op granularity of the round engine: one non-blocking send() call
 # hands the kernel at most this many bytes, so a single link can never
@@ -149,6 +151,8 @@ class PeerMesh:
         self._scratch: dict = {}         # (src, a, b) -> recv buffer
         self._rounds_len = 0
         self._nonblocking = False
+        self.tracer = None               # obs.trace.Tracer from the worker's
+        #                                  comm thread (None = tracing off)
 
     # -- mesh setup ----------------------------------------------------------
 
@@ -426,10 +430,14 @@ class PeerMesh:
         monolithic exchange. ``on_bucket(bidx)`` fires as each bucket's
         rounds complete, which is the overlap hook: the caller can start
         bucket ``bidx``'s update while bucket ``bidx+1`` is on the wire."""
+        tr = self.tracer
         for bidx in range(len(self._plans)):
+            t0 = _perf_counter() if tr is not None else 0.0
             self.execute_bucket(row, bidx)
             if on_bucket is not None:
-                on_bucket(bidx)
+                on_bucket(bidx)              # pacing sleep included: the
+            if tr is not None:               # span is the bucket's WIRE time
+                tr.record(_trace.BUCKET, t0, _perf_counter(), bidx)
         self.rounds_executed += self._rounds_len
 
     # -- accounting / teardown ----------------------------------------------
@@ -442,7 +450,9 @@ class PeerMesh:
             "bucket_send_bytes": list(self.bucket_send_bytes),
             "peer_links": {
                 str(peer): {"messages": c["messages"].value,
-                            "wire_bytes": c["wire_bytes"].value}
+                            "wire_bytes": c["wire_bytes"].value,
+                            **({"ef_ratio": r} if (r := self.links[peer]
+                               .ef_ratio()) else {})}
                 for peer, c in sorted(self.counters.items())},
         }
 

@@ -60,6 +60,9 @@ from repro.core import easgd_flat
 from repro.core.compression import sign_ef_wire_nbytes
 from repro.net import wire
 from repro.net.wire import Link, sleep_until
+from repro.obs import metrics as obs_metrics
+from repro.obs import report as obs_report
+from repro.obs import trace as obs_trace
 from repro.ps.runtime import PSResult, execute_rounds
 
 SYNC = easgd_flat.SYNC_FAMILY
@@ -123,9 +126,6 @@ def worker_command(addr: str, wid: int, token: str = DEFAULT_TOKEN,
     return cmd
 
 
-_Slot = wire.Slot          # the Link counter cell (one definition, wire.py)
-
-
 class MasterServer:
     """One training run: rendezvous P links, run the discipline, shut down."""
 
@@ -181,13 +181,18 @@ class MasterServer:
         # master_link_bytes counts ONLY frames on the master's own links
         # (wire_bytes additionally absorbs the local-mailbox round bytes of
         # the centralized sync plane) — the p2p-vs-master incast comparison
-        # reads this slot on both planes
-        self.counters = {"sync_rounds": _Slot(), "messages": _Slot(),
-                         "wire_bytes": _Slot(),
-                         "master_link_bytes": _Slot()}
+        # reads this slot on both planes. The registry replaces the old
+        # parallel counter dicts: one namespace, same ``.value`` cells.
+        self.counters = obs_metrics.Registry()
+        for name in ("sync_rounds", "messages", "wire_bytes",
+                     "master_link_bytes"):
+            self.counters.counter(name)
         self.link_counters = {"messages": self.counters["messages"],
                               "wire_bytes": self.counters["wire_bytes"],
                               "link_bytes": self.counters["master_link_bytes"]}
+        if cfg.trace:
+            obs_trace.drain()                # clean registry for THIS run
+        self.tracer = (obs_trace.tracer("serve") if cfg.trace else None)
         self.links: dict[int, Link] = {}
         self.peer_addrs: dict[int, list] = {}
         self.bye_stats: dict[int, dict] = {}
@@ -365,6 +370,8 @@ class MasterServer:
                 "codec": cfg.wire_compression,
                 "warmup": 2,
                 "hb_interval_s": cfg.hb_interval_s,
+                "trace": bool(cfg.trace),
+                "trace_dir": cfg.trace_dir,
             }
             if self.sync_p2p:
                 welcome.update({
@@ -417,6 +424,13 @@ class MasterServer:
                 elif frame.ftype == wire.READY:
                     link.recv_discard(frame)
                     self.events.put((wid, "ready", None))
+                elif frame.ftype == wire.CLOCK:
+                    # NTP-style probe: echo this side's clock immediately —
+                    # answered on the reader thread so serve() never blocks
+                    # a probe behind an exchange (that would inflate rtt)
+                    link.recv_discard(frame)
+                    link.send_json(wire.CLOCK,
+                                   {"t": time.perf_counter()}, wid=wid)
                 elif frame.ftype == wire.BYE:
                     if frame.size:      # p2p workers attach per-link stats
                         self.bye_stats[wid] = link.recv_json(frame)
@@ -448,6 +462,11 @@ class MasterServer:
         deadline = time.monotonic() + max(timeout, 0.0)
         while True:
             self._check_procs()
+            if self.links:
+                worst = max(time.monotonic() - l.last_seen
+                            for l in self.links.values())
+                cell = self.counters.gauge("hb_staleness_max_s")
+                cell.value = max(cell.value, round(worst, 3))
             stale = [w for w, l in self.links.items()
                      if time.monotonic() - l.last_seen
                      > self.cfg.hb_timeout_s]
@@ -488,9 +507,12 @@ class MasterServer:
 
     def _maybe_eval(self, force: bool = False) -> None:
         if force or self.iters - self._last_eval >= self.cfg.eval_every_iters:
-            self.history.append((time.perf_counter() - self._t0, self.iters,
+            t0 = time.perf_counter()
+            self.history.append((t0 - self._t0, self.iters,
                                  float(self.eval_fn(self.center.copy()))))
             self._last_eval = self.iters
+            if self.tracer is not None:
+                self.tracer.record(obs_trace.EVAL, t0, time.perf_counter())
 
     # -- disciplines ---------------------------------------------------------
 
@@ -663,6 +685,8 @@ class MasterServer:
         all_wids = set(self.links)
         n_rounds = self._n_sync_rounds()
         t_wire = self._t_sync_wire()
+        tr = self.tracer
+        _pc = time.perf_counter
         for _ in range(n_rounds):
             for wid in self.links:
                 self._send_weights(wid)
@@ -686,28 +710,44 @@ class MasterServer:
                         self.workers_w[i] = self.wstate_bufs[i]
                 self.mailbox[:P, :n] = self.workers_w
                 deadline = time.monotonic() + t_wire
+                if tr is not None:
+                    t0 = _pc()
                 execute_rounds(self.mailbox, n, self.rounds, self.counters,
-                               boundaries=self.boundaries)
+                               boundaries=self.boundaries, tracer=tr)
                 if t_wire:
                     sleep_until(deadline)
+                if tr is not None:
+                    tr.record(obs_trace.EXCHANGE, t0, (t0 := _pc()))
                 self._await("grad", all_wids - got_grad)
+                if tr is not None:
+                    tr.record(obs_trace.RECV_WAIT, t0, (t0 := _pc()))
                 for i in range(P):
                     easgd_flat.worker_step(
                         algo, self.workers_w[i], self.workers_v[i],
                         self.grad_bufs[i], self.center, e)
                 easgd_flat.sync_master_easgd(
                     self.center, self.mailbox[0, :n] / P, P, e)
+                if tr is not None:
+                    tr.record(obs_trace.UPDATE, t0, _pc())
             else:                                     # sync_sgd
+                if tr is not None:
+                    t0 = _pc()
                 self._await("grad", all_wids)
+                if tr is not None:
+                    tr.record(obs_trace.RECV_WAIT, t0, (t0 := _pc()))
                 self.mailbox[:P, :n] = self.grad_bufs
                 deadline = time.monotonic() + t_wire
                 execute_rounds(self.mailbox, n, self.rounds, self.counters,
-                               boundaries=self.boundaries)
+                               boundaries=self.boundaries, tracer=tr)
                 if t_wire:
                     sleep_until(deadline)
+                if tr is not None:
+                    tr.record(obs_trace.EXCHANGE, t0, (t0 := _pc()))
                 easgd_flat.sync_master_sgd(
                     self.center, self.master_vel, self.mailbox[0, :n] / P, e)
                 self.workers_w[:] = self.center
+                if tr is not None:
+                    tr.record(obs_trace.UPDATE, t0, _pc())
             self.iters += P * self.tau
             self._maybe_eval()
 
@@ -769,7 +809,30 @@ class MasterServer:
                     proc.wait(timeout=10)
                 except subprocess.TimeoutExpired:
                     proc.kill()
-        counters = {k: v.value for k, v in self.counters.items()}
+        counters = self.counters.snapshot()
+        # heartbeat-piggybacked worker telemetry (iteration rate, exposed
+        # comm so far) — last value seen per worker; absent for workers
+        # whose client predates the telemetry heartbeats (empty frames)
+        telemetry = {w: link.hb_telemetry
+                     for w, link in self.links.items() if link.hb_telemetry}
+        if telemetry:
+            counters["worker_telemetry"] = telemetry
+        if self.cfg.wire_compression == "sign_ef":
+            raw = sum(link.raw_bytes_out for link in self.links.values())
+            comp = sum(link.wire_bytes_out for link in self.links.values())
+            if comp:
+                counters["ef_raw_bytes_out"] = raw
+                counters["ef_wire_bytes_out"] = comp
+                counters["ef_ratio"] = round(raw / comp, 2)
+        # per-link α observations: each worker's measured master-link RTT
+        # (the clock-sync probes double as the α measurement — rtt/2 is
+        # this link's one-way latency floor)
+        link_alpha = {w: round(st["clock"]["rtt_s"] / 2, 6)
+                      for w, st in self.bye_stats.items()
+                      if isinstance(st.get("clock"), dict)
+                      and "rtt_s" in st["clock"]}
+        if link_alpha:
+            counters["link_alpha_s"] = link_alpha
         if self.sync_p2p:
             # fold the workers' per-link data-plane counters in: each
             # unordered link (i, j) once, from the LOWER endpoint's report
@@ -800,6 +863,7 @@ class MasterServer:
                 for i, v in enumerate(st.get("bucket_send_bytes", [])):
                     bucket_bytes[i] += int(v)
             counters["bucket_send_bytes"] = bucket_bytes
+        trace = self._collect_trace() if self.cfg.trace else None
         return PSResult(
             algorithm=self.cfg.algorithm, transport="tcp",
             schedule=((self.sched_name + "+p2p") if self.sync_p2p
@@ -809,7 +873,30 @@ class MasterServer:
             total_iters=self.iters,
             counters=counters,
             final_metric=self.history[-1][2],
-            center=self.center.copy(), workers=self.workers_w.copy())
+            center=self.center.copy(), workers=self.workers_w.copy(),
+            trace=trace)
+
+    def _collect_trace(self):
+        """Merge the workers' BYE-delivered (or spilled) trace buffers with
+        this master's own tracers onto the master clock — each worker span
+        is shifted by its ``obs.clock`` offset estimate."""
+        workers: dict = {}
+        for wid, st in self.bye_stats.items():
+            payload = st.get("trace")
+            if payload is None and st.get("trace_file"):
+                try:
+                    payload = obs_trace.load_spill(st["trace_file"])
+                except OSError:
+                    payload = None
+            if payload:
+                workers[wid] = payload
+        master_threads = {t.name: t.spans() for t in obs_trace.drain()
+                          if t.n}
+        merged = obs_report.merge_traces(
+            workers,
+            {"threads": master_threads} if master_threads else None)
+        merged["report"] = obs_report.breakdown(merged)
+        return merged
 
 
 def run_ps_tcp(problem, easgd, cfg, eval_fn_override=None,

@@ -40,6 +40,10 @@ from repro.core.compression import (
     sign_ef_encode_np,
     sign_ef_wire_nbytes,
 )
+from repro.obs.metrics import Slot  # noqa: F401 — the counter cell lives in
+#                                     repro.obs now; re-exported here because
+#                                     the Link counter protocol is defined in
+#                                     terms of it (and tests/peers import it)
 
 MAGIC = b"RN"
 VERSION = 1
@@ -67,12 +71,15 @@ PEERS = 12          # p2p handshake on a worker↔worker link: JSON
 CENTER = 13         # p2p control plane: worker 0 → master, the center
 #                     replica at an eval round (finality is by count — the
 #                     master knows the eval schedule it shipped in WELCOME)
+CLOCK = 14          # clock-sync probe (obs.clock): empty worker→master ping,
+#                     master echoes {"t": perf_counter()} — offset = t −
+#                     (t0+t1)/2 at min rtt aligns trace timelines
 
 FRAME_NAMES = {HELLO: "HELLO", WELCOME: "WELCOME", READY: "READY",
                WEIGHTS: "WEIGHTS", GRAD: "GRAD", WSTATE: "WSTATE",
                HEARTBEAT: "HEARTBEAT", DONE: "DONE", BYE: "BYE",
                ERROR: "ERROR", SEGMENT: "SEGMENT", PEERS: "PEERS",
-               CENTER: "CENTER"}
+               CENTER: "CENTER", CLOCK: "CLOCK"}
 
 CODEC_NONE = 0
 CODEC_SIGN_EF = 1
@@ -84,17 +91,6 @@ _COUNT_LOCK = threading.Lock()    # guards every counters-dict update (the
 
 class WireError(ConnectionError):
     """Framing violation or peer gone."""
-
-
-class Slot:
-    """A mutable counter cell (mirrors mp.RawValue's ``.value``) — the unit
-    of the Link counter protocol, shared by the master server's aggregate
-    counters and the peer mesh's per-link counters."""
-
-    __slots__ = ("value",)
-
-    def __init__(self, value=0):
-        self.value = value
 
 
 class Frame:
@@ -156,6 +152,11 @@ class Link:
         self.codec = CODECS[codec]
         self.counters = counters            # dict of slots with .value, or None
         self.last_seen = time.monotonic()
+        self.hb_telemetry: dict = {}        # last HEARTBEAT payload (worker
+        #                                     iteration-rate / exposed-comm
+        #                                     gauges — see net/worker.py)
+        self.raw_bytes_out = 0              # pre-codec payload bytes encoded
+        self.wire_bytes_out = 0             # post-codec payload bytes encoded
         self._send_lock = threading.Lock()
         self._hdr_buf = bytearray(HEADER_SIZE)
         self._ef = {}                       # payload size -> EF state (send)
@@ -223,7 +224,19 @@ class Link:
             codec = CODEC_NONE
         header = _HEADER.pack(MAGIC, VERSION, ftype, wid, max(segments, 1),
                               codec, len(payload))
+        # compression-ratio accounting (obs.metrics): raw vs on-the-wire
+        # payload bytes, per link. Encode sites are single-threaded per
+        # link (plan order / the send path), so plain adds are exact.
+        self.raw_bytes_out += arr.nbytes
+        self.wire_bytes_out += len(payload)
         return header, payload
+
+    def ef_ratio(self):
+        """Measured compression ratio raw/wire of everything this link
+        encoded (≈ 64 for pure sign_ef streams; None before any send)."""
+        if not self.wire_bytes_out:
+            return None
+        return self.raw_bytes_out / self.wire_bytes_out
 
     def send_array(self, ftype: int, arr: np.ndarray, wid: int = 0,
                    segments: int = 1, ef_tag=0, raw: bool = False) -> int:
@@ -266,7 +279,15 @@ class Link:
             self.last_seen = time.monotonic()
             frame = Frame(ftype, wid, flags, codec, size)
             if skip_heartbeat and ftype == HEARTBEAT:
-                self.recv_discard(frame)
+                if frame.size:
+                    # telemetry-bearing heartbeat (worker iteration rate /
+                    # exposed-comm gauges): latch the payload instead of
+                    # discarding — the master reads link.hb_telemetry
+                    try:
+                        self.hb_telemetry = json.loads(
+                            bytes(self.recv_payload(frame)).decode())
+                    except ValueError:
+                        pass
                 continue
             return frame
 

@@ -50,6 +50,8 @@ from repro.core import easgd_flat
 from repro.net import wire
 from repro.net.peer import PeerMesh
 from repro.net.wire import Link, sleep_until
+from repro.obs import clock as obs_clock
+from repro.obs import trace as obs_trace
 
 SYNC = easgd_flat.SYNC_FAMILY
 
@@ -110,15 +112,53 @@ def worker_loop(host: str, port: int, wid: int,
         mesh.close()                             # advertised, never needed
         mesh = None
 
+    # tracing rides in WELCOME; the clock handshake runs NOW, while the
+    # link is otherwise quiet (CLOCK replies are the only inbound frames
+    # between WELCOME and the first WEIGHTS), so rtt is measured clean
+    tracing = bool(cfg.get("trace"))
+    trace_dir = cfg.get("trace_dir") or None
+    tr = obs_trace.tracer("main", wid=wid) if tracing else None
+    clk = obs_clock.sync_over_link(link, wid=wid) if tracing else None
+    telem = {"iters": 0, "rate_ips": 0.0, "exposed_s": 0.0}
+    t_start = time.perf_counter()
+
     stop_hb = threading.Event()
 
     def _heartbeat():
         interval = float(cfg.get("hb_interval_s", 2.0))
         while not stop_hb.wait(interval):
             try:
-                link.send_simple(wire.HEARTBEAT, wid=wid)
+                # liveness + telemetry in one frame: current iteration
+                # count, smoothed rate, and exposed comm so far — the
+                # master keeps the last sample per worker
+                el = max(time.perf_counter() - t_start, 1e-9)
+                link.send_json(wire.HEARTBEAT, {
+                    "iters": telem["iters"],
+                    "rate_ips": round(telem["iters"] / el, 2),
+                    "exposed_s": round(telem["exposed_s"], 4),
+                }, wid=wid)
             except OSError:
                 return
+
+    def _trace_payload():
+        threads = {"main": tr.spans()}
+        for t in obs_trace.drain():
+            if t is not tr and t.wid == wid:
+                threads[t.name] = t.spans()
+        return {"clock": clk.to_wire(), "threads": threads,
+                "dropped": tr.dropped}
+
+    def _bye_stats(stats: dict) -> dict:
+        if not tracing:
+            return stats
+        payload = _trace_payload()
+        if trace_dir:
+            stats["trace_file"] = obs_trace.dump_spill(
+                trace_dir, wid, payload)
+        else:
+            stats["trace"] = payload
+        stats["clock"] = clk.to_wire()
+        return stats
 
     # heartbeat from BEFORE the problem build: a slow build (jax import +
     # jit in a fresh interpreter) must read as alive, not silent
@@ -134,7 +174,8 @@ def worker_loop(host: str, port: int, wid: int,
     try:
         if p2p:
             _p2p_sync_loop(link, mesh, cfg, grad_fn,
-                           np.asarray(w0, np.float64), wid, local_cfg)
+                           np.asarray(w0, np.float64), wid, local_cfg,
+                           tr=tr, telem=telem, bye_wrap=_bye_stats)
             return
     except BaseException as exc:                 # noqa: BLE001 — tell master
         try:
@@ -151,18 +192,30 @@ def worker_loop(host: str, port: int, wid: int,
     link.send_simple(wire.READY, wid=wid)
 
     step = 0
+    _pc = time.perf_counter
     try:
         while True:
+            if tr is not None:
+                t0 = _pc()
             frame = link.recv_header()
             if frame.ftype == wire.DONE:
                 link.recv_discard(frame)
-                link.send_simple(wire.BYE, wid=wid)
+                if tracing:
+                    link.send_json(wire.BYE, _bye_stats({}), wid=wid)
+                else:
+                    link.send_simple(wire.BYE, wid=wid)
                 return
             if frame.ftype == wire.ERROR:
                 raise RuntimeError(
                     f"master error: {link.recv_json(frame)}")
             assert frame.ftype == wire.WEIGHTS, frame
             link.recv_array(frame, down)
+            if tr is not None:
+                # blocked on the master's WEIGHTS: exposed communication
+                t1 = _pc()
+                tr.record(obs_trace.RECV_WAIT, t0, t1)
+                telem["exposed_s"] += t1 - t0
+                t0 = t1
             if down is not w:
                 w[:] = down[:n]
                 v[:] = down[n:]
@@ -171,12 +224,17 @@ def worker_loop(host: str, port: int, wid: int,
                 easgd_flat.local_step(algo, w, v if velocity else w,
                                       grad, local_cfg)
                 step += 1
+            if tr is not None and tau > 1:
+                tr.record(obs_trace.LOCAL_STEP, t0, (t0 := _pc()), tau - 1)
             if algo == "sync_easgd" and tau > 1:
                 # post evolved weights FIRST: the master's allreduce
                 # overlaps the gradient we are about to compute
                 link.send_array(wire.WSTATE, w, wid=wid)
             grad = grad_fn(w, step, wid)
             step += 1
+            if tr is not None:
+                tr.record(obs_trace.COMPUTE, t0, _pc())
+            telem["iters"] = step
             if tau > 1 and algo not in SYNC:
                 # stacked upload: one frame, but each segment keeps its own
                 # sign-EF scale/state (grad and weight magnitudes must not
@@ -199,7 +257,8 @@ def worker_loop(host: str, port: int, wid: int,
 
 
 def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
-                   w0: np.ndarray, wid: int, local_cfg) -> None:
+                   w0: np.ndarray, wid: int, local_cfg,
+                   tr=None, telem=None, bye_wrap=None) -> None:
     """The p2p sync family: this worker executes its share of the
     registry's rounds over the peer mesh and advances its OWN center
     replica — bitwise in lockstep with every other worker and with the
@@ -265,6 +324,9 @@ def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
                                               mesh.boundaries[1:])]
     pace = t_bucket if len(t_bucket) == n_buckets else None
     comm_s = exposed_s = 0.0                     # overlap accounting
+    _pc = time.perf_counter
+    tr_comm = obs_trace.tracer("comm", wid=wid) if tr is not None else None
+    mesh.tracer = tr_comm                        # per-bucket wire spans
 
     def _on_bucket(bidx, deadlines):
         if deadlines is not None:                # serialized-wire pacing:
@@ -273,7 +335,7 @@ def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
 
     def _exchange():
         nonlocal comm_s
-        t0 = time.perf_counter()
+        t0 = _pc()
         try:
             start = time.monotonic()
             deadlines = ([start + sum(t_bucket[:i + 1])
@@ -286,7 +348,10 @@ def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
             exc_box.append(e)
             done_q.put(None)                     # unblock the update loop
         finally:
-            comm_s += time.perf_counter() - t0
+            t1 = _pc()
+            comm_s += t1 - t0
+            if tr_comm is not None:
+                tr_comm.record(obs_trace.EXCHANGE, t0, t1)
 
     def _apply_easgd(bidx, grad):
         a, b = u_spans[bidx]
@@ -321,56 +386,89 @@ def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
         for _ in range(n_buckets):
             t0 = time.perf_counter()
             bidx = done_q.get()
-            exposed_s += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            exposed_s += t1 - t0
             if bidx is None:
                 break
+            if tr is not None:
+                tr.record(obs_trace.BUCKET_WAIT, t0, t1, bidx)
             apply_fn(bidx)
+            if tr is not None:
+                tr.record(obs_trace.UPDATE, t1, time.perf_counter(), bidx)
+
+    def _join_comm(comm):
+        """Wait out the comm thread's tail — exposed by definition."""
+        nonlocal exposed_s
+        t0 = time.perf_counter()
+        comm.join()
+        t1 = time.perf_counter()
+        exposed_s += t1 - t0
+        if tr is not None:
+            tr.record(obs_trace.COMM_WAIT, t0, t1)
+
+    def _exchange_inline():
+        """No-overlap baseline: the whole wire is exposed."""
+        nonlocal exposed_s
+        t0 = time.perf_counter()
+        _exchange()
+        t1 = time.perf_counter()
+        exposed_s += t1 - t0
+        if tr is not None:
+            tr.record(obs_trace.COMM_WAIT, t0, t1)
+
+    def _grad_traced(step):
+        t0 = time.perf_counter()
+        g = grad_fn(w, step, wid)
+        if tr is not None:
+            tr.record(obs_trace.COMPUTE, t0, time.perf_counter())
+        return g
 
     step = 0
     for k in range(n_rounds):
-        for _ in range(tau - 1):                 # τ−1 local-only steps
-            g = grad_fn(w, step, wid)
-            easgd_flat.local_step(algo, w, vel, g, local_cfg)
-            step += 1
+        if tau > 1:
+            t0 = time.perf_counter()
+            for _ in range(tau - 1):             # τ−1 local-only steps
+                g = grad_fn(w, step, wid)
+                easgd_flat.local_step(algo, w, vel, g, local_cfg)
+                step += 1
+            if tr is not None:
+                tr.record(obs_trace.LOCAL_STEP, t0, time.perf_counter(),
+                          tau - 1)
         if algo == "sync_easgd":
             row[:n] = w                          # start-of-exchange weights
             if overlap:
                 comm = threading.Thread(target=_exchange)
                 comm.start()                     # buckets fly while the
-                grad = grad_fn(w, step, wid)     # gradient computes
+                grad = _grad_traced(step)        # gradient computes
                 step += 1                        # (paper §6.1.3)
                 _drain(lambda b: _apply_easgd(b, grad))
-                t0 = time.perf_counter()
-                comm.join()
-                exposed_s += time.perf_counter() - t0
-            else:                                # no-overlap baseline: the
-                t0 = time.perf_counter()         # whole wire is exposed
-                _exchange()
-                exposed_s += time.perf_counter() - t0
-                grad = grad_fn(w, step, wid)
+                _join_comm(comm)
+            else:
+                _exchange_inline()
+                grad = _grad_traced(step)
                 step += 1
                 _drain(lambda b: _apply_easgd(b, grad))
             if exc_box:
                 raise exc_box[0]
         else:                                    # sync_sgd: grads first, so
-            grad = grad_fn(w, step, wid)         # only the per-bucket master
+            grad = _grad_traced(step)            # only the per-bucket master
             step += 1                            # update overlaps (§5.1)
             row[:n] = grad
             if overlap:
                 comm = threading.Thread(target=_exchange)
                 comm.start()
                 _drain(_apply_sgd)
-                t0 = time.perf_counter()
-                comm.join()
-                exposed_s += time.perf_counter() - t0
+                _join_comm(comm)
             else:
-                t0 = time.perf_counter()
-                _exchange()
-                exposed_s += time.perf_counter() - t0
+                _exchange_inline()
                 _drain(_apply_sgd)
             if exc_box:
                 raise exc_box[0]
             w[:] = center
+        if telem is not None:
+            telem["iters"] = step
+            telem["exposed_s"] = exposed_s
+            telem["comm_s"] = comm_s
         if wid == 0 and k in eval_rounds:
             # control-plane reports go RAW even under wire compression:
             # these are one-shot exact-state transfers, not a stream error
@@ -384,6 +482,8 @@ def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
     stats.update({"comm_s": comm_s, "exposed_s": exposed_s,
                   "overlapped_s": max(0.0, comm_s - exposed_s),
                   "overlap": overlap, "update_backend": backend})
+    if bye_wrap is not None:
+        stats = bye_wrap(stats)
     while True:                                  # control plane: DONE → BYE
         frame = link.recv_header()
         if frame.ftype == wire.DONE:

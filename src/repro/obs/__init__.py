@@ -1,0 +1,21 @@
+"""repro.obs — low-overhead tracing, clock alignment, and wire metrics.
+
+Three small jax-free modules threaded through every layer of the runtime:
+
+ * ``obs.trace``   — per-thread preallocated span recorder (off by
+   default; ~100 ns per record when on, zero work when off).
+ * ``obs.clock``   — NTP-style worker↔master offset estimation so
+   per-worker traces merge onto one timeline (|error| ≤ rtt/2).
+ * ``obs.metrics`` — the named counter/gauge registry (``.value`` cells)
+   replacing the per-layer parallel counter dicts, plus ``count_round``,
+   the one definition of schedule-level exchange accounting.
+ * ``obs.report``  — trace merging, the measured Table-3 breakdown
+   (compute% / exposed-comm% / update%), and Chrome-trace/Perfetto export.
+
+Turn it on with ``PSConfig(trace=True)`` (CLI: ``--trace``); the merged
+trace comes back on ``PSResult.trace`` with a ``report`` section attached.
+See DESIGN.md §obs for the span taxonomy and overhead budget.
+"""
+from repro.obs import clock, metrics, report, trace  # noqa: F401
+
+__all__ = ["clock", "metrics", "report", "trace"]

@@ -1,0 +1,74 @@
+"""Cross-worker clock alignment for trace merging (NTP-style, RTT-halved).
+
+Each worker estimates its offset against the master's ``time.perf_counter``
+during rendezvous (after WELCOME, before READY — the link is otherwise
+quiet, so CLOCK replies are the only inbound frames): send an empty CLOCK
+probe at local t0, the master's reader echoes its own clock t_m, note local
+t1. Under the symmetric-delay assumption the master read the probe at
+(t0+t1)/2 local, so
+
+    offset = t_m − (t0 + t1) / 2,      master ≈ local + offset,
+
+with error bounded by rtt/2. We keep the sample at the MINIMUM observed
+round-trip (queueing only ever inflates rtt, so min-rtt is the closest to
+symmetric) — the same filter NTP applies. ``obs.report.merge_traces``
+shifts every worker span by its offset onto the master timeline; the
+reported rtt doubles as a measured per-link α observation.
+
+On one host, ``time.perf_counter`` is CLOCK_MONOTONIC — system-wide, so
+thread/process-transport offsets are exactly 0 and the estimator here
+returns ≈0 (bounded by loopback rtt). Jax-free, like all of repro.obs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass(frozen=True)
+class ClockSync:
+    """offset_s: add to local timestamps to land on the master clock;
+    rtt_s: the minimum observed round-trip (|offset error| ≤ rtt/2)."""
+
+    offset_s: float
+    rtt_s: float
+    probes: int
+
+    def to_wire(self) -> dict:
+        return {"offset_s": self.offset_s, "rtt_s": self.rtt_s,
+                "probes": self.probes}
+
+
+def combine(samples: list) -> ClockSync:
+    """samples: [(t0_local, t_master, t1_local)] → the min-rtt estimate."""
+    best_rtt, offset = float("inf"), 0.0
+    for t0, tm, t1 in samples:
+        rtt = t1 - t0
+        if rtt < best_rtt:
+            best_rtt = rtt
+            offset = tm - (t0 + t1) / 2.0
+    return ClockSync(offset_s=offset, rtt_s=best_rtt, probes=len(samples))
+
+
+def sync_over_link(link, wid: int = 0, probes: int = 8) -> ClockSync:
+    """Run the probe exchange over a ``net.wire.Link`` whose peer echoes
+    CLOCK frames with ``{"t": perf_counter()}`` (the master's per-link
+    reader does; ``answer`` below is the echo half for tests)."""
+    from repro.net import wire
+    samples = []
+    for _ in range(probes):
+        t0 = time.perf_counter()
+        link.send_simple(wire.CLOCK, wid=wid)
+        frame = link.recv_header()
+        assert frame.ftype == wire.CLOCK, frame
+        tm = float(link.recv_json(frame)["t"])
+        samples.append((t0, tm, time.perf_counter()))
+    return combine(samples)
+
+
+def answer(link, frame, wid: int = 0) -> None:
+    """The echo half: consume one CLOCK probe, reply with this clock's
+    ``perf_counter`` (what ``net.server``'s reader does per probe)."""
+    from repro.net import wire
+    link.recv_discard(frame)
+    link.send_json(wire.CLOCK, {"t": time.perf_counter()}, wid=wid)

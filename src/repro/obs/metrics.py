@@ -1,0 +1,101 @@
+"""Named counter/gauge registry — one home for the runtime's accounting.
+
+Before repro.obs every layer grew its own parallel dict of counter cells:
+``ps.runtime`` handed ``{"sync_rounds": slot, ...}`` to the round executor,
+``net.server`` kept a second dict feeding ``Link._count``, ``net.peer`` a
+per-peer third. The cells themselves were fine — a ``.value`` attribute
+shared by plain objects, ``multiprocessing.RawValue`` and ctypes — so the
+``Registry`` here keeps exactly that protocol (``registry[name].value``)
+and is mapping-like where the old dicts were: ``Link._count`` and the
+round executor run unchanged against either.
+
+``count_round`` is the ONE definition of schedule-level exchange
+accounting (previously copy-pasted between ``_apply_round`` and the
+bucketed branch of ``execute_rounds``): one executed message round costs
+one sync_round, len(rnd) messages, and Σ frac·n·8 logical wire bytes —
+independent of bucketing, which repartitions frames, not the schedule.
+
+Jax-free (TCP workers import this through ``net.wire``).
+"""
+from __future__ import annotations
+
+
+class Slot:
+    """A mutable counter cell (mirrors mp.RawValue's ``.value``) — the unit
+    of the counter protocol shared by the master server's aggregate
+    counters, the peer mesh's per-link counters, and this registry."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, value=0):
+        self.value = value
+
+    def __repr__(self):
+        return f"Slot({self.value!r})"
+
+
+class Registry:
+    """Named slots with ``.value`` semantics. ``counter(name, cell=...)``
+    ADOPTS an externally-owned cell (an mp.RawValue, a ctypes value) under
+    a name instead of allocating — that is how the process transport's
+    shared-memory counters join the registry without losing their
+    cross-process backing. Mapping-style access returns the cell, so
+    existing ``counters["wire_bytes"].value += n`` call sites are
+    oblivious to whether they were handed a dict or a Registry."""
+
+    def __init__(self):
+        self._slots: dict = {}
+
+    # -- definition ---------------------------------------------------------
+
+    def counter(self, name: str, cell=None):
+        """Get-or-create (optionally adopting ``cell``)."""
+        slot = self._slots.get(name)
+        if slot is None:
+            slot = self._slots[name] = Slot() if cell is None else cell
+        return slot
+
+    gauge = counter          # same cell; gauges are set, counters are added
+
+    # -- convenience --------------------------------------------------------
+
+    def add(self, name: str, v) -> None:
+        self.counter(name).value += v
+
+    def set(self, name: str, v) -> None:
+        self.counter(name).value = v
+
+    def snapshot(self) -> dict:
+        """{name: value} — the JSON-ready read of every cell."""
+        return {k: s.value for k, s in self._slots.items()}
+
+    # -- mapping protocol (what the old dicts provided) ---------------------
+
+    def __getitem__(self, name: str):
+        return self._slots[name]
+
+    def get(self, name: str, default=None):
+        return self._slots.get(name, default)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._slots
+
+    def __iter__(self):
+        return iter(self._slots)
+
+    def items(self):
+        return self._slots.items()
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+
+def count_round(counters, rnd, n_elements: int) -> None:
+    """Schedule-level accounting of ONE executed message round: counters is
+    any mapping of cells with ``.value`` (dict or Registry, thread slots or
+    mp.RawValue). Logical bytes are Σ frac·n·8 — the schedule's cost,
+    invariant under bucketing (which repartitions frames, not messages)."""
+    counters["sync_rounds"].value += 1
+    counters["messages"].value += len(rnd)
+    counters["wire_bytes"].value += int(
+        sum(m.frac for m in rnd) * n_elements * 8)

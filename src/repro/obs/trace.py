@@ -1,0 +1,154 @@
+"""Per-thread append-only span recorder — the repro.obs hot path.
+
+A ``Tracer`` is owned by exactly ONE thread (one per worker loop, one per
+comm executor, one per master serve loop), so recording takes no locks.
+Storage is preallocated numpy arrays; ``record`` is four scalar stores and
+an integer bump (~100 ns), and beyond capacity it only bumps a ``dropped``
+counter — never allocates, never raises. Tracing is DISABLED BY DEFAULT:
+when ``PSConfig.trace`` is off no tracer is ever created and every
+instrumentation site is behind an ``if tracer is not None`` guard, so the
+off-cost is one pointer compare per site (no ``perf_counter`` calls, no
+allocation — pinned by tests/test_obs.py).
+
+Span kinds mirror the runtime's vocabulary. The classification sets at the
+bottom are what ``obs.report.breakdown`` uses to reproduce the paper's
+Table-3 accounting (compute% / exposed-comm% / update%) from real spans.
+
+This module is jax-free: TCP workers import it on their ~0.4 s startup
+path (pinned by tests/test_net.py::test_tcp_worker_is_jax_free).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+
+import numpy as np
+
+# -- span kinds --------------------------------------------------------------
+COMPUTE = 0        # one exchange-step gradient computation
+LOCAL_STEP = 1     # the τ−1 local-only steps between exchanges (one span)
+EXCHANGE = 2       # one full allreduce on the comm executor / comm thread
+ROUND = 3          # one message round of an exchange (arg = round index)
+BUCKET = 4         # one bucket's rounds on the p2p wire (arg = bucket)
+BUCKET_WAIT = 5    # main thread blocked for a bucket to land (arg = bucket)
+COMM_WAIT = 6      # main thread blocked on exchange completion (join/inline)
+UPDATE = 7         # optimizer update application (arg = bucket, −1 = whole)
+BARRIER = 8        # barrier wait (arg: 0 = A, 1 = B, 2 = C)
+TURN_WAIT = 9      # turnstile / master-lock admission wait
+RECV_WAIT = 10     # blocked on the master link (WEIGHTS down / grads in)
+EVAL = 11          # eval-function snapshot (master only)
+
+KIND_NAMES = {
+    COMPUTE: "compute", LOCAL_STEP: "local_step", EXCHANGE: "exchange",
+    ROUND: "round", BUCKET: "bucket", BUCKET_WAIT: "bucket_wait",
+    COMM_WAIT: "comm_wait", UPDATE: "update", BARRIER: "barrier",
+    TURN_WAIT: "turn_wait", RECV_WAIT: "recv_wait", EVAL: "eval",
+}
+
+# Table-3 accounting classes (obs.report.breakdown): a worker's wall time
+# decomposes into gradient compute, EXPOSED communication (time its update
+# path sat blocked on a wire or a barrier — what overlap exists to hide),
+# and optimizer-update time. EXCHANGE/ROUND/BUCKET are comm-thread
+# *busy* spans: they show where bytes moved, but only the wait kinds are
+# time the training loop actually lost.
+COMPUTE_KINDS = frozenset({COMPUTE, LOCAL_STEP})
+EXPOSED_KINDS = frozenset({BUCKET_WAIT, COMM_WAIT, BARRIER, TURN_WAIT,
+                           RECV_WAIT})
+UPDATE_KINDS = frozenset({UPDATE})
+COMM_BUSY_KINDS = frozenset({EXCHANGE})
+
+DEFAULT_CAPACITY = 1 << 16
+
+
+class Tracer:
+    """One thread's span buffer. ``record(kind, t0, t1, arg)`` appends;
+    past ``capacity`` it increments ``dropped`` instead of growing (the
+    hot path must never allocate)."""
+
+    __slots__ = ("name", "wid", "capacity", "n", "dropped",
+                 "_t0", "_t1", "_kind", "_arg")
+
+    def __init__(self, name: str, wid: int = -1,
+                 capacity: int = DEFAULT_CAPACITY):
+        self.name = name
+        self.wid = wid
+        self.capacity = int(capacity)
+        self.n = 0
+        self.dropped = 0
+        self._t0 = np.empty(self.capacity, np.float64)
+        self._t1 = np.empty(self.capacity, np.float64)
+        self._kind = np.empty(self.capacity, np.int32)
+        self._arg = np.empty(self.capacity, np.int64)
+
+    def record(self, kind: int, t0: float, t1: float, arg: int = 0) -> None:
+        i = self.n
+        if i >= self.capacity:
+            self.dropped += 1
+            return
+        self._t0[i] = t0
+        self._t1[i] = t1
+        self._kind[i] = kind
+        self._arg[i] = arg
+        self.n = i + 1
+
+    def spans(self) -> list:
+        """[[kind, t0, t1, arg], ...] in record (≈ end-time) order —
+        the JSON-ready wire form carried home in BYE / spill files."""
+        return [[int(self._kind[i]), float(self._t0[i]), float(self._t1[i]),
+                 int(self._arg[i])] for i in range(self.n)]
+
+
+# -- registry ----------------------------------------------------------------
+# Creation takes the lock; recording never does (one tracer per thread).
+_LOCK = threading.Lock()
+_TRACERS: list = []
+
+
+def tracer(name: str, wid: int = -1,
+           capacity: int = DEFAULT_CAPACITY) -> Tracer:
+    """Create AND register a tracer. Callers create one only when tracing
+    is enabled — an empty registry IS the disabled state."""
+    t = Tracer(name, wid=wid, capacity=capacity)
+    with _LOCK:
+        _TRACERS.append(t)
+    return t
+
+
+def drain() -> list:
+    """Pop every registered tracer (one traced run per process at a time:
+    launchers drain at run start for a clean slate and at run end to
+    collect)."""
+    with _LOCK:
+        out, _TRACERS[:] = list(_TRACERS), []
+    return out
+
+
+def stats() -> dict:
+    """Registry totals — the tracing-off overhead test pins these to 0."""
+    with _LOCK:
+        ts = list(_TRACERS)
+    return {"tracers": len(ts), "records": sum(t.n for t in ts),
+            "dropped": sum(t.dropped for t in ts)}
+
+
+# -- spill files -------------------------------------------------------------
+
+def spill_path(trace_dir: str, wid: int) -> str:
+    return os.path.join(trace_dir, f"trace-w{wid}.json")
+
+
+def dump_spill(trace_dir: str, wid: int, payload: dict) -> str:
+    """Write one worker's trace payload (``{"clock", "threads", "dropped"}``)
+    under ``trace_dir``; returns the path (what BYE advertises instead of
+    the inline buffer when ``--trace-dir`` is set)."""
+    os.makedirs(trace_dir, exist_ok=True)
+    path = spill_path(trace_dir, wid)
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    return path
+
+
+def load_spill(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)

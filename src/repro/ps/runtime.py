@@ -48,6 +48,9 @@ from repro.comm import schedules as comm_schedules
 from repro.core import costmodel, easgd_flat
 from repro.core.async_engine import ALGORITHMS, PSEngine, SimConfig
 from repro.core.easgd import EASGDConfig
+from repro.obs import metrics as obs_metrics
+from repro.obs import report as obs_report
+from repro.obs import trace as obs_trace
 from repro.ps.transport import PSContext, get_transport
 
 SYNC = easgd_flat.SYNC_FAMILY
@@ -111,6 +114,20 @@ class PSConfig:
     #                                  elastic-update kernel on the real
     #                                  per-bucket path; workers are spawned
     #                                  with XLA flags that keep it bitwise)
+    # -- observability (repro.obs) ------------------------------------------
+    trace: bool = False              # record per-thread spans (compute /
+    #                                  waits / exchange rounds / buckets /
+    #                                  updates) and return the merged,
+    #                                  clock-aligned timeline + Table-3
+    #                                  breakdown on PSResult.trace. Off by
+    #                                  default: the hot paths then take no
+    #                                  timestamps at all
+    trace_dir: Optional[str] = None  # spill per-worker trace buffers as
+    #                                  JSON files here instead of carrying
+    #                                  them inline in BYE (process workers
+    #                                  always spill; a temp dir is made if
+    #                                  unset). Assumes a filesystem the
+    #                                  master can read (localhost / NFS)
 
     def __post_init__(self):
         assert self.algorithm in ALGORITHMS, self.algorithm
@@ -164,6 +181,9 @@ class PSResult:
     final_metric: float
     center: np.ndarray
     workers: np.ndarray              # (P, n) final worker weights
+    trace: Optional[dict] = None     # cfg.trace: the merged, clock-aligned
+    #                                  timeline (obs.report.merge_traces
+    #                                  shape) with a "report" breakdown
 
 
 # ---------------------------------------------------------------------------
@@ -197,10 +217,7 @@ def _apply_round(mailbox, n: int, rnd, counters=None) -> None:
         else:
             tgt[:] = pay
     if counters is not None:
-        counters["sync_rounds"].value += 1
-        counters["messages"].value += len(rnd)
-        counters["wire_bytes"].value += int(
-            sum(m.frac for m in rnd) * n * 8)
+        obs_metrics.count_round(counters, rnd, n)
 
 
 def _apply_clipped_round(mailbox, rnd_clipped) -> None:
@@ -218,7 +235,7 @@ def _apply_clipped_round(mailbox, rnd_clipped) -> None:
 
 
 def execute_rounds(mailbox, n: int, rounds, counters=None,
-                   boundaries=None) -> None:
+                   boundaries=None, tracer=None) -> None:
     """Apply one allreduce = the schedule's message rounds over the mailbox
     (rows 0..P-1 = workers, row P = the master endpoint used by
     round_robin). Rounds are serialized — the execution IS the α–β model's
@@ -236,18 +253,23 @@ def execute_rounds(mailbox, n: int, rounds, counters=None,
     mailbox[-1].fill(0.0)            # master endpoint accumulates from zero
     if boundaries is not None and len(boundaries) > 2:
         row_len = mailbox.shape[-1]
-        for plan in comm_rounds.bucket_rounds(rounds, row_len, boundaries):
+        plans = comm_rounds.bucket_rounds(rounds, row_len, boundaries)
+        for bidx, plan in enumerate(plans):
+            t0 = time.perf_counter() if tracer is not None else 0.0
             for rnd_clipped in plan:
                 _apply_clipped_round(mailbox, rnd_clipped)
+            if tracer is not None:
+                tracer.record(obs_trace.BUCKET, t0, time.perf_counter(),
+                              bidx)
         if counters is not None:
             for rnd in rounds:
-                counters["sync_rounds"].value += 1
-                counters["messages"].value += len(rnd)
-                counters["wire_bytes"].value += int(
-                    sum(m.frac for m in rnd) * n * 8)
+                obs_metrics.count_round(counters, rnd, n)
         return
-    for rnd in rounds:
+    for i, rnd in enumerate(rounds):
+        t0 = time.perf_counter() if tracer is not None else 0.0
         _apply_round(mailbox, n, rnd, counters)
+        if tracer is not None:
+            tracer.record(obs_trace.ROUND, t0, time.perf_counter(), i)
 
 
 def _comm_executor(ctx: PSContext) -> None:
@@ -262,6 +284,8 @@ def _comm_executor(ctx: PSContext) -> None:
     tau = max(ctx.easgd.tau, 1)
     n_rounds = -(-ctx.cfg.total_iters // (ctx.cfg.n_workers * tau))
     third = ctx.cfg.algorithm == "sync_sgd"
+    tr = obs_trace.tracer("comm") if ctx.cfg.trace else None
+    _pc = time.perf_counter
     # emulated wire: the message rounds serialize, so one exchange costs
     # Σ (α + max_frac·n·β) on top of the real copies — paced as a single
     # absolute deadline per exchange to be robust to oversleep
@@ -270,13 +294,22 @@ def _comm_executor(ctx: PSContext) -> None:
         for rnd in ctx.rounds)
     try:
         for _ in range(n_rounds):
+            if tr is not None:
+                t0 = _pc()
             ctx.barrier.wait()       # A: mailboxes posted
+            if tr is not None:
+                tr.record(obs_trace.BARRIER, t0, (tx := _pc()), 0)
             deadline = time.monotonic() + t_wire
             execute_rounds(v.mailbox, ctx.n, ctx.rounds, counters,
-                           boundaries=getattr(ctx, "boundaries", None))
+                           boundaries=getattr(ctx, "boundaries", None),
+                           tracer=tr)
             if t_wire:
                 _sleep_until(deadline)
+            if tr is not None:
+                tr.record(obs_trace.EXCHANGE, tx, (t0 := _pc()))
             ctx.barrier.wait()       # B: exchange complete
+            if tr is not None:
+                tr.record(obs_trace.BARRIER, t0, _pc(), 1)
             if third:
                 ctx.barrier.wait()   # C: master update complete
     except threading.BrokenBarrierError:
@@ -299,18 +332,29 @@ def worker_main(ctx: PSContext, wid: int) -> None:
     for k in range(2):
         grad_fn(wu, k, -(wid + 2))
     ctx.start_barrier.wait()
+    tr = obs_trace.tracer("main", wid=wid) if ctx.cfg.trace else None
     algo = ctx.cfg.algorithm
     if algo in SYNC:
-        _sync_worker(ctx, wid, grad_fn)
+        _sync_worker(ctx, wid, grad_fn, tr)
     elif algo == "original_easgd" or ctx.cfg.deterministic:
-        _turnstile_worker(ctx, wid, grad_fn)
+        _turnstile_worker(ctx, wid, grad_fn, tr)
     elif algo.startswith("hogwild"):
-        _hogwild_worker(ctx, wid, grad_fn)
+        _hogwild_worker(ctx, wid, grad_fn, tr)
     else:
-        _fcfs_worker(ctx, wid, grad_fn)
+        _fcfs_worker(ctx, wid, grad_fn, tr)
+    if tr is not None and ctx.cfg.trace_dir:
+        # process transport: the registry dies with this process — spill
+        # the buffer to disk for the launcher to merge (perf_counter is
+        # system-wide CLOCK_MONOTONIC, so offsets between local processes
+        # are already ~0 and no clock sync is needed)
+        obs_trace.dump_spill(ctx.cfg.trace_dir, wid, {
+            "clock": {"offset_s": 0.0, "rtt_s": 0.0},
+            "threads": {"main": tr.spans()},
+            "dropped": tr.dropped,
+        })
 
 
-def _turnstile_worker(ctx, wid, grad_fn):
+def _turnstile_worker(ctx, wid, grad_fn, tr=None):
     """Strict cyclic admission: worker ``turn % P`` owns the master next.
     This is Original EASGD's round-robin wire — and, for the async family
     under ``deterministic=True``, exactly the DES zero-jitter event order.
@@ -329,37 +373,56 @@ def _turnstile_worker(ctx, wid, grad_fn):
     tau = max(e.tau, 1)
     total_turns = -(-total // tau)           # one turn = one exchange = τ steps
     local_step = 0
+    _pc = time.perf_counter
 
     def _tau_block():
         """τ−1 local-only steps + the exchange gradient."""
         nonlocal local_step
+        if tr is not None:
+            t0 = _pc()
         for _ in range(tau - 1):
             g = grad_fn(w, local_step, wid)
             easgd_flat.local_step(algo, w, vel, g, e)
             local_step += 1
+        if tr is not None and tau > 1:
+            tr.record(obs_trace.LOCAL_STEP, t0, (t0 := _pc()), tau - 1)
         g = grad_fn(w, local_step, wid)
         local_step += 1
+        if tr is not None:
+            tr.record(obs_trace.COMPUTE, t0, _pc())
         return g
 
     while True:
         grad = None if serial_compute else _tau_block()
+        if tr is not None:
+            t0 = _pc()
         with ctx.turn_cond:
             while ctx.turn.value < total_turns and ctx.turn.value % P != wid:
                 ctx.turn_cond.wait(0.05)
+            if tr is not None:
+                tr.record(obs_trace.TURN_WAIT, t0, (t0 := _pc()))
             if ctx.turn.value >= total_turns:
                 ctx.turn_cond.notify_all()
                 return
             if t_msg:                        # master → worker (W̄ down)
                 _sleep_until(time.monotonic() + t_msg)
+                if tr is not None:
+                    tr.record(obs_trace.COMM_WAIT, t0, (t0 := _pc()), 0)
             if serial_compute:
                 grad = _tau_block()
+                if tr is not None:
+                    t0 = _pc()
                 easgd_flat.master_absorb_round_robin(
                     v.center, w, vel, grad, e)
             else:
                 easgd_flat.master_absorb(
                     algo, v.center, v.master_vel, w, vel, grad, e)
+            if tr is not None:
+                tr.record(obs_trace.UPDATE, t0, (t0 := _pc()))
             if t_msg:                        # worker → master (W⁽ⁱ⁾ up)
                 _sleep_until(time.monotonic() + t_msg)
+                if tr is not None:
+                    tr.record(obs_trace.COMM_WAIT, t0, _pc(), 1)
             ctx.turn.value += 1
             ctx.iters.value += tau
             ctx.messages.value += 2          # worker↔master, both ways
@@ -367,7 +430,7 @@ def _turnstile_worker(ctx, wid, grad_fn):
             ctx.turn_cond.notify_all()
 
 
-def _fcfs_worker(ctx, wid, grad_fn):
+def _fcfs_worker(ctx, wid, grad_fn, tr=None):
     """Async family: first-come-first-served on the master lock."""
     v, e = ctx.views(), ctx.easgd
     algo, total = ctx.cfg.algorithm, ctx.cfg.total_iters
@@ -375,15 +438,24 @@ def _fcfs_worker(ctx, wid, grad_fn):
     t_msg = ctx.cfg.t_msg_emulated(ctx.n * 8)
     tau = max(e.tau, 1)
     local_step = 0
+    _pc = time.perf_counter
     while ctx.iters.value < total:
+        if tr is not None:
+            t0 = _pc()
         for _ in range(tau - 1):             # τ−1 local-only steps
             g = grad_fn(w, local_step, wid)
             easgd_flat.local_step(algo, w, vel, g, e)
             local_step += 1
+        if tr is not None and tau > 1:
+            tr.record(obs_trace.LOCAL_STEP, t0, (t0 := _pc()), tau - 1)
         grad = grad_fn(w, local_step, wid)
         local_step += 1
+        if tr is not None:
+            tr.record(obs_trace.COMPUTE, t0, (t0 := _pc()))
         deadline = None
         with ctx.master_lock:
+            if tr is not None:
+                tr.record(obs_trace.TURN_WAIT, t0, (t0 := _pc()))
             if ctx.iters.value >= total:
                 return
             if t_msg:
@@ -399,11 +471,15 @@ def _fcfs_worker(ctx, wid, grad_fn):
             ctx.iters.value += tau
             ctx.messages.value += 2
             ctx.wire_bytes.value += 2 * ctx.n * 8
+            if tr is not None:
+                tr.record(obs_trace.UPDATE, t0, (t0 := _pc()))
         if deadline is not None:
             _sleep_until(deadline)
+            if tr is not None:
+                tr.record(obs_trace.COMM_WAIT, t0, _pc())
 
 
-def _hogwild_worker(ctx, wid, grad_fn):
+def _hogwild_worker(ctx, wid, grad_fn, tr=None):
     """The SAME absorb as FCFS with NO lock — concurrent in-place updates
     of the shared center interleave (and tear) for real. Termination is by
     per-worker quota: the racy shared counter is monitoring-only."""
@@ -413,23 +489,34 @@ def _hogwild_worker(ctx, wid, grad_fn):
     t_msg = ctx.cfg.t_msg_emulated(ctx.n * 8)
     tau = max(e.tau, 1)
     quota = total // P + (1 if wid < total % P else 0)
+    _pc = time.perf_counter
     for local_step in range(quota):
+        if tr is not None:
+            t0 = _pc()
         grad = grad_fn(w, local_step, wid)
         if (local_step + 1) % tau and local_step != quota - 1:
             easgd_flat.local_step(algo, w, vel, grad, e)   # τ local-only
+            if tr is not None:
+                tr.record(obs_trace.LOCAL_STEP, t0, _pc(), 1)
             ctx.iters.value += 1             # racy — monitoring only
             continue
+        if tr is not None:
+            tr.record(obs_trace.COMPUTE, t0, (t0 := _pc()))
         deadline = (time.monotonic() + 2 * t_msg) if t_msg else None
         easgd_flat.master_absorb(
             algo, v.center, v.master_vel, w, vel, grad, e)
+        if tr is not None:
+            tr.record(obs_trace.UPDATE, t0, (t0 := _pc()))
         if deadline is not None:
             _sleep_until(deadline)           # lock-free: wire times OVERLAP
+            if tr is not None:
+                tr.record(obs_trace.COMM_WAIT, t0, _pc())
         ctx.iters.value += 1                 # racy — monitoring only
         ctx.messages.value += 2
         ctx.wire_bytes.value += 2 * ctx.n * 8
 
 
-def _sync_worker(ctx, wid, grad_fn):
+def _sync_worker(ctx, wid, grad_fn, tr=None):
     """Barriered rounds; barriers are shared with the comm executor.
 
     sync_easgd: post W_t → [A] → grad ∥ allreduce → [B] → worker rule →
@@ -449,14 +536,19 @@ def _sync_worker(ctx, wid, grad_fn):
     tau = max(e.tau, 1)
     n_rounds = -(-total // (P * tau))
     it = 0
+    _pc = time.perf_counter
 
     def _local_block():
         """τ−1 local-only steps before the barriered exchange step."""
         nonlocal it
+        if tr is not None and tau > 1:
+            t0 = _pc()
         for _ in range(tau - 1):
             g = grad_fn(w, it, wid)
             easgd_flat.local_step(algo, w, vel, g, e)
             it += 1
+        if tr is not None and tau > 1:
+            tr.record(obs_trace.LOCAL_STEP, t0, _pc(), tau - 1)
 
     if algo == "sync_easgd":
         versions = (v.center, v.center_alt)
@@ -464,32 +556,52 @@ def _sync_worker(ctx, wid, grad_fn):
             _local_block()
             c_read, c_write = versions[step % 2], versions[(step + 1) % 2]
             v.mailbox[wid, :n] = w           # start-of-exchange-step weights
+            if tr is not None:
+                t0 = _pc()
             ctx.barrier.wait()               # A — exchange begins
+            if tr is not None:
+                tr.record(obs_trace.BARRIER, t0, (t0 := _pc()), 0)
             grad = grad_fn(w, it, wid)       # …and overlaps this compute
             it += 1
+            if tr is not None:
+                tr.record(obs_trace.COMPUTE, t0, (t0 := _pc()))
             ctx.barrier.wait()               # B — sum of W_t in every row
+            if tr is not None:
+                tr.record(obs_trace.BARRIER, t0, (t0 := _pc()), 1)
             easgd_flat.worker_step(algo, w, vel, grad, c_read, e)
             if wid == 0:
                 c_write[:] = c_read
                 easgd_flat.sync_master_easgd(
                     c_write, v.mailbox[0, :n] / P, P, e)
                 ctx.iters.value += P * tau
+            if tr is not None:
+                tr.record(obs_trace.UPDATE, t0, _pc())
         # NOTE: after an odd round count the final W̄ lives in center_alt;
         # the LAUNCHER copies it back post-join (doing it here would race
         # with the other workers' last worker_step, which reads .center)
         return
     for step in range(n_rounds):             # sync_sgd
         _local_block()
+        if tr is not None:
+            t0 = _pc()
         grad = grad_fn(w, it, wid)
         it += 1
+        if tr is not None:
+            tr.record(obs_trace.COMPUTE, t0, (t0 := _pc()))
         v.mailbox[wid, :n] = grad
         ctx.barrier.wait()                   # A — gradient allreduce
-        ctx.barrier.wait()                   # B
+        ctx.barrier.wait()                   # B — workers idle through both
+        if tr is not None:
+            tr.record(obs_trace.BARRIER, t0, (t0 := _pc()), 1)
         if wid == 0:
             easgd_flat.sync_master_sgd(
                 v.center, v.master_vel, v.mailbox[0, :n] / P, e)
             ctx.iters.value += P * tau
+            if tr is not None:
+                tr.record(obs_trace.UPDATE, t0, (t0 := _pc()))
         ctx.barrier.wait()                   # C — W̄ updated
+        if tr is not None:
+            tr.record(obs_trace.BARRIER, t0, _pc(), 2)
         w[:] = v.center
 
 
@@ -512,6 +624,14 @@ def run_ps(problem, easgd: EASGDConfig, cfg: PSConfig,
     w0, _, eval_fn = built
     if eval_fn_override is not None:
         eval_fn = eval_fn_override
+    if cfg.trace:
+        obs_trace.drain()                    # clean registry for THIS run
+        if tr.name == "process" and not cfg.trace_dir:
+            # worker tracers live in other processes: give them somewhere
+            # to spill (BYE-equivalent; the launcher merges from disk)
+            import tempfile
+            cfg = dataclasses.replace(
+                cfg, trace_dir=tempfile.mkdtemp(prefix="repro-trace-"))
     w0 = np.asarray(w0, np.float64)
     n, P = w0.size, cfg.n_workers
     sched_name = cfg.resolved_schedule(n * 8)
@@ -613,6 +733,7 @@ def run_ps(problem, easgd: EASGDConfig, cfg: PSConfig,
                    else ctx.iters.value)
     final = float(eval_fn(v.center.copy()))
     history.append((total_time, total_iters, final))
+    trace = _collect_local_trace(cfg, tr.name, P) if cfg.trace else None
     return PSResult(
         algorithm=cfg.algorithm, transport=cfg.transport,
         schedule=sched_name if cfg.algorithm in SYNC else "master",
@@ -621,7 +742,37 @@ def run_ps(problem, easgd: EASGDConfig, cfg: PSConfig,
                   "messages": ctx.messages.value,
                   "wire_bytes": ctx.wire_bytes.value},
         final_metric=final, center=v.center.copy(),
-        workers=v.workers_w.copy())
+        workers=v.workers_w.copy(), trace=trace)
+
+
+def _collect_local_trace(cfg: PSConfig, transport: str, P: int):
+    """Gather worker/comm tracers after a thread or process run and merge
+    them (offsets are 0: perf_counter is system-wide on one host). Thread
+    transport reads the registry; process transport reads the spill files
+    the workers wrote on exit. The comm executor's tracer (wid=-1) rides
+    as the 'master' plane, mirroring where the exchange runs on tcp."""
+    workers: dict = {}
+    master_threads: dict = {}
+    if transport == "thread":
+        for t in obs_trace.drain():
+            if t.wid >= 0:
+                workers.setdefault(t.wid, {"threads": {}, "dropped": 0})
+                workers[t.wid]["threads"][t.name] = t.spans()
+                workers[t.wid]["dropped"] += t.dropped
+            else:
+                master_threads[t.name] = t.spans()
+    else:
+        for t in obs_trace.drain():          # launcher-side tracers (comm)
+            if t.wid < 0:
+                master_threads[t.name] = t.spans()
+        for wid in range(P):
+            path = obs_trace.spill_path(cfg.trace_dir, wid)
+            if os.path.exists(path):
+                workers[wid] = obs_trace.load_spill(path)
+    merged = obs_report.merge_traces(
+        workers, {"threads": master_threads} if master_threads else None)
+    merged["report"] = obs_report.breakdown(merged)
+    return merged
 
 
 # ---------------------------------------------------------------------------

@@ -1,13 +1,23 @@
-from repro.utils.pytree import (
-    tree_size,
-    tree_bytes,
-    tree_zeros_like,
-    tree_add,
-    tree_sub,
-    tree_scale,
-    tree_dot,
-    tree_norm,
-    tree_cast,
-    tree_map,
+"""repro.utils — pytree helpers (jax-backed) and timing (jax-free).
+
+The package init is lazy (PEP 562): ``repro.utils.timing`` must be
+importable from jax-free processes (TCP workers), and an eager
+``from repro.utils.pytree import …`` here would pull jax into every one
+of them. Attribute access (``repro.utils.tree_size``) still works and
+resolves to the pytree module on first touch.
+"""
+from repro.utils.timing import Timer, now  # noqa: F401 — jax-free
+
+_PYTREE = (
+    "tree_size", "tree_bytes", "tree_zeros_like", "tree_add", "tree_sub",
+    "tree_scale", "tree_dot", "tree_norm", "tree_cast", "tree_map",
 )
-from repro.utils.timing import Timer, now
+
+__all__ = ["Timer", "now", *_PYTREE]
+
+
+def __getattr__(name):
+    if name in _PYTREE:
+        from repro.utils import pytree
+        return getattr(pytree, name)
+    raise AttributeError(f"module 'repro.utils' has no attribute {name!r}")

@@ -1,9 +1,18 @@
-"""Wall-clock timing helpers (block_until_ready-aware)."""
+"""Wall-clock timing helpers (block_until_ready-aware).
+
+Jax-free at import time: jax loads lazily, only when a caller actually
+hands us a tree to synchronize. TCP workers (which must never import jax
+— see tests/test_net.py::test_tcp_worker_is_jax_free) can use ``now`` and
+bare ``Timer()`` freely.
+"""
 from __future__ import annotations
 
 import time
 
-import jax
+
+def _block_until_ready(tree):
+    import jax
+    jax.block_until_ready(tree)
 
 
 def now() -> float:
@@ -23,7 +32,7 @@ class Timer:
 
     def __exit__(self, *exc):
         if self._sync_tree is not None:
-            jax.block_until_ready(self._sync_tree)
+            _block_until_ready(self._sync_tree)
         self.elapsed = time.perf_counter() - self._t0
         return False
 
@@ -31,10 +40,10 @@ class Timer:
 def time_fn(fn, *args, iters: int = 3, warmup: int = 1):
     """Time a jitted fn: returns best-of-iters seconds."""
     for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
+        _block_until_ready(fn(*args))
     best = float("inf")
     for _ in range(iters):
         t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
+        _block_until_ready(fn(*args))
         best = min(best, time.perf_counter() - t0)
     return best

@@ -254,6 +254,8 @@ def test_tcp_worker_is_jax_free(subproc):
         import repro.net.peer
         import repro.comm.rounds
         import repro.ps.problems
+        import repro.obs
+        import repro.utils.timing
         assert "jax" not in sys.modules, "worker pulled jax in"
     """, n_devices=1)
 
