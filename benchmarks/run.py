@@ -6,7 +6,9 @@ roofline). Prints ``name,us_per_call,derived`` CSV rows.
 
 ``--json`` additionally writes one ``BENCH_<name>.json`` per module at the
 repo root (rows + status + wall time) so the perf trajectory across PRs is
-machine-readable.
+machine-readable, and appends the same record to
+``bench_history/<name>/<git-sha>.json`` — the trail
+``python -m repro.obs.regress bench_history/<name>`` gates on.
 """
 from __future__ import annotations
 
@@ -68,6 +70,15 @@ def main() -> None:
             with open(path, "w") as f:
                 json.dump(rec, f, indent=1)
             print(f"# wrote {path}", flush=True)
+            # history trail for the regression gate: one file per commit,
+            # newest-two compared by `repro.obs.regress bench_history/...`
+            sha = str(rec["meta"].get("git_sha") or "nosha")[:12]
+            hist_dir = os.path.join(REPO_ROOT, "bench_history", name)
+            os.makedirs(hist_dir, exist_ok=True)
+            hist_path = os.path.join(hist_dir, f"{sha}.json")
+            with open(hist_path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(f"# appended {hist_path}", flush=True)
     if failures:
         print(f"# FAILURES: {failures}", flush=True)
         sys.exit(1)

@@ -1,3 +1,30 @@
-from repro.ft.elastic_scale import rescale_pods, pod_join, pod_leave
-from repro.ft.straggler import StragglerPolicy, BoundedStaleness
-from repro.ft.watchdog import Watchdog
+"""repro.ft — fault-tolerance primitives (straggler policies, elastic pod
+scaling, the preemption watchdog).
+
+Lazy re-exports (PEP 562): ``straggler`` and ``watchdog`` are jax-free and
+are imported by the tcp worker/master (the live health detector wires
+``BoundedStaleness`` to real heartbeat telemetry — obs/live.py);
+``elastic_scale`` operates on jitted pod state and pulls jax, so it must
+not load just because a jax-free process said ``import repro.ft``.
+"""
+_EXPORTS = {
+    "StragglerPolicy": "repro.ft.straggler",
+    "BoundedStaleness": "repro.ft.straggler",
+    "masked_center_mean": "repro.ft.straggler",
+    "Watchdog": "repro.ft.watchdog",
+    "rescale_pods": "repro.ft.elastic_scale",
+    "pod_join": "repro.ft.elastic_scale",
+    "pod_leave": "repro.ft.elastic_scale",
+}
+
+__all__ = sorted(_EXPORTS) + ["straggler", "watchdog", "elastic_scale"]
+
+
+def __getattr__(name):
+    import importlib
+    if name in ("straggler", "watchdog", "elastic_scale"):
+        return importlib.import_module(f"repro.ft.{name}")
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.ft' has no attribute {name!r}")
+    return getattr(importlib.import_module(mod), name)

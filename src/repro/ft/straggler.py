@@ -11,12 +11,14 @@ mask — the center update becomes
 
 These policies drive both the discrete-event simulator (benchmarks) and the
 host-level training driver; the mask plugs into the jitted step as data.
+The mask math itself is numpy-only, and ``obs.live`` feeds it REAL
+telemetry (per-worker heartbeat rates) from the jax-free tcp master — so
+this module must stay importable without jax; only ``masked_center_mean``
+(the jitted-path helper) touches jax, lazily.
 """
 from __future__ import annotations
 
 import dataclasses
-
-import jax.numpy as jnp
 
 import numpy as np
 
@@ -50,6 +52,7 @@ class BoundedStaleness(StragglerPolicy):
 def masked_center_mean(w_pods, center_flat, mask):
     """Mean over participating pods only (for the host-driven exchange).
     w_pods: (P, N); mask: (P,) 0/1. Returns the masked mean of W."""
+    import jax.numpy as jnp
     m = jnp.asarray(mask, jnp.float32)[:, None]
     denom = jnp.maximum(m.sum(), 1.0)
     return center_flat + (m * (w_pods - center_flat[None])).sum(0) / denom

@@ -3,5 +3,29 @@
 NOTE: ``repro.launch.dryrun`` must be imported/executed FIRST in a fresh
 process (it sets XLA_FLAGS before jax initializes); do not import it from
 library code.
+
+Lazy exports (PEP 562): ``repro.launch.mesh`` pulls jax at import, but
+``repro.launch.monitor`` must stay importable from jax-free processes (it
+rides the tcp worker's import-footprint pin) — so nothing here imports a
+submodule until the name is actually touched.
 """
-from repro.launch.mesh import make_production_mesh, make_host_mesh, n_pods_of
+import importlib
+
+_EXPORTS = {
+    "make_production_mesh": "repro.launch.mesh",
+    "make_host_mesh": "repro.launch.mesh",
+    "n_pods_of": "repro.launch.mesh",
+}
+__all__ = sorted(_EXPORTS) + ["cluster", "hloparse", "mesh", "monitor",
+                              "train"]
+
+
+def __getattr__(name):
+    target = _EXPORTS.get(name)
+    if target is not None:
+        return getattr(importlib.import_module(target), name)
+    try:
+        return importlib.import_module(f"repro.launch.{name}")
+    except ModuleNotFoundError:
+        raise AttributeError(
+            f"module 'repro.launch' has no attribute {name!r}") from None

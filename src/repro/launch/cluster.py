@@ -94,9 +94,10 @@ def main(argv=None):
                     help="comma-separated worker hosts; master binds "
                          "0.0.0.0:--port and waits for them to join "
                          "(omit: spawn localhost workers)")
-    ap.add_argument("--port", type=int, default=29500,
-                    help="fixed rendezvous port for --hosts (localhost "
-                         "runs use an ephemeral one)")
+    ap.add_argument("--port", type=int, default=None,
+                    help="fixed rendezvous port (default: 29500 with "
+                         "--hosts, ephemeral for localhost runs; pin one "
+                         "explicitly so launch.monitor can find the run)")
     ap.add_argument("--ssh", action="store_true",
                     help="with --hosts: launch the printed worker commands "
                          "over ssh instead of just printing them")
@@ -129,6 +130,18 @@ def main(argv=None):
                          "trace (implies --trace). Multi-host note: spills "
                          "are written on the WORKER's filesystem — leave "
                          "unset to carry trace buffers in-band via BYE")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="turn on the live plane (obs.live): per-worker "
+                         "heartbeat time series, the online straggler/"
+                         "health detector, and the STATS frame that "
+                         "`python -m repro.launch.monitor` renders")
+    ap.add_argument("--telemetry-jsonl", default=None, metavar="PATH",
+                    help="stream one JSON line per telemetry sample to "
+                         "PATH (implies --telemetry)")
+    ap.add_argument("--heartbeat-file", default=None, metavar="PATH",
+                    help="touch PATH every ~2 s while the run is alive so "
+                         "an external supervisor can detect a hung master "
+                         "(ft.Watchdog.is_alive PATH)")
     ap.add_argument("--timeout", type=float, default=600.0)
     args = ap.parse_args(argv)
 
@@ -153,6 +166,10 @@ def main(argv=None):
     easgd = EASGDConfig(eta=args.eta, rho=args.rho, mu=0.9, tau=args.tau)
     emulate = costmodel.PS_WIRE if args.emulate == "wire" else None
     multi_host = bool(args.hosts)
+    # --port pins the rendezvous listener even on localhost (so a monitor
+    # knows where to connect); without it localhost stays ephemeral
+    port = args.port if args.port is not None else (29500 if multi_host
+                                                    else 0)
     from repro.ps import zoo
     problem = zoo.resolve(args.model)
     base = ps.PSConfig(
@@ -161,13 +178,26 @@ def main(argv=None):
         total_iters=args.iters, eval_every_iters=args.eval_every,
         emulate_net=emulate, wire_compression=args.compression,
         tcp_host="0.0.0.0" if multi_host else "127.0.0.1",
-        tcp_port=args.port if multi_host else 0,
+        tcp_port=port,
         spawn_workers=not multi_host,
         sync_plane=args.sync_plane,
         bucket_bytes=args.bucket_bytes, overlap=not args.no_overlap,
         update_backend=args.update_backend,
         trace=args.trace or bool(args.trace_dir),
-        trace_dir=args.trace_dir)
+        trace_dir=args.trace_dir,
+        telemetry=args.telemetry,
+        telemetry_jsonl=args.telemetry_jsonl)
+    if port and args.transport == "tcp" and (args.telemetry
+                                             or args.telemetry_jsonl):
+        print(f"# telemetry: watch with  PYTHONPATH=src python -m "
+              f"repro.launch.monitor --connect 127.0.0.1:{port} --follow",
+              flush=True)
+    watchdog = None
+    if args.heartbeat_file:
+        from repro.ft.watchdog import Watchdog
+        watchdog = Watchdog(heartbeat_path=args.heartbeat_file,
+                            install_signals=False, interval_s=2.0)
+        watchdog.start_heartbeat()
 
     results = []
     for algo in algos:
@@ -175,14 +205,14 @@ def main(argv=None):
         ssh_procs = []
         if multi_host:
             hosts = [h for h in args.hosts.split(",") if h]
-            addr = _advertised_addr(args.port)
+            addr = _advertised_addr(port)
             p2p = args.sync_plane == "p2p"
             note = ""
             if p2p:
                 # pinned peer-listener range so the worker↔worker data
                 # plane is firewall-predictable: wid i binds --port+1+i
                 note = (f" (p2p data plane: peer listeners bind ports "
-                        f"{args.port + 1}..{args.port + args.workers})")
+                        f"{port + 1}..{port + args.workers})")
             print(f"# master: {algo} on {addr} "
                   f"sync_plane={args.sync_plane}{note}; start each worker:")
             for wid in range(args.workers):
@@ -190,7 +220,7 @@ def main(argv=None):
                 cmd = worker_command(
                     addr, wid,
                     sync_plane=args.sync_plane if p2p else None,
-                    peer_port=args.port + 1 + wid if p2p else None)
+                    peer_port=port + 1 + wid if p2p else None)
                 print(f"#   [{host}] {cmd}")
                 if args.ssh:
                     ssh_procs.append(subprocess.Popen(
@@ -205,10 +235,21 @@ def main(argv=None):
               f"iters={res.total_iters} err={res.final_metric:.3f} "
               f"time={res.total_time_s:.2f}s counters={res.counters}",
               flush=True)
+        if res.health is not None:
+            n_ev = len(res.health.get("events", []))
+            flagged = res.health.get("flagged", {})
+            print(f"# health: {n_ev} event(s)"
+                  + (f", flagged={flagged}" if flagged else "")
+                  + (f", jsonl={args.telemetry_jsonl}"
+                     if args.telemetry_jsonl else ""), flush=True)
+            for ev in res.health.get("events", [])[-5:]:
+                print(f"#   {ev}", flush=True)
         if res.trace is not None:
             from repro.launch.train import _report_trace
             _report_trace(res, algo, args.trace_dir)
         results.append(res)
+    if watchdog is not None:
+        watchdog.close()
     return results
 
 

@@ -44,6 +44,7 @@ on the wire shortens emulated time as well as measured bytes.
 """
 from __future__ import annotations
 
+import heapq
 import os
 import queue
 import socket
@@ -60,6 +61,7 @@ from repro.core import easgd_flat
 from repro.core.compression import sign_ef_wire_nbytes
 from repro.net import wire
 from repro.net.wire import Link, sleep_until
+from repro.obs import live as obs_live
 from repro.obs import metrics as obs_metrics
 from repro.obs import report as obs_report
 from repro.obs import trace as obs_trace
@@ -207,6 +209,10 @@ class MasterServer:
         self._closing = threading.Event()
         self._threads: list = []
         self._procs: list = []
+        self.live = None                 # obs.live.LiveMonitor (telemetry)
+        self._draining = False           # True once DONE went out: BYE is
+        #                                  then the expected shutdown frame,
+        #                                  not a mid-run departure
 
     # -- payload shapes ------------------------------------------------------
 
@@ -253,13 +259,17 @@ class MasterServer:
 
     # -- pacing --------------------------------------------------------------
 
-    def _t_msg_pair(self) -> tuple:
+    def _t_msg_pair(self, wid: int | None = None) -> tuple:
         """(t_down, t_up) emulated per-message times — the two directions
-        differ in size once τ>1 stacks state into the frames."""
+        differ in size once τ>1 stacks state into the frames. ``wid``
+        applies that worker's ``PSConfig.link_slow`` stretch: a controlled
+        per-link straggler on the pacing plane only (admission order and
+        math are untouched — the DETECTOR must find it, not the iterates)."""
         codec = self.cfg.wire_compression
-        return (self.cfg.t_msg_emulated(
+        slow = self.cfg.link_slow_factor(wid) if wid is not None else 1.0
+        return (slow * self.cfg.t_msg_emulated(
                     wire_payload_nbytes(self._down_elems(), codec)),
-                self.cfg.t_msg_emulated(
+                slow * self.cfg.t_msg_emulated(
                     wire_payload_nbytes(self._up_elems(), codec)))
 
     # -- sync-family round arithmetic (shared by both planes) ---------------
@@ -374,6 +384,11 @@ class MasterServer:
                 "trace_dir": cfg.trace_dir,
             }
             if self.sync_p2p:
+                # a link_slow worker paces ITS exchange deadlines slower —
+                # the mesh is lockstep, so its lag surfaces in every
+                # worker's clock, but its own heartbeat telemetry is what
+                # names it
+                slow = cfg.link_slow_factor(wid)
                 welcome.update({
                     "sync_plane": "p2p",
                     "p": P,
@@ -381,13 +396,14 @@ class MasterServer:
                     "rounds": comm_schedules.rounds_to_wire(self.rounds),
                     "n_rounds": self._n_sync_rounds(),
                     "eval_rounds": self._eval_rounds(),
-                    "t_wire_s": self._t_sync_wire(),
+                    "t_wire_s": slow * self._t_sync_wire(),
                     "peers": {str(w): a for w, a in self.peer_addrs.items()},
                     "bucket_bounds": self.boundaries,
                     "overlap": getattr(cfg, "overlap", True),
                     "update_backend": getattr(cfg, "update_backend",
                                               "numpy"),
-                    "t_wire_bucket_s": (self._t_sync_wire_buckets()
+                    "t_wire_bucket_s": ([slow * t for t in
+                                         self._t_sync_wire_buckets()]
                                         if self.boundaries else []),
                 })
             link.send_json(wire.WELCOME, welcome)
@@ -483,7 +499,21 @@ class MasterServer:
                         f"(algorithm={self.cfg.algorithm})") from None
                 continue
             if kind in ("error", "dead"):
+                if self.live is not None:
+                    self.live.mark_worker_event(wid, "worker_dead",
+                                                str(detail))
                 raise RuntimeError(f"worker {wid} failed: {detail}")
+            if kind == "bye" and not self._draining:
+                # a clean mid-run departure (watchdog-triggered SIGTERM →
+                # BYE instead of a dead socket): its trace/telemetry flush
+                # already landed in bye_stats — surface it as a structured
+                # failure naming the worker, not a protocol violation
+                if self.live is not None:
+                    self.live.mark_worker_event(wid, "worker_left",
+                                                "clean BYE mid-run")
+                raise RuntimeError(
+                    f"worker {wid} left the run (clean BYE mid-run — "
+                    f"preempted?)")
             return wid, kind, detail
 
     def _await(self, kind: str, need: set, ignore: tuple = ()) -> None:
@@ -502,6 +532,85 @@ class MasterServer:
                     f"protocol violation: expected {kind} from {pending}, "
                     f"got {got} from worker {wid}")
             pending.discard(wid)
+
+    # -- live telemetry plane (obs.live) -------------------------------------
+
+    def _start_live(self, listener: socket.socket, token: str) -> None:
+        """Telemetry on: build the LiveMonitor, point every link's
+        heartbeat hook at its store (push — every telemetry-bearing
+        HEARTBEAT becomes samples), and start the sampler + STATS-acceptor
+        threads. Telemetry off (default) never reaches here: no store, no
+        threads, no timestamps — the zero-overhead pin stays intact."""
+        cfg = self.cfg
+        self.counters.counter("health_events")
+        self.live = obs_live.LiveMonitor(
+            cfg.n_workers, deadline_factor=cfg.straggler_factor,
+            hb_interval_s=cfg.hb_interval_s,
+            jsonl_path=cfg.telemetry_jsonl,
+            counters=self.counters,
+            meta={"algorithm": cfg.algorithm, "transport": "tcp",
+                  "schedule": self.sched_name
+                  + ("+p2p" if self.sync_p2p else "")})
+        for wid, link in self.links.items():
+            link.hb_hook = (lambda payload, w=wid:
+                            self.live.ingest_hb(w, payload))
+        for target, args in ((self._live_sampler, ()),
+                             (self._stats_acceptor, (listener, token))):
+            th = threading.Thread(target=target, args=args, daemon=True)
+            th.start()
+            self._threads.append(th)
+
+    def _live_sampler(self) -> None:
+        """Periodic master-side pass: per-link heartbeat age + per-link
+        ef_ratio into the store, aggregate gauges under wid −1, one
+        detector pass (straggler / hb_stale events)."""
+        period = self.cfg.telemetry_period_s()
+        while not self._closing.wait(period):
+            now = time.monotonic()
+            staleness = {w: round(now - link.last_seen, 3)
+                         for w, link in self.links.items()}
+            for w, link in self.links.items():
+                ratio = link.ef_ratio()
+                if ratio is not None:
+                    self.live.ingest_hb(w, {"ef_ratio": round(ratio, 2)})
+            gauges = {k: v for k, v in self.counters.snapshot().items()
+                      if isinstance(v, (int, float))}
+            gauges["iters"] = self.iters
+            self.live.sample(staleness=staleness, gauges=gauges)
+
+    def _stats_acceptor(self, listener: socket.socket, token: str) -> None:
+        """Serve STATS snapshots on the rendezvous listener AFTER
+        rendezvous (every training link is connected by now, so any new
+        connection is a monitor). One request per connection:
+        STATS{"token","k"} in, STATS snapshot out, close."""
+        while not self._closing.is_set():
+            try:
+                conn, _ = listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return                   # listener closed at shutdown
+            client = None
+            try:
+                conn.settimeout(5.0)
+                client = Link(conn)
+                frame = client.recv_header()
+                if frame.ftype != wire.STATS:
+                    continue
+                req = client.recv_json(frame)
+                if req.get("token") != token:
+                    client.send_json(wire.ERROR, {"msg": "bad token"})
+                    continue
+                client.send_json(
+                    wire.STATS,
+                    self.live.snapshot(int(req.get("k", 32))))
+            except (socket.timeout, wire.WireError, OSError, ValueError):
+                pass
+            finally:
+                if client is not None:
+                    client.close()
+                else:
+                    conn.close()
 
     # -- eval ----------------------------------------------------------------
 
@@ -545,10 +654,10 @@ class MasterServer:
         """Round-robin with compute-in-turn: WEIGHTS go out only when the
         turn arrives, so the wire itself serializes the whole pipeline."""
         e, cfg = self.easgd, self.cfg
-        t_down, t_up = self._t_msg_pair()
         n_turns = -(-cfg.total_iters // self.tau)
         for turn in range(n_turns):
             j = turn % cfg.n_workers
+            t_down, t_up = self._t_msg_pair(j)
             deadline = time.monotonic() + t_down
             self._send_weights(j)
             if t_down:
@@ -568,14 +677,13 @@ class MasterServer:
         absorbs in strict cyclic order — the DES zero-jitter event order,
         hence bitwise-identical weights to the thread transport."""
         e, cfg = self.easgd, self.cfg
-        t_down, t_up = self._t_msg_pair()
-        t_pair = t_down + t_up
         ready = [False] * cfg.n_workers
         for wid in self.links:
             self._send_weights(wid)
         turn = 0
         while self.iters < cfg.total_iters:
             j = turn % cfg.n_workers
+            t_pair = sum(self._t_msg_pair(j))
             while not ready[j]:
                 wid, kind, _ = self._next_event(self.timeout)
                 assert kind == "grad", kind
@@ -600,14 +708,13 @@ class MasterServer:
         reservation as the thread transport, slept inline because here the
         master really is the link's endpoint)."""
         e, cfg = self.easgd, self.cfg
-        t_down, t_up = self._t_msg_pair()
-        t_pair = t_down + t_up
         wire_free_at = 0.0
         for wid in self.links:
             self._send_weights(wid)
         while self.iters < cfg.total_iters:
             j, kind, _ = self._next_event(self.timeout)
             assert kind == "grad", kind
+            t_pair = sum(self._t_msg_pair(j))
             deadline = None
             if t_pair:
                 start = max(time.monotonic(), wire_free_at)
@@ -632,8 +739,7 @@ class MasterServer:
         Per-worker quotas mirror the thread transport's termination."""
         e, cfg = self.easgd, self.cfg
         P, total = cfg.n_workers, cfg.total_iters
-        t_down, t_up = self._t_msg_pair()
-        t_pair = t_down + t_up
+        t_pairs = [sum(self._t_msg_pair(w)) for w in range(P)]
         quota = [(total // P + (1 if w < total % P else 0)) for w in range(P)]
         target = [-(-q // self.tau) for q in quota]   # exchanges per worker
         done = [0] * P
@@ -641,13 +747,23 @@ class MasterServer:
         stop = threading.Event()
 
         def _delayed_sender():
+            # deadline heap, not FIFO: with per-link pacing (link_slow) a
+            # slow worker's long reservation must not head-of-line block
+            # the fast workers' short ones — each reply releases at ITS
+            # deadline (equal pacing made FIFO coincide with this; unequal
+            # pacing does not)
+            pend: list = []
             while not stop.is_set():
+                timeout = (max(0.0, min(pend[0][0] - time.monotonic(), 0.2))
+                           if pend else 0.2)
                 try:
-                    deadline, w = replies.get(timeout=0.2)
+                    heapq.heappush(pend, replies.get(timeout=timeout))
                 except queue.Empty:
-                    continue
-                sleep_until(deadline)
-                self._send_weights(w)
+                    pass
+                now = time.monotonic()
+                while pend and pend[0][0] <= now:
+                    _, w = heapq.heappop(pend)
+                    self._send_weights(w)
 
         sender = threading.Thread(target=_delayed_sender, daemon=True)
         sender.start()
@@ -658,7 +774,7 @@ class MasterServer:
                 j, kind, _ = self._next_event(self.timeout)
                 assert kind == "grad", kind
                 grad = self._absorb_upload(j)
-                deadline = time.monotonic() + t_pair
+                deadline = time.monotonic() + t_pairs[j]
                 easgd_flat.master_absorb(
                     cfg.algorithm, self.center, self.master_vel,
                     self.workers_w[j], self.workers_v[j], grad, e)
@@ -666,7 +782,7 @@ class MasterServer:
                 self.iters += self.tau
                 self._maybe_eval()
                 if done[j] < target[j]:
-                    if t_pair:
+                    if t_pairs[j]:
                         replies.put((deadline, j))
                     else:
                         self._send_weights(j)
@@ -684,7 +800,11 @@ class MasterServer:
         algo, P, n = cfg.algorithm, cfg.n_workers, self.n
         all_wids = set(self.links)
         n_rounds = self._n_sync_rounds()
-        t_wire = self._t_sync_wire()
+        # the centralized exchange is one barriered pipeline: a slow link
+        # slows the whole round, so link_slow stretches the shared pacing
+        # by the worst factor (per-worker divergence needs p2p/async)
+        t_wire = self._t_sync_wire() * (max(self.cfg.link_slow)
+                                        if self.cfg.link_slow else 1.0)
         tr = self.tracer
         _pc = time.perf_counter
         for _ in range(n_rounds):
@@ -792,9 +912,12 @@ class MasterServer:
         self._procs = procs or []
         try:
             self.rendezvous(listener, token)
+            if self.cfg.telemetry_on:
+                self._start_live(listener, token)
             self.serve()
             total_time = time.perf_counter() - self._t0
             self._maybe_eval(force=True)
+            self._draining = True        # BYEs are expected from here on
             for link in self.links.values():
                 link.send_simple(wire.DONE)
             self._await("bye", set(self.links),
@@ -863,6 +986,10 @@ class MasterServer:
                 for i, v in enumerate(st.get("bucket_send_bytes", [])):
                     bucket_bytes[i] += int(v)
             counters["bucket_send_bytes"] = bucket_bytes
+        health = None
+        if self.live is not None:
+            health = self.live.health()
+            self.live.close()
         trace = self._collect_trace() if self.cfg.trace else None
         return PSResult(
             algorithm=self.cfg.algorithm, transport="tcp",
@@ -874,7 +1001,7 @@ class MasterServer:
             counters=counters,
             final_metric=self.history[-1][2],
             center=self.center.copy(), workers=self.workers_w.copy(),
-            trace=trace)
+            trace=trace, health=health)
 
     def _collect_trace(self):
         """Merge the workers' BYE-delivered (or spilled) trace buffers with

@@ -74,12 +74,17 @@ CENTER = 13         # p2p control plane: worker 0 → master, the center
 CLOCK = 14          # clock-sync probe (obs.clock): empty worker→master ping,
 #                     master echoes {"t": perf_counter()} — offset = t −
 #                     (t0+t1)/2 at min rtt aligns trace timelines
+STATS = 15          # live-telemetry snapshot request (obs.live): a monitor
+#                     client connects to the master's listener after
+#                     rendezvous, sends {"token", "k"}, receives one JSON
+#                     LiveMonitor.snapshot(k) back, and the connection
+#                     closes — read-only, off the training links entirely
 
 FRAME_NAMES = {HELLO: "HELLO", WELCOME: "WELCOME", READY: "READY",
                WEIGHTS: "WEIGHTS", GRAD: "GRAD", WSTATE: "WSTATE",
                HEARTBEAT: "HEARTBEAT", DONE: "DONE", BYE: "BYE",
                ERROR: "ERROR", SEGMENT: "SEGMENT", PEERS: "PEERS",
-               CENTER: "CENTER", CLOCK: "CLOCK"}
+               CENTER: "CENTER", CLOCK: "CLOCK", STATS: "STATS"}
 
 CODEC_NONE = 0
 CODEC_SIGN_EF = 1
@@ -155,6 +160,11 @@ class Link:
         self.hb_telemetry: dict = {}        # last HEARTBEAT payload (worker
         #                                     iteration-rate / exposed-comm
         #                                     gauges — see net/worker.py)
+        self.hb_hook = None                 # optional callable(payload):
+        #                                     fires on the receiving thread
+        #                                     for every telemetry-bearing
+        #                                     HEARTBEAT (obs.live feeds its
+        #                                     time-series store push-style)
         self.raw_bytes_out = 0              # pre-codec payload bytes encoded
         self.wire_bytes_out = 0             # post-codec payload bytes encoded
         self._send_lock = threading.Lock()
@@ -288,6 +298,9 @@ class Link:
                             bytes(self.recv_payload(frame)).decode())
                     except ValueError:
                         pass
+                    else:
+                        if self.hb_hook is not None:
+                            self.hb_hook(self.hb_telemetry)
                 continue
             return frame
 

@@ -47,6 +47,7 @@ from types import SimpleNamespace
 import numpy as np
 
 from repro.core import easgd_flat
+from repro.ft.watchdog import Watchdog
 from repro.net import wire
 from repro.net.peer import PeerMesh
 from repro.net.wire import Link, sleep_until
@@ -73,10 +74,31 @@ def _build_problem(factory: str, kwargs):
     return fn(**dict((k, v) for k, v in kwargs))
 
 
+def _drain_after_bye(link: Link, timeout_s: float = 5.0) -> None:
+    """After a mid-run BYE, read (and discard) until the master hangs up.
+    Closing our end first with unread frames in the receive buffer would
+    RST the connection and can destroy the master's still-unread BYE —
+    the clean departure would then look like a dead socket."""
+    try:
+        link.sock.settimeout(timeout_s)
+        while True:
+            link.recv_discard(link.recv_header())
+    except (OSError, wire.WireError):
+        pass
+
+
 def worker_loop(host: str, port: int, wid: int,
                 token: str = "repro-net", timeout_s: float = 600.0,
                 peer_host: str | None = None, peer_port: int = 0,
-                sync_plane: str = "auto") -> None:
+                sync_plane: str = "auto",
+                heartbeat_file: str | None = None) -> None:
+    # preemption plane: SIGTERM/SIGINT set a flag the train loops poll at
+    # exchange boundaries — the worker then flushes its trace/telemetry in
+    # a clean BYE instead of vanishing mid-frame. The optional heartbeat
+    # file lets an external supervisor (launch/cluster --heartbeat-file)
+    # tell a hung interpreter from a slow one.
+    wd = Watchdog(heartbeat_path=heartbeat_file, interval_s=2.0)
+    wd.start_heartbeat()
     link = Link(_connect(host, port))
     link.sock.settimeout(timeout_s)
     # the peer listener binds BEFORE HELLO so its port can ride in it
@@ -175,7 +197,8 @@ def worker_loop(host: str, port: int, wid: int,
         if p2p:
             _p2p_sync_loop(link, mesh, cfg, grad_fn,
                            np.asarray(w0, np.float64), wid, local_cfg,
-                           tr=tr, telem=telem, bye_wrap=_bye_stats)
+                           tr=tr, telem=telem, bye_wrap=_bye_stats,
+                           watchdog=wd)
             return
     except BaseException as exc:                 # noqa: BLE001 — tell master
         try:
@@ -186,6 +209,7 @@ def worker_loop(host: str, port: int, wid: int,
     finally:
         if p2p:
             stop_hb.set()
+            wd.close()
             if mesh is not None:
                 mesh.close()
             link.close()
@@ -195,6 +219,13 @@ def worker_loop(host: str, port: int, wid: int,
     _pc = time.perf_counter
     try:
         while True:
+            if wd.should_stop.is_set():
+                # preempted: flush traces/telemetry and leave cleanly —
+                # the master surfaces this as a named worker_left event
+                link.send_json(wire.BYE, _bye_stats(
+                    {"preempted": True, "iters": telem["iters"]}), wid=wid)
+                _drain_after_bye(link)
+                return
             if tr is not None:
                 t0 = _pc()
             frame = link.recv_header()
@@ -253,12 +284,14 @@ def worker_loop(host: str, port: int, wid: int,
         raise
     finally:
         stop_hb.set()
+        wd.close()
         link.close()
 
 
 def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
                    w0: np.ndarray, wid: int, local_cfg,
-                   tr=None, telem=None, bye_wrap=None) -> None:
+                   tr=None, telem=None, bye_wrap=None,
+                   watchdog=None) -> None:
     """The p2p sync family: this worker executes its share of the
     registry's rounds over the peer mesh and advances its OWN center
     replica — bitwise in lockstep with every other worker and with the
@@ -425,6 +458,15 @@ def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
 
     step = 0
     for k in range(n_rounds):
+        if watchdog is not None and watchdog.should_stop.is_set():
+            # preempted between rounds: the mesh is only safe to leave at
+            # a round boundary (peers block on our segments mid-exchange)
+            stats = {"preempted": True, "iters": step}
+            if bye_wrap is not None:
+                stats = bye_wrap(stats)
+            link.send_json(wire.BYE, stats, wid=wid)
+            _drain_after_bye(link)
+            return
         if tau > 1:
             t0 = time.perf_counter()
             for _ in range(tau - 1):             # τ−1 local-only steps
@@ -533,6 +575,10 @@ def main(argv=None):
     ap.add_argument("--peer-host", default=None,
                     help="address to advertise for the peer listener "
                          "(default: the local endpoint of the master link)")
+    ap.add_argument("--heartbeat-file", default=None,
+                    help="touch this file every ~2 s so an external "
+                         "supervisor can detect a hung worker "
+                         "(ft.Watchdog.is_alive)")
     ap.add_argument("--burn", default=None, metavar="SPEC_JSON",
                     help="calibration mode: measure this interpreter's "
                          "concurrent gradient rate instead of training")
@@ -546,7 +592,8 @@ def main(argv=None):
     host, port = args.connect.rsplit(":", 1)
     worker_loop(host, int(port), args.wid, token=args.token,
                 timeout_s=args.timeout, peer_host=args.peer_host,
-                peer_port=args.peer_port, sync_plane=args.sync_plane)
+                peer_port=args.peer_port, sync_plane=args.sync_plane,
+                heartbeat_file=args.heartbeat_file)
 
 
 if __name__ == "__main__":

@@ -11,11 +11,28 @@ Three small jax-free modules threaded through every layer of the runtime:
    the one definition of schedule-level exchange accounting.
  * ``obs.report``  — trace merging, the measured Table-3 breakdown
    (compute% / exposed-comm% / update%), and Chrome-trace/Perfetto export.
+ * ``obs.live``    — the streaming plane: per-(wid, metric) ring-buffer
+   time series fed by heartbeats + master gauges, the online
+   straggler/health detector (``ft.straggler`` math on real telemetry),
+   and the snapshot the STATS frame / ``launch.monitor`` renders.
+ * ``obs.regress`` — the BENCH_*.json perf-regression gate
+   (``python -m repro.obs.regress BASELINE CURRENT``).
 
-Turn it on with ``PSConfig(trace=True)`` (CLI: ``--trace``); the merged
-trace comes back on ``PSResult.trace`` with a ``report`` section attached.
-See DESIGN.md §obs for the span taxonomy and overhead budget.
+Turn tracing on with ``PSConfig(trace=True)`` (CLI: ``--trace``); the
+merged trace comes back on ``PSResult.trace`` with a ``report`` section
+attached. Turn the live plane on with ``PSConfig(telemetry=True)`` /
+``telemetry_jsonl=...`` (CLI: ``--telemetry[-jsonl]``); health events come
+back on ``PSResult.health``. See DESIGN.md §obs for the span taxonomy,
+the live-plane layout, and the overhead budget.
 """
-from repro.obs import clock, metrics, report, trace  # noqa: F401
+import importlib
 
-__all__ = ["clock", "metrics", "report", "trace"]
+__all__ = ["clock", "live", "metrics", "regress", "report", "trace"]
+
+
+def __getattr__(name):
+    # PEP 562 lazy submodules: keeps `python -m repro.obs.regress` free of
+    # runpy's found-in-sys.modules warning and imports only what's touched.
+    if name in __all__:
+        return importlib.import_module(f"repro.obs.{name}")
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")

@@ -128,6 +128,33 @@ class PSConfig:
     #                                  always spill; a temp dir is made if
     #                                  unset). Assumes a filesystem the
     #                                  master can read (localhost / NFS)
+    # -- live telemetry plane (obs.live) ------------------------------------
+    telemetry: bool = False          # stream heartbeat telemetry + master
+    #                                  gauges into a ring-buffer time-series
+    #                                  store, run the online straggler /
+    #                                  health detector, serve STATS frames
+    #                                  (tcp) and attach PSResult.health.
+    #                                  Off by default: no store, no sampler
+    #                                  thread, no acceptor — zero work
+    telemetry_jsonl: Optional[str] = None    # stream one JSON line per
+    #                                  sample to this path (implies
+    #                                  telemetry; offline analysis /
+    #                                  launch.monitor --from-jsonl)
+    telemetry_interval_s: float = 0.0        # sampler/detector period;
+    #                                  0 = follow hb_interval_s (one
+    #                                  detector pass per heartbeat)
+    straggler_factor: float = 2.0    # health detector deadline: flag a
+    #                                  worker whose per-iteration delay
+    #                                  exceeds this × the median
+    #                                  (ft.straggler.BoundedStaleness)
+    link_slow: Optional[tuple] = None        # per-wid emulated-wire
+    #                                  multipliers (len n_workers, ≥1.0):
+    #                                  worker i's master-link / p2p pacing
+    #                                  deadlines stretch by link_slow[i] —
+    #                                  a controlled straggler for testing
+    #                                  detection (tcp + emulate_net only;
+    #                                  clock-plane only, the math is
+    #                                  untouched)
 
     def __post_init__(self):
         assert self.algorithm in ALGORITHMS, self.algorithm
@@ -156,6 +183,32 @@ class PSConfig:
             f"algorithm (got transport='{self.transport}', "
             f"algorithm='{self.algorithm}') — only the sync family "
             f"executes Schedule.rounds, and only repro.net has peer links")
+        assert self.telemetry_interval_s >= 0.0, self.telemetry_interval_s
+        assert self.straggler_factor > 1.0, self.straggler_factor
+        if self.link_slow is not None:
+            assert self.transport == "tcp", (
+                "link_slow stretches per-link wire pacing — only the tcp "
+                f"transport has per-worker links (transport="
+                f"'{self.transport}')")
+            assert self.emulate_net is not None, (
+                "link_slow multiplies EMULATED wire time; without "
+                "emulate_net there is no pacing to stretch")
+            assert len(self.link_slow) == self.n_workers, (
+                f"link_slow needs one factor per worker "
+                f"({len(self.link_slow)} != {self.n_workers})")
+            assert all(f >= 1.0 for f in self.link_slow), self.link_slow
+
+    @property
+    def telemetry_on(self) -> bool:
+        return self.telemetry or self.telemetry_jsonl is not None
+
+    def telemetry_period_s(self) -> float:
+        return self.telemetry_interval_s or self.hb_interval_s
+
+    def link_slow_factor(self, wid: int) -> float:
+        if self.link_slow is None:
+            return 1.0
+        return float(self.link_slow[wid])
 
     def resolved_schedule(self, n_bytes: float) -> str:
         if self.schedule == "auto":
@@ -184,6 +237,12 @@ class PSResult:
     trace: Optional[dict] = None     # cfg.trace: the merged, clock-aligned
     #                                  timeline (obs.report.merge_traces
     #                                  shape) with a "report" breakdown
+    health: Optional[dict] = None    # cfg.telemetry: the live plane's
+    #                                  summary — structured health events
+    #                                  (straggler / hb_stale / recovered /
+    #                                  worker_left), currently-flagged
+    #                                  workers, final per-worker telemetry
+    #                                  (obs.live.LiveMonitor.health())
 
 
 # ---------------------------------------------------------------------------
@@ -705,6 +764,29 @@ def run_ps(problem, easgd: EASGDConfig, cfg: PSConfig,
     t0 = time.perf_counter()
     history, last_eval = [], 0
     deadline = t0 + join_timeout_s
+    # live telemetry (obs.live): the shared-memory transports have no
+    # per-worker heartbeats, so the launcher poll loop samples AGGREGATE
+    # gauges only (store wid −1) — per-worker series and straggler
+    # detection need per-worker links, i.e. the tcp transport
+    live = None
+    if cfg.telemetry_on:
+        from repro.obs import live as obs_live
+        live = obs_live.LiveMonitor(
+            P, deadline_factor=cfg.straggler_factor,
+            hb_interval_s=cfg.hb_interval_s,
+            jsonl_path=cfg.telemetry_jsonl,
+            meta={"algorithm": cfg.algorithm, "transport": cfg.transport})
+        live_period = cfg.telemetry_period_s()
+        next_sample = time.monotonic() + live_period
+
+    def _live_gauges():
+        el = max(time.perf_counter() - t0, 1e-9)
+        return {"iters": ctx.iters.value,
+                "rate_ips": round(ctx.iters.value / el, 2),
+                "wire_bytes": ctx.wire_bytes.value,
+                "messages": ctx.messages.value,
+                "sync_rounds": ctx.sync_rounds.value}
+
     while any(h.is_alive() for h in handles):
         if ctx.err.value:
             break
@@ -713,6 +795,9 @@ def run_ps(problem, easgd: EASGDConfig, cfg: PSConfig,
             history.append((time.perf_counter() - t0, it,
                             float(eval_fn(v.center.copy()))))
             last_eval = it
+        if live is not None and time.monotonic() >= next_sample:
+            live.sample(gauges=_live_gauges())
+            next_sample += live_period
         if time.perf_counter() > deadline:
             break
         time.sleep(1e-3)
@@ -734,15 +819,22 @@ def run_ps(problem, easgd: EASGDConfig, cfg: PSConfig,
     final = float(eval_fn(v.center.copy()))
     history.append((total_time, total_iters, final))
     trace = _collect_local_trace(cfg, tr.name, P) if cfg.trace else None
+    counters = {"sync_rounds": ctx.sync_rounds.value,
+                "messages": ctx.messages.value,
+                "wire_bytes": ctx.wire_bytes.value}
+    health = None
+    if live is not None:
+        live.sample(gauges=_live_gauges())   # final sample at end state
+        health = live.health()
+        counters["health_events"] = len(health["events"])
+        live.close()
     return PSResult(
         algorithm=cfg.algorithm, transport=cfg.transport,
         schedule=sched_name if cfg.algorithm in SYNC else "master",
         history=history, total_time_s=total_time, total_iters=total_iters,
-        counters={"sync_rounds": ctx.sync_rounds.value,
-                  "messages": ctx.messages.value,
-                  "wire_bytes": ctx.wire_bytes.value},
+        counters=counters,
         final_metric=final, center=v.center.copy(),
-        workers=v.workers_w.copy(), trace=trace)
+        workers=v.workers_w.copy(), trace=trace, health=health)
 
 
 def _collect_local_trace(cfg: PSConfig, transport: str, P: int):

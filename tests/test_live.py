@@ -1,0 +1,432 @@
+"""repro.obs.live + repro.obs.regress + the worker preemption plane.
+
+ 1. Store primitives: ring wraparound, TimeSeries tail, sparklines.
+ 2. HealthDetector units: uniform rates never flag; a slowed worker flags
+    after ``strikes`` consecutive passes and recovers; heartbeat silence
+    flags; rate math waits until every worker is actually iterating.
+ 3. End-to-end: a real 3-worker tcp run with ONE link slowed 8x under the
+    emulated wire produces a straggler event naming that wid within a few
+    heartbeat intervals (``PSResult.health`` + ``counters``); a uniform
+    run stays quiet; ``link_slow`` changes the clock, never the math
+    (bitwise pin); telemetry off (default) attaches nothing.
+ 4. STATS/monitor: ``launch.monitor.fetch_stats`` against a live master
+    mid-run, ``obs.live.render`` output, the --telemetry-jsonl stream and
+    its offline --from-jsonl rendering.
+ 5. Preemption: SIGTERM mid-run → clean BYE → the master raises a
+    structured error naming the worker; the worker exits 0 and its
+    --heartbeat-file was being touched.
+ 6. obs.regress: self-comparison passes, a synthetic 2x iters/s drop
+    fails (direction-aware), --warn-only and history-dir modes.
+"""
+import json
+import os
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import ps
+from repro.core import costmodel
+from repro.core.easgd import EASGDConfig
+from repro.launch import monitor
+from repro.obs import live, regress
+
+CFG = EASGDConfig(eta=0.05, rho=0.07, mu=0.9)
+NET = costmodel.Network("tiny-emu", 5e-3, 1e-9)
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+# ---------------------------------------------------------------------------
+# (1) store primitives
+# ---------------------------------------------------------------------------
+
+def test_ring_wraparound_keeps_newest_in_order():
+    r = live.Ring(capacity=4)
+    for i in range(6):
+        r.push(float(i), float(i * 10))
+    assert r.n == 4
+    t, v = r.values()
+    assert list(t) == [2.0, 3.0, 4.0, 5.0]
+    assert list(v) == [20.0, 30.0, 40.0, 50.0]
+    assert r.last() == (5.0, 50.0)
+
+
+def test_ring_partial_fill():
+    r = live.Ring(capacity=8)
+    assert r.last() is None
+    r.push(1.0, 2.0)
+    t, v = r.values()
+    assert list(t) == [1.0] and list(v) == [2.0]
+
+
+def test_timeseries_store_tail_and_nonnumeric():
+    ts = live.TimeSeries(capacity=4)
+    for i in range(6):
+        ts.record(0, "rate_ips", i, float(i))
+    ts.record(1, "iters", 7, 0.5)
+    ts.record(0, "note", "not-a-number", 1.0)   # silently dropped
+    assert ts.wids() == [0, 1]
+    assert ts.metrics(0) == ["rate_ips"]
+    assert ts.last(0, "rate_ips") == 5.0
+    assert ts.last(0, "nope") is None
+    tail = ts.tail(k=2)
+    assert tail[0]["rate_ips"] == [[4.0, 4.0], [5.0, 5.0]]
+    assert tail[1]["iters"] == [[0.5, 7.0]]
+
+
+def test_sparkline():
+    s = live.sparkline([0, 1, 2, 3])
+    assert len(s) == 4
+    assert s[0] == live._SPARK[0] and s[-1] == live._SPARK[-1]
+    assert live.sparkline([]) == ""
+    assert live.sparkline([5, 5]) == live._SPARK[3] * 2   # flat series
+    assert len(live.sparkline(range(100), width=24)) == 24
+
+
+# ---------------------------------------------------------------------------
+# (2) detector units
+# ---------------------------------------------------------------------------
+
+def test_detector_uniform_rates_never_flag():
+    det = live.HealthDetector(3, deadline_factor=2.0, stale_after_s=5.0)
+    for i in range(50):
+        evs = det.observe(float(i), {0: 10.0, 1: 10.2, 2: 9.8},
+                          {0: 0.1, 1: 0.1, 2: 0.1})
+        assert evs == []
+    assert det.flagged == {}
+
+
+def test_detector_flags_slow_worker_after_strikes_then_recovers():
+    det = live.HealthDetector(3, deadline_factor=2.0, strikes=2)
+    slow = {0: 10.0, 1: 10.0, 2: 2.0}
+    assert det.observe(0.0, slow, {}) == []        # strike 1: debounced
+    evs = det.observe(1.0, slow, {})               # strike 2: flag
+    assert len(evs) == 1
+    assert evs[0]["kind"] == "straggler" and evs[0]["wid"] == 2
+    assert evs[0]["rate_ips"] == 2.0
+    assert det.flagged == {2: "straggler"}
+    assert det.observe(2.0, slow, {}) == []        # steady state: no re-emit
+    evs = det.observe(3.0, {0: 10.0, 1: 10.0, 2: 9.5}, {})
+    assert evs[0]["kind"] == "recovered" and evs[0]["wid"] == 2
+    assert det.flagged == {}
+
+
+def test_detector_waits_for_every_rate():
+    # during problem build one worker reports rate 0 — median math over a
+    # partial fleet would be meaningless, so no straggler verdicts yet
+    det = live.HealthDetector(3, strikes=1)
+    assert det.observe(0.0, {0: 10.0, 1: 10.0, 2: 0.0}, {}) == []
+    assert det.observe(1.0, {0: 10.0, 1: 10.0, 2: None}, {}) == []
+    assert det.flagged == {}
+
+
+def test_detector_heartbeat_silence_flags():
+    det = live.HealthDetector(2, stale_after_s=1.0, strikes=2)
+    assert det.observe(0.0, {}, {0: 0.1, 1: 5.0}) == []
+    evs = det.observe(1.0, {}, {0: 0.1, 1: 6.0})
+    assert evs == [{"t": 1.0, "kind": "hb_stale", "wid": 1,
+                    "hb_age_s": 6.0}]
+    assert det.flagged == {1: "hb_stale"}
+
+
+def test_live_monitor_counts_events_and_streams_jsonl(tmp_path):
+    from repro.obs import metrics
+    reg = metrics.Registry()
+    path = str(tmp_path / "t.jsonl")
+    # 3 workers: with only 2 the straggler itself drags the median past
+    # its own delay, so a median-deadline policy can never flag it
+    mon = live.LiveMonitor(3, hb_interval_s=0.1, jsonl_path=path,
+                           counters=reg, meta={"algorithm": "unit"})
+    mon.ingest_hb(0, {"iters": 10, "rate_ips": 10.0})
+    mon.ingest_hb(1, {"iters": 10, "rate_ips": 10.0})
+    mon.ingest_hb(2, {"iters": 1, "rate_ips": 1.0})
+    for _ in range(2):                             # strikes=2 default
+        mon.sample(staleness={0: 0.0, 1: 0.0, 2: 0.0},
+                   gauges={"iters": 21})
+    mon.mark_worker_event(1, "worker_left", "test")
+    snap = mon.snapshot(k=4)
+    mon.close()
+    kinds = [e["kind"] for e in snap["events"]]
+    assert "straggler" in kinds and "worker_left" in kinds
+    assert reg.counter("health_events").value == len(snap["events"])
+    assert snap["gauges"]["iters"] == 21.0
+    assert snap["workers"][2]["rate_ips"][-1][1] == 1.0
+    lines = [json.loads(x) for x in open(path)]
+    assert len(lines) == 3          # eager run-header + 2 samples
+    assert lines[0]["meta"] == {"algorithm": "unit"} \
+        and "workers" not in lines[0]
+    assert lines[1]["workers"]["0"]["rate_ips"] == 10.0
+
+
+# ---------------------------------------------------------------------------
+# (3) end-to-end: a real straggler on a real wire
+# ---------------------------------------------------------------------------
+
+def _live_cfg(link_slow, iters=240, **kw):
+    # hogwild: each worker's reply deadline overlaps the others', so a
+    # per-link pacing stretch becomes a genuine per-worker rate divergence
+    return ps.PSConfig(algorithm="hogwild_easgd", n_workers=3,
+                       total_iters=iters, transport="tcp", schedule="ring",
+                       eval_every_iters=10**9, emulate_net=NET,
+                       link_slow=link_slow, hb_interval_s=0.2, **kw)
+
+
+def test_tcp_straggler_detected_and_named():
+    res = ps.run_ps(ps.NUMPY_MLP, CFG,
+                    _live_cfg((1.0, 1.0, 8.0), telemetry=True))
+    assert res.health is not None
+    stragglers = [e for e in res.health["events"]
+                  if e["kind"] == "straggler"]
+    assert stragglers, res.health["events"]
+    assert all(e["wid"] == 2 for e in stragglers)
+    # detection latency: strikes=2 at heartbeat-period sampling ⇒ the flag
+    # lands 2 heartbeat intervals after divergence is first observable
+    # (rates need one hb round to become positive; allow CI jitter)
+    assert stragglers[0]["t"] <= 6 * 0.2 + 0.1, stragglers[0]
+    assert stragglers[0]["rate_ips"] < stragglers[0]["median_rate_ips"]
+    assert res.counters["health_events"] == len(res.health["events"])
+    assert set(res.health["workers"]) == {0, 1, 2}
+
+
+def test_tcp_uniform_run_stays_quiet():
+    res = ps.run_ps(ps.NUMPY_MLP, CFG, _live_cfg(None, iters=120,
+                                                 telemetry=True))
+    bad = [e for e in res.health["events"]
+           if e["kind"] in ("straggler", "hb_stale")]
+    assert bad == [], bad
+    assert res.counters["health_events"] == 0
+    assert set(res.health["workers"]) == {0, 1, 2}
+    assert all(m["iters"] == 40.0 for m in res.health["workers"].values())
+
+
+def test_link_slow_changes_clock_not_math():
+    def det_run(transport, **kw):
+        cfg = ps.PSConfig(algorithm="async_easgd", n_workers=3,
+                          total_iters=36, transport=transport,
+                          schedule="round_robin", deterministic=True,
+                          eval_every_iters=10**9, **kw)
+        return ps.run_ps(ps.NUMPY_MLP, CFG, cfg)
+    a = det_run("thread")
+    b = det_run("tcp", emulate_net=NET, link_slow=(1.0, 1.0, 3.0))
+    np.testing.assert_array_equal(a.center, b.center)
+    np.testing.assert_array_equal(a.workers, b.workers)
+
+
+def test_telemetry_off_is_the_default_and_attaches_nothing():
+    cfg = ps.PSConfig(algorithm="async_easgd", n_workers=2, total_iters=20,
+                      transport="thread", eval_every_iters=10**9)
+    assert not cfg.telemetry_on
+    res = ps.run_ps(ps.NUMPY_MLP, CFG, cfg)
+    assert res.health is None
+    assert "health_events" not in res.counters
+
+
+def test_shared_memory_transport_gets_aggregate_telemetry(tmp_path):
+    # no per-worker heartbeats off-wire: aggregate gauges only, no flags
+    path = str(tmp_path / "thread.jsonl")
+    cfg = ps.PSConfig(algorithm="async_easgd", n_workers=2, total_iters=200,
+                      transport="thread", eval_every_iters=10**9,
+                      telemetry_jsonl=path, telemetry_interval_s=0.01)
+    res = ps.run_ps(ps.NUMPY_MLP, CFG, cfg)
+    assert res.health is not None
+    assert res.health["n_samples"] >= 1
+    assert res.health["events"] == []
+    assert res.counters["health_events"] == 0
+    rec = [json.loads(x) for x in open(path)][-1]
+    assert rec["gauges"]["iters"] == 200
+
+
+def test_link_slow_validation():
+    with pytest.raises(AssertionError, match="tcp"):
+        ps.PSConfig(algorithm="async_easgd", transport="thread",
+                    n_workers=2, link_slow=(1.0, 2.0))
+    with pytest.raises(AssertionError, match="emulate"):
+        ps.PSConfig(algorithm="async_easgd", transport="tcp",
+                    n_workers=2, link_slow=(1.0, 2.0))
+    with pytest.raises(AssertionError, match="one factor per worker"):
+        ps.PSConfig(algorithm="async_easgd", transport="tcp", n_workers=3,
+                    emulate_net=NET, link_slow=(1.0, 2.0))
+    with pytest.raises(AssertionError):
+        ps.PSConfig(algorithm="async_easgd", transport="tcp", n_workers=2,
+                    emulate_net=NET, link_slow=(1.0, 0.5))
+
+
+# ---------------------------------------------------------------------------
+# (4) STATS frame + monitor
+# ---------------------------------------------------------------------------
+
+def test_monitor_fetches_and_renders_a_live_run(tmp_path):
+    port = _free_port()
+    jsonl = str(tmp_path / "telem.jsonl")
+    cfg = _live_cfg((1.0, 1.0, 8.0), telemetry=True,
+                    telemetry_jsonl=jsonl, tcp_port=port)
+    snaps, token_errs = [], []
+
+    def _poll():
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            try:
+                snap = monitor.fetch_stats("127.0.0.1", port, k=8)
+            except OSError:
+                time.sleep(0.1)          # master still in rendezvous
+                continue
+            snaps.append(snap)
+            if snap.get("n_samples", 0) >= 3:
+                try:
+                    monitor.fetch_stats("127.0.0.1", port, token="wrong")
+                    token_errs.append(None)
+                except RuntimeError as exc:
+                    token_errs.append(exc)
+                return
+            time.sleep(0.2)
+
+    th = threading.Thread(target=_poll, daemon=True)
+    th.start()
+    res = ps.run_ps(ps.NUMPY_MLP, CFG, cfg)
+    th.join(timeout=10)
+    assert res.total_iters == 240
+    assert snaps, "monitor never fetched a STATS snapshot mid-run"
+    snap = snaps[-1]
+    assert snap["meta"]["algorithm"] == "hogwild_easgd"
+    assert snap["meta"]["transport"] == "tcp"
+    # JSON round trip stringifies wid keys; render handles both
+    assert {"0", "1", "2"} <= set(snap["workers"])
+    out = live.render(snap)
+    assert "rate history" in out
+    for w in (0, 1, 2):
+        assert f"\n   {w} " in out, out
+    assert token_errs and isinstance(token_errs[0], RuntimeError)
+    # the JSONL stream parses and renders offline, straggler included:
+    # line 0 is the eager run-header, the rest are samples
+    lines = [json.loads(x) for x in open(jsonl)]
+    assert lines[0]["meta"]["algorithm"] == "hogwild_easgd"
+    assert len(lines) > 1 and all("t" in r and "workers" in r
+                                  for r in lines[1:])
+    offline = monitor.snap_from_jsonl(jsonl)
+    assert offline["meta"]["algorithm"] == "hogwild_easgd"
+    out2 = live.render(offline)
+    assert "straggler" in out2, out2
+    assert monitor.main(["--from-jsonl", jsonl]) == 0
+
+
+# ---------------------------------------------------------------------------
+# (5) preemption: SIGTERM → clean BYE
+# ---------------------------------------------------------------------------
+
+def test_sigterm_mid_run_is_a_clean_named_departure(tmp_path):
+    port = _free_port()
+    hb_file = str(tmp_path / "w1.hb")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO_ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", "")).rstrip(os.pathsep)
+    cfg = ps.PSConfig(algorithm="async_easgd", n_workers=2,
+                      total_iters=4000, transport="tcp", schedule="ring",
+                      eval_every_iters=10**9, emulate_net=NET,
+                      tcp_port=port, spawn_workers=False,
+                      telemetry=True, hb_interval_s=0.2)
+    procs = [subprocess.Popen(
+        [sys.executable, "-m", "repro.net.worker",
+         "--connect", f"127.0.0.1:{port}", "--wid", str(w),
+         "--sync-plane", "master"]
+        + (["--heartbeat-file", hb_file] if w == 1 else []),
+        env=env) for w in (0, 1)]
+    killer = threading.Timer(
+        2.5, lambda: procs[1].send_signal(signal.SIGTERM))
+    killer.start()
+    try:
+        with pytest.raises(RuntimeError, match="worker 1 left the run"):
+            ps.run_ps(ps.NUMPY_MLP, CFG, cfg, join_timeout_s=60.0)
+    finally:
+        killer.cancel()
+        for p in procs:
+            try:
+                p.wait(timeout=15)
+            except subprocess.TimeoutExpired:
+                p.kill()
+    assert procs[1].returncode == 0      # clean exit, not a crash
+    from repro.ft.watchdog import Watchdog
+    assert Watchdog.is_alive(hb_file, timeout_s=60.0)
+
+
+# ---------------------------------------------------------------------------
+# (6) the regression gate
+# ---------------------------------------------------------------------------
+
+_BENCH = {
+    "module": "p2p_overlap_smoke",
+    "ok": True,
+    "iters_per_sec": 100.0,
+    "exposed_s": 0.5,
+    "meta": {"git_sha": "deadbeef"},            # skipped by the flattener
+    "rows": [{"name": "ring", "us_per_call": 12.0,
+              "derived": "final_err=0.040;t_to_0.25=0.202s;speedup=5.3x"}],
+}
+
+
+def _write(path, rec):
+    with open(path, "w") as f:
+        json.dump(rec, f)
+    return str(path)
+
+
+def test_flatten_handles_rows_derived_and_lists():
+    flat = regress.flatten_metrics(_BENCH)
+    assert flat["iters_per_sec"] == 100.0
+    assert flat["rows.ring.us_per_call"] == 12.0
+    assert flat["rows.ring.t_to_0.25"] == 0.202      # "s" unit stripped
+    assert flat["rows.ring.speedup"] == 5.3          # "x" unit stripped
+    assert not any(k.startswith("meta") for k in flat)
+    assert regress.flatten_metrics(
+        {"bucket_send_bytes": [10, 20, 30]})["bucket_send_bytes.sum"] == 60
+
+
+def test_regress_self_comparison_passes(tmp_path):
+    p = _write(tmp_path / "base.json", _BENCH)
+    assert regress.main([p, p]) == 0
+
+
+def test_regress_fails_on_2x_throughput_drop(tmp_path):
+    base = _write(tmp_path / "base.json", _BENCH)
+    cur = _write(tmp_path / "cur.json",
+                 {**_BENCH, "iters_per_sec": 50.0})
+    assert regress.main([base, cur, "--metrics", "iters_per_sec"]) == 1
+    assert regress.main([base, cur, "--metrics", "iters_per_sec",
+                         "--warn-only"]) == 0
+    # direction-aware: the same 2x change UP is an improvement, not a fail
+    up = _write(tmp_path / "up.json", {**_BENCH, "iters_per_sec": 200.0})
+    assert regress.main([base, up]) == 0
+
+
+def test_regress_cost_metrics_fail_on_rise(tmp_path):
+    base = _write(tmp_path / "base.json", _BENCH)
+    cur = _write(tmp_path / "cur.json", {**_BENCH, "exposed_s": 2.0})
+    assert regress.main([base, cur, "--metrics", "exposed_s"]) == 1
+
+
+def test_regress_history_dir_compares_two_newest(tmp_path):
+    d = tmp_path / "hist"
+    d.mkdir()
+    _write(d / "aaa.json", _BENCH)
+    time.sleep(0.05)                     # mtime order decides base/current
+    _write(d / "bbb.json", {**_BENCH, "iters_per_sec": 40.0})
+    assert regress.main([str(d)]) == 1
+    assert regress.main([str(d), "--warn-only"]) == 0
+
+
+def test_regress_unknown_metrics_drift_never_fails(tmp_path):
+    base = _write(tmp_path / "base.json", {"mystery_quantity": 1.0})
+    cur = _write(tmp_path / "cur.json", {"mystery_quantity": 9.0})
+    assert regress.main([base, cur]) == 0

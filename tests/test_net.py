@@ -255,6 +255,10 @@ def test_tcp_worker_is_jax_free(subproc):
         import repro.comm.rounds
         import repro.ps.problems
         import repro.obs
+        import repro.ft                  # lazy package: straggler/watchdog
+        import repro.ft.straggler       # the live plane's detector math
+        import repro.ft.watchdog        # the worker's preemption plane
+        import repro.launch.monitor
         import repro.utils.timing
         assert "jax" not in sys.modules, "worker pulled jax in"
     """, n_devices=1)
