@@ -285,6 +285,23 @@ def peer_pairs(rounds) -> list[tuple[int, int]]:
     return pairs
 
 
+def remap_rounds(rounds, rank_to_wid) -> list:
+    """Relabel a round structure built over DENSE ranks 0..P'−1 onto real
+    worker ids (``ft.membership.dense_rank_map``): after a membership
+    change the schedule builders still produce dense indices, but the
+    surviving wids are a sparse subset — e.g. {0, 1, 3} after wid 2 dies.
+    MASTER endpoints pass through unchanged. Chunk ownership, fractions and
+    op order are untouched, so the remapped structure prices and executes
+    exactly like the dense one."""
+    import dataclasses
+
+    def _m(i):
+        return MASTER if i == MASTER else rank_to_wid[i]
+
+    return [[dataclasses.replace(m, src=_m(m.src), dst=_m(m.dst))
+             for m in rnd] for rnd in rounds]
+
+
 def rounds_to_wire(rounds) -> list:
     """JSON-ready form of a round structure (the master ships this to the
     p2p workers in WELCOME — workers never import the jax-side registry)."""

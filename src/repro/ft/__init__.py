@@ -1,12 +1,15 @@
 """repro.ft — fault-tolerance primitives (straggler policies, elastic pod
-scaling, the preemption watchdog).
+scaling, membership, chaos injection, the preemption watchdog).
 
-Lazy re-exports (PEP 562): ``straggler`` and ``watchdog`` are jax-free and
-are imported by the tcp worker/master (the live health detector wires
-``BoundedStaleness`` to real heartbeat telemetry — obs/live.py);
-``elastic_scale`` operates on jitted pod state and pulls jax, so it must
-not load just because a jax-free process said ``import repro.ft``.
+Lazy re-exports (PEP 562). Every submodule here is importable jax-free —
+the tcp worker/master pull ``straggler``/``watchdog``/``membership``/
+``chaos`` on their sub-second startup path, and ``elastic_scale`` defers
+its jax import into the jitted-tree functions themselves (the flat-row
+``pod_join_rows``/``pod_leave_rows`` variants are pure numpy).
 """
+_SUBMODULES = ("straggler", "watchdog", "elastic_scale", "membership",
+               "chaos")
+
 _EXPORTS = {
     "StragglerPolicy": "repro.ft.straggler",
     "BoundedStaleness": "repro.ft.straggler",
@@ -15,14 +18,19 @@ _EXPORTS = {
     "rescale_pods": "repro.ft.elastic_scale",
     "pod_join": "repro.ft.elastic_scale",
     "pod_leave": "repro.ft.elastic_scale",
+    "pod_join_rows": "repro.ft.elastic_scale",
+    "pod_leave_rows": "repro.ft.elastic_scale",
+    "MembershipTable": "repro.ft.membership",
+    "ChaosSpec": "repro.ft.chaos",
+    "ChaosClock": "repro.ft.chaos",
 }
 
-__all__ = sorted(_EXPORTS) + ["straggler", "watchdog", "elastic_scale"]
+__all__ = sorted(_EXPORTS) + list(_SUBMODULES)
 
 
 def __getattr__(name):
     import importlib
-    if name in ("straggler", "watchdog", "elastic_scale"):
+    if name in _SUBMODULES:
         return importlib.import_module(f"repro.ft.{name}")
     mod = _EXPORTS.get(name)
     if mod is None:

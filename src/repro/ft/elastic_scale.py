@@ -11,17 +11,23 @@ join (capacity) BETWEEN exchange rounds without a global barrier:
 
 This is the principled version of checkpoint-restart: the restarted/new
 worker starts from the consensus point, exactly like EASGD's theory assumes.
+
+Two families live here: the jitted-tree forms (``pod_join``/``pod_leave``/
+``rescale_pods`` on ``core.elastic.ElasticState`` — jax imported lazily, so
+the TCP worker's jax-free import path survives) and the flat-row forms
+(``pod_join_rows``/``pod_leave_rows`` on the PS runtime's (P, n) float64
+arrays — pure numpy, what ``ft.membership`` reconfigurations reuse).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.elastic import ElasticState
+import numpy as np
 
 
-def pod_leave(state: ElasticState, pod_index: int) -> ElasticState:
+def pod_leave(state, pod_index: int):
     """Remove one pod's local replica (n_pods -> n_pods-1)."""
+    import jax
+    import jax.numpy as jnp
+
     take = lambda x: jnp.concatenate(
         [x[:pod_index], x[pod_index + 1:]], axis=0)
     new = state._replace(
@@ -34,8 +40,11 @@ def pod_leave(state: ElasticState, pod_index: int) -> ElasticState:
     return new
 
 
-def pod_join(state: ElasticState) -> ElasticState:
+def pod_join(state):
     """Add one pod seeded from the center (n_pods -> n_pods+1)."""
+    import jax
+    import jax.numpy as jnp
+
     def add_from_center(local, center):
         row = center.astype(local.dtype)[None]
         return jnp.concatenate([local, row], axis=0)
@@ -53,9 +62,11 @@ def pod_join(state: ElasticState) -> ElasticState:
     return new
 
 
-def rescale_pods(state: ElasticState, new_n_pods: int) -> ElasticState:
+def rescale_pods(state, new_n_pods: int):
     """Resize to ``new_n_pods`` (shrink drops highest pods; grow seeds from
     the center)."""
+    import jax
+
     cur = jax.tree_util.tree_leaves(state.params)[0].shape[0]
     while cur > new_n_pods:
         state = pod_leave(state, cur - 1)
@@ -64,3 +75,29 @@ def rescale_pods(state: ElasticState, new_n_pods: int) -> ElasticState:
         state = pod_join(state)
         cur += 1
     return state
+
+
+# --- flat-row variants: the PS runtime's state layout (numpy only) ---
+
+def pod_leave_rows(workers_w: np.ndarray, workers_v: np.ndarray,
+                   pod_index: int) -> tuple[np.ndarray, np.ndarray]:
+    """Drop row ``pod_index`` from the (P, n) local-replica arrays.
+
+    The center is deliberately NOT an argument: EASGD's center never changes
+    when a pod leaves — only the elastic mean's denominator does, and that
+    is the reconfigured P' the next exchange divides by.
+    """
+    assert workers_w.ndim == 2 and 0 <= pod_index < workers_w.shape[0]
+    keep = np.r_[0:pod_index, pod_index + 1:workers_w.shape[0]]
+    return (np.ascontiguousarray(workers_w[keep]),
+            np.ascontiguousarray(workers_v[keep]))
+
+
+def pod_join_rows(workers_w: np.ndarray, workers_v: np.ndarray,
+                  center: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Append one row seeded from the center with zero momentum
+    ((P, n) -> (P+1, n)) — Alg. 4's init, at runtime."""
+    assert workers_w.ndim == 2 and center.shape == workers_w.shape[1:]
+    row = np.asarray(center, dtype=workers_w.dtype)[None]
+    return (np.concatenate([workers_w, row], axis=0),
+            np.concatenate([workers_v, np.zeros_like(row)], axis=0))

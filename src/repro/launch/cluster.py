@@ -57,7 +57,7 @@ def main(argv=None):
     from repro import ps
     from repro.core import costmodel
     from repro.core.easgd import EASGDConfig
-    from repro.net.server import worker_command
+    from repro.net.server import cluster_spec_env, worker_command
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--workers", type=int, default=4)
@@ -142,6 +142,13 @@ def main(argv=None):
                     help="touch PATH every ~2 s while the run is alive so "
                          "an external supervisor can detect a hung master "
                          "(ft.Watchdog.is_alive PATH)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="elastic membership (ft.membership): a worker "
+                         "death freezes the superstep, the survivors are "
+                         "RECONFIGUREd onto a re-resolved schedule, and a "
+                         "respawned worker rejoins at the next epoch. The "
+                         "printed respawn one-liner re-execs the worker "
+                         "from its REPRO_CLUSTER_SPEC")
     ap.add_argument("--timeout", type=float, default=600.0)
     args = ap.parse_args(argv)
 
@@ -163,6 +170,8 @@ def main(argv=None):
                                             or args.sync_plane != "p2p"):
         ap.error("--update-backend pallas rides the p2p worker loop "
                  "(--transport tcp --sync-plane p2p)")
+    if args.elastic and args.transport != "tcp":
+        ap.error("--elastic reconfigures real links (tcp only)")
     easgd = EASGDConfig(eta=args.eta, rho=args.rho, mu=0.9, tau=args.tau)
     emulate = costmodel.PS_WIRE if args.emulate == "wire" else None
     multi_host = bool(args.hosts)
@@ -186,7 +195,8 @@ def main(argv=None):
         trace=args.trace or bool(args.trace_dir),
         trace_dir=args.trace_dir,
         telemetry=args.telemetry,
-        telemetry_jsonl=args.telemetry_jsonl)
+        telemetry_jsonl=args.telemetry_jsonl,
+        elastic=args.elastic)
     if port and args.transport == "tcp" and (args.telemetry
                                              or args.telemetry_jsonl):
         print(f"# telemetry: watch with  PYTHONPATH=src python -m "
@@ -222,6 +232,18 @@ def main(argv=None):
                     sync_plane=args.sync_plane if p2p else None,
                     peer_port=port + 1 + wid if p2p else None)
                 print(f"#   [{host}] {cmd}")
+                if args.elastic:
+                    # a respawn is a re-exec from the declarative spec,
+                    # not a hand-reconstructed command line
+                    mhost, mport = addr.rsplit(":", 1)
+                    spec = cluster_spec_env(
+                        "worker", wid, mhost, int(mport),
+                        sync_plane=args.sync_plane if p2p else None,
+                        peer_port=port + 1 + wid if p2p else None)
+                    print(f"#   [{host}] respawn: "
+                          f"REPRO_CLUSTER_SPEC={shlex.quote(spec)} "
+                          f"PYTHONPATH=src python -m repro.net.worker "
+                          f"--rejoin")
                 if args.ssh:
                     ssh_procs.append(subprocess.Popen(
                         ["ssh", host, *shlex.split(cmd)]))

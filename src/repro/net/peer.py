@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import select
 import socket
+import threading
 from time import monotonic as _monotonic
 from time import perf_counter as _perf_counter
 
@@ -67,6 +68,11 @@ from repro.obs import trace as _trace
 # monopolize a round's progress loop (receives interleave at the same
 # grain). Purely a fairness knob — correctness never depends on it.
 SEND_OP_MAX = 256 * 1024
+
+
+class MeshAbort(Exception):
+    """The mesh was asked to abandon the in-flight exchange (elastic
+    reconfiguration): not a wire failure — the caller rewires and resumes."""
 
 
 def predicted_link_bytes(rounds, padded_elements: int,
@@ -151,6 +157,9 @@ class PeerMesh:
         self._scratch: dict = {}         # (src, a, b) -> recv buffer
         self._rounds_len = 0
         self._nonblocking = False
+        self._abort = threading.Event()  # elastic: set from the worker's
+        #                                  control thread to pull the comm
+        #                                  thread out of a doomed exchange
         self.tracer = None               # obs.trace.Tracer from the worker's
         #                                  comm thread (None = tracing off)
 
@@ -173,8 +182,11 @@ class PeerMesh:
         for peer in dial:                # dials complete against backlogs
             host, port = directory[str(peer)] if str(peer) in directory \
                 else directory[peer]
-            sock = socket.create_connection((host, int(port)),
-                                            timeout=self.timeout_s)
+            # bounded retry: on a staggered multi-host start (or an elastic
+            # rewire racing a peer's reset) the listener may not exist yet
+            sock = wire.dial_with_backoff(
+                host, port, deadline_s=min(self.timeout_s, 60.0),
+                seed=(self.wid << 16) | peer)
             link = self._register(peer, sock)
             link.send_json(wire.PEERS, {"wid": self.wid, "token": self.token},
                            wid=self.wid)
@@ -223,11 +235,12 @@ class PeerMesh:
             ack = link.recv_json(frame)
             assert int(ack["wid"]) == peer, (ack, peer)
         # counters attach only now: stats contain SEGMENT traffic, not the
-        # handshake (predicted_link_bytes prices the data plane alone)
+        # handshake (predicted_link_bytes prices the data plane alone).
+        # setdefault: an elastic rewire reuses the cells, so per-peer byte
+        # stats stay cumulative across epochs
         for peer, link in self.links.items():
-            self.counters[peer] = {"messages": wire.Slot(),
-                                   "wire_bytes": wire.Slot()}
-            link.counters = self.counters[peer]
+            link.counters = self.counters.setdefault(
+                peer, {"messages": wire.Slot(), "wire_bytes": wire.Slot()})
 
     # -- the round executor --------------------------------------------------
 
@@ -306,6 +319,8 @@ class PeerMesh:
         pending = []                     # (a, b, op, array) post-round
         deadline = _monotonic() + self.timeout_s
         while True:
+            if self._abort.is_set():
+                raise MeshAbort(f"exchange aborted at round {seq}")
             rl = [s for s, io in by_sock.items() if io.recv_q]
             wl = [s for s, io in by_sock.items() if io.send_q]
             if not rl and not wl:
@@ -451,10 +466,33 @@ class PeerMesh:
             "peer_links": {
                 str(peer): {"messages": c["messages"].value,
                             "wire_bytes": c["wire_bytes"].value,
-                            **({"ef_ratio": r} if (r := self.links[peer]
-                               .ef_ratio()) else {})}
+                            **({"ef_ratio": r}
+                               if (peer in self.links
+                                   and (r := self.links[peer].ef_ratio()))
+                               else {})}
                 for peer, c in sorted(self.counters.items())},
         }
+
+    def abort(self) -> None:
+        """Ask the comm thread to abandon the in-flight exchange: the next
+        ``_run_round`` loop iteration (≤1 s away — the select timeout)
+        raises :class:`MeshAbort`. Idempotent; cleared by ``reset``."""
+        self._abort.set()
+
+    def reset(self) -> None:
+        """Tear down every peer link but KEEP the listener — the elastic
+        rewire: an aborted exchange leaves partial frames in flight, so
+        reused sockets would desync framing; fresh links (and fresh EF
+        state, which lives on the Link) are the only safe restart point.
+        ``connect`` + ``set_rounds`` rebuild the mesh for the new epoch."""
+        for link in self.links.values():
+            link.close()
+        self.links.clear()       # counters stay: cumulative across epochs
+        self._plans = []
+        self._scratch = {}
+        self._rounds_len = 0
+        self._nonblocking = False
+        self._abort.clear()
 
     def close(self) -> None:
         for link in self.links.values():

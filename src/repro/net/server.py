@@ -59,6 +59,8 @@ from repro.comm import rounds as comm_rounds
 from repro.comm import schedules as comm_schedules
 from repro.core import easgd_flat
 from repro.core.compression import sign_ef_wire_nbytes
+from repro.ft import chaos as ft_chaos
+from repro.ft import membership as ft_membership
 from repro.net import wire
 from repro.net.wire import Link, sleep_until
 from repro.obs import live as obs_live
@@ -95,20 +97,46 @@ def worker_env(pallas: bool = False) -> dict:
     return env
 
 
+def cluster_spec_env(role: str, wid: int, host: str, port: int,
+                     token: str = DEFAULT_TOKEN,
+                     sync_plane: str | None = None,
+                     peer_port: int | None = None) -> str:
+    """The declarative ``REPRO_CLUSTER_SPEC`` JSON one process needs to
+    (re)join a run: a respawn is a re-exec of ``python -m repro.net.worker``
+    with this env var set (plus ``--rejoin``), not a hand-crafted command
+    line. launch/cluster prints the same spec for multi-host workers."""
+    import json as _json
+    spec = {"role": role, "wid": wid, "host": host, "port": int(port),
+            "token": token}
+    if sync_plane is not None:
+        spec["sync_plane"] = sync_plane
+    if peer_port is not None:
+        spec["peer_port"] = int(peer_port)
+    return _json.dumps(spec)
+
+
 def spawn_local_workers(host: str, port: int, n_workers: int,
                         token: str = DEFAULT_TOKEN,
-                        pallas: bool = False) -> list:
+                        pallas: bool = False,
+                        env_extra: dict | None = None) -> list:
     """Launch localhost worker processes (fresh interpreters — the same
-    isolation a remote host gives, minus the cable)."""
-    env = worker_env(pallas=pallas)
-    return [
-        subprocess.Popen(
+    isolation a remote host gives, minus the cable). Each child also gets a
+    ``REPRO_CLUSTER_SPEC`` describing its own role, so a respawn is a
+    re-exec; ``env_extra`` carries run-scoped injections (REPRO_CHAOS)."""
+    base = worker_env(pallas=pallas)
+    if env_extra:
+        base.update(env_extra)
+    procs = []
+    for i in range(n_workers):
+        env = dict(base)
+        env["REPRO_CLUSTER_SPEC"] = cluster_spec_env(
+            "worker", i, host, port, token)
+        procs.append(subprocess.Popen(
             [sys.executable, "-m", "repro.net.worker",
              "--connect", f"{host}:{port}", "--wid", str(i),
              "--token", token],
-            env=env)
-        for i in range(n_workers)
-    ]
+            env=env))
+    return procs
 
 
 def worker_command(addr: str, wid: int, token: str = DEFAULT_TOKEN,
@@ -168,11 +196,13 @@ class MasterServer:
                 f"(ring/tree/butterfly/hierarchical) for sync_plane='p2p'")
         padded = self.n + (-self.n) % max(P, 1)
         self.padded = padded
+        # layer sizes survive past build so an elastic reconfiguration can
+        # re-derive bucket boundaries for the new padded size
+        self._layer_sizes = getattr(grad_fn, "layer_sizes", None)
         self.boundaries = None
         if getattr(cfg, "bucket_bytes", 0) > 0 and cfg.algorithm in SYNC:
             self.boundaries = comm_rounds.default_bucket_boundaries(
-                getattr(grad_fn, "layer_sizes", None), padded,
-                cfg.bucket_bytes)
+                self._layer_sizes, padded, cfg.bucket_bytes)
         # -- master-owned optimizer state (thread-transport layout) --------
         self.center = self.w0.copy()
         self.master_vel = np.zeros(self.n)
@@ -213,6 +243,19 @@ class MasterServer:
         self._draining = False           # True once DONE went out: BYE is
         #                                  then the expected shutdown frame,
         #                                  not a mid-run departure
+        # -- elastic membership (ft.membership) ----------------------------
+        self.elastic = bool(getattr(cfg, "elastic", False))
+        self.membership = (ft_membership.MembershipTable(P)
+                           if self.elastic else None)
+        self._serving = False            # member_lost conversion applies
+        #                                  only once the disciplines run —
+        #                                  a rendezvous death still raises
+        self._elastic_events: list = []  # lifecycle record when telemetry
+        #                                  (and therefore LiveMonitor) is off
+        self._proc_reported: set = set()
+        self._epoch_round_base = 0       # p2p iteration accounting across
+        self._epoch_iters_base = 0       # epochs: iters(k) = base_iters +
+        self._epoch_p = P                # (k − base_round) · P_epoch · τ
 
     # -- payload shapes ------------------------------------------------------
 
@@ -316,6 +359,54 @@ class MasterServer:
 
     # -- lifecycle -----------------------------------------------------------
 
+    def _welcome_payload(self, wid: int, rejoin: bool = False) -> dict:
+        """One worker's WELCOME: problem spec + algorithm, plus the full p2p
+        geometry when the data plane is peer-to-peer. A rejoin WELCOME names
+        the CURRENT epoch's geometry but the worker holds off joining the
+        mesh until the RECONFIGURE that folds it in (``rejoin`` flag)."""
+        cfg, e = self.cfg, self.easgd
+        welcome = {
+            "wid": wid,
+            "factory": self.problem.factory,
+            "kwargs": list(self.problem.kwargs),
+            "algorithm": cfg.algorithm,
+            "n": self.n,
+            "tau": self.tau,
+            "eta": e.eta, "mu": e.mu, "rho": e.rho,
+            "codec": cfg.wire_compression,
+            "warmup": 2,
+            "hb_interval_s": cfg.hb_interval_s,
+            "trace": bool(cfg.trace),
+            "trace_dir": cfg.trace_dir,
+        }
+        if self.sync_p2p:
+            # a link_slow worker paces ITS exchange deadlines slower —
+            # the mesh is lockstep, so its lag surfaces in every
+            # worker's clock, but its own heartbeat telemetry is what
+            # names it
+            slow = cfg.link_slow_factor(wid)
+            welcome.update({
+                "sync_plane": "p2p",
+                "p": len(self.links) if rejoin else cfg.n_workers,
+                "padded": self.padded,
+                "rounds": comm_schedules.rounds_to_wire(self.rounds),
+                "n_rounds": self._n_sync_rounds(),
+                "eval_rounds": self._eval_rounds(),
+                "t_wire_s": slow * self._t_sync_wire(),
+                "peers": {str(w): a for w, a in self.peer_addrs.items()},
+                "bucket_bounds": self.boundaries,
+                "overlap": getattr(cfg, "overlap", True),
+                "update_backend": getattr(cfg, "update_backend",
+                                          "numpy"),
+                "t_wire_bucket_s": ([slow * t for t in
+                                     self._t_sync_wire_buckets()]
+                                    if self.boundaries else []),
+                "elastic": self.elastic,
+            })
+        if rejoin:
+            welcome["rejoin"] = True
+        return welcome
+
     def rendezvous(self, listener: socket.socket, token: str) -> None:
         """Accept until every wid 0..P−1 has said HELLO, send WELCOME, wait
         for every READY (worker built its problem and warmed up)."""
@@ -367,46 +458,8 @@ class MasterServer:
                 raise RuntimeError(
                     f"p2p rendezvous failed: worker(s) {missing} advertised "
                     f"no peer listener")
-        e = self.easgd
         for wid, link in self.links.items():
-            welcome = {
-                "wid": wid,
-                "factory": self.problem.factory,
-                "kwargs": list(self.problem.kwargs),
-                "algorithm": cfg.algorithm,
-                "n": self.n,
-                "tau": self.tau,
-                "eta": e.eta, "mu": e.mu, "rho": e.rho,
-                "codec": cfg.wire_compression,
-                "warmup": 2,
-                "hb_interval_s": cfg.hb_interval_s,
-                "trace": bool(cfg.trace),
-                "trace_dir": cfg.trace_dir,
-            }
-            if self.sync_p2p:
-                # a link_slow worker paces ITS exchange deadlines slower —
-                # the mesh is lockstep, so its lag surfaces in every
-                # worker's clock, but its own heartbeat telemetry is what
-                # names it
-                slow = cfg.link_slow_factor(wid)
-                welcome.update({
-                    "sync_plane": "p2p",
-                    "p": P,
-                    "padded": self.padded,
-                    "rounds": comm_schedules.rounds_to_wire(self.rounds),
-                    "n_rounds": self._n_sync_rounds(),
-                    "eval_rounds": self._eval_rounds(),
-                    "t_wire_s": slow * self._t_sync_wire(),
-                    "peers": {str(w): a for w, a in self.peer_addrs.items()},
-                    "bucket_bounds": self.boundaries,
-                    "overlap": getattr(cfg, "overlap", True),
-                    "update_backend": getattr(cfg, "update_backend",
-                                              "numpy"),
-                    "t_wire_bucket_s": ([slow * t for t in
-                                         self._t_sync_wire_buckets()]
-                                        if self.boundaries else []),
-                })
-            link.send_json(wire.WELCOME, welcome)
+            link.send_json(wire.WELCOME, self._welcome_payload(wid))
         for wid, link in self.links.items():
             self._threads.append(threading.Thread(
                 target=self._reader, args=(wid, link), daemon=True))
@@ -418,6 +471,8 @@ class MasterServer:
                 raise RuntimeError(
                     f"worker {wid} failed during rendezvous: {kind} {detail}")
             ready.add(wid)
+            if self.membership is not None:
+                self.membership.mark_ready(wid)
 
     def _reader(self, wid: int, link: Link) -> None:
         """Per-link reader: decodes frames into per-worker buffers and turns
@@ -433,10 +488,17 @@ class MasterServer:
                     link.recv_array(frame, self.wstate_bufs[wid])
                     self.events.put((wid, "wstate", None))
                 elif frame.ftype == wire.CENTER:
-                    # eval-cadence only — the fresh array keeps a slow eval
-                    # from racing the next report into a shared buffer
+                    # the header wid field carries the report tag (eval
+                    # round index ≥ 0, −1 final, −2 reconfigure state
+                    # upload); the fresh array keeps a slow eval from
+                    # racing the next report into a shared buffer
                     self.events.put((wid, "center",
-                                     link.recv_array(frame).copy()))
+                                     (frame.wid,
+                                      link.recv_array(frame).copy())))
+                elif frame.ftype == wire.RECONFIGURE:
+                    # a survivor acking phase 1 with its completed round
+                    self.events.put((wid, "reconf_ack",
+                                     link.recv_json(frame)))
                 elif frame.ftype == wire.READY:
                     link.recv_discard(frame)
                     self.events.put((wid, "ready", None))
@@ -465,17 +527,60 @@ class MasterServer:
                 self.events.put((wid, "dead", repr(exc)))
 
     def _check_procs(self) -> None:
-        for proc in self._procs:
+        for i, proc in enumerate(self._procs):
             rc = proc.poll()
-            if rc not in (None, 0):
-                raise RuntimeError(
-                    f"tcp worker process exited with code {rc} "
-                    f"(algorithm={self.cfg.algorithm})")
+            if rc in (None, 0):
+                continue
+            if self.elastic and self._serving:
+                # under elastic membership a nonzero exit is a membership
+                # signal, not a run-killer: surface it as a dead event once
+                # (the reader's socket-drop event usually beats this poll)
+                if (not self.membership.is_lost(i)
+                        and i not in self._proc_reported):
+                    self._proc_reported.add(i)
+                    self.events.put((i, "dead", f"process exited {rc}"))
+                continue
+            raise RuntimeError(
+                f"tcp worker process exited with code {rc} "
+                f"(algorithm={self.cfg.algorithm})")
+
+    def _mark_event(self, wid: int, kind: str, detail: str = "") -> None:
+        """One lifecycle record: through the LiveMonitor when telemetry is
+        on (events + JSONL + health counters), into the local log always —
+        PSResult.health must name the death/recovery even on a bare run."""
+        if self.live is not None:
+            ev = self.live.mark_worker_event(wid, kind, detail)
+        else:
+            ev = {"t": round(time.monotonic() - (self._t0 or
+                                                 time.monotonic()), 3),
+                  "kind": kind, "wid": wid,
+                  **({"detail": detail} if detail else {})}
+        self._elastic_events.append(ev)
+
+    def _member_lost(self, wid: int, kind: str, detail):
+        """Elastic conversion of a failure into a membership transition:
+        close the link, record the state change, hand the serve loop a
+        ``member_lost`` event instead of raising."""
+        left = kind == "bye"                       # clean preemption BYE
+        if left:
+            self.membership.mark_left(wid, "clean BYE mid-run")
+        else:
+            self.membership.mark_dead(wid, str(detail))
+        link = self.links.pop(wid, None)
+        if link is not None:
+            link.hb_hook = None
+            link.close()
+        self._mark_event(wid, "worker_left" if left else "worker_dead",
+                         str(detail or ""))
+        return wid, "member_lost", str(detail or "")
 
     def _next_event(self, timeout: float):
         """Pop one event; surface worker failures and heartbeat silence as
-        RuntimeError instead of hanging the launcher."""
+        RuntimeError instead of hanging the launcher — unless elastic
+        membership is on and the disciplines are running, in which case a
+        loss becomes a ``member_lost`` event the serve loop absorbs."""
         deadline = time.monotonic() + max(timeout, 0.0)
+        absorb = self.elastic and self._serving
         while True:
             self._check_procs()
             if self.links:
@@ -487,6 +592,10 @@ class MasterServer:
                      if time.monotonic() - l.last_seen
                      > self.cfg.hb_timeout_s]
             if stale:
+                if absorb:
+                    return self._member_lost(
+                        stale[0], "dead",
+                        f"silent for more than {self.cfg.hb_timeout_s}s")
                 raise RuntimeError(
                     f"worker(s) {stale} silent for more than "
                     f"{self.cfg.hb_timeout_s}s (heartbeats stopped)")
@@ -499,6 +608,10 @@ class MasterServer:
                         f"(algorithm={self.cfg.algorithm})") from None
                 continue
             if kind in ("error", "dead"):
+                if absorb and wid in self.links:
+                    return self._member_lost(wid, kind, detail)
+                if absorb:
+                    continue             # duplicate signal for a known loss
                 if self.live is not None:
                     self.live.mark_worker_event(wid, "worker_dead",
                                                 str(detail))
@@ -508,6 +621,8 @@ class MasterServer:
                 # BYE instead of a dead socket): its trace/telemetry flush
                 # already landed in bye_stats — surface it as a structured
                 # failure naming the worker, not a protocol violation
+                if absorb:
+                    return self._member_lost(wid, "bye", "preempted")
                 if self.live is not None:
                     self.live.mark_worker_event(wid, "worker_left",
                                                 "clean BYE mid-run")
@@ -526,6 +641,9 @@ class MasterServer:
         while pending:
             wid, got, _ = self._next_event(self.timeout)
             if got in ignore:
+                continue
+            if got == "member_lost":     # elastic: the lost worker can no
+                pending.discard(wid)     # longer owe us anything
                 continue
             if got != kind:
                 raise RuntimeError(
@@ -554,22 +672,22 @@ class MasterServer:
         for wid, link in self.links.items():
             link.hb_hook = (lambda payload, w=wid:
                             self.live.ingest_hb(w, payload))
-        for target, args in ((self._live_sampler, ()),
-                             (self._stats_acceptor, (listener, token))):
-            th = threading.Thread(target=target, args=args, daemon=True)
-            th.start()
-            self._threads.append(th)
+        th = threading.Thread(target=self._live_sampler, daemon=True)
+        th.start()
+        self._threads.append(th)
 
     def _live_sampler(self) -> None:
         """Periodic master-side pass: per-link heartbeat age + per-link
         ef_ratio into the store, aggregate gauges under wid −1, one
-        detector pass (straggler / hb_stale events)."""
+        detector pass (straggler / hb_stale events). Links are snapshot
+        per pass — elastic membership mutates the dict concurrently."""
         period = self.cfg.telemetry_period_s()
         while not self._closing.wait(period):
             now = time.monotonic()
+            links = list(self.links.items())
             staleness = {w: round(now - link.last_seen, 3)
-                         for w, link in self.links.items()}
-            for w, link in self.links.items():
+                         for w, link in links}
+            for w, link in links:
                 ratio = link.ef_ratio()
                 if ratio is not None:
                     self.live.ingest_hb(w, {"ef_ratio": round(ratio, 2)})
@@ -578,11 +696,19 @@ class MasterServer:
             gauges["iters"] = self.iters
             self.live.sample(staleness=staleness, gauges=gauges)
 
-    def _stats_acceptor(self, listener: socket.socket, token: str) -> None:
-        """Serve STATS snapshots on the rendezvous listener AFTER
-        rendezvous (every training link is connected by now, so any new
-        connection is a monitor). One request per connection:
-        STATS{"token","k"} in, STATS snapshot out, close."""
+    def _start_acceptor(self, listener: socket.socket, token: str) -> None:
+        th = threading.Thread(target=self._control_acceptor,
+                              args=(listener, token), daemon=True)
+        th.start()
+        self._threads.append(th)
+
+    def _control_acceptor(self, listener: socket.socket, token: str) -> None:
+        """Post-rendezvous connections on the rendezvous listener: STATS
+        snapshot requests from monitors (one request per connection), and —
+        under elastic membership — HELLO frames from respawned workers
+        rejoining the run (the link is handed to the serve loop as a
+        ``rejoin_hello`` event; everything else about admission happens
+        there, on the thread that owns the run state)."""
         while not self._closing.is_set():
             try:
                 conn, _ = listener.accept()
@@ -591,26 +717,53 @@ class MasterServer:
             except OSError:
                 return                   # listener closed at shutdown
             client = None
+            keep = False
             try:
-                conn.settimeout(5.0)
-                client = Link(conn)
+                conn.settimeout(10.0)
+                client = Link(conn, codec=self.cfg.wire_compression,
+                              counters=self.link_counters)
                 frame = client.recv_header()
-                if frame.ftype != wire.STATS:
+                if frame.ftype == wire.STATS and self.live is not None:
+                    req = client.recv_json(frame)
+                    if req.get("token") != token:
+                        client.send_json(wire.ERROR, {"msg": "bad token"})
+                        continue
+                    client.send_json(
+                        wire.STATS,
+                        self.live.snapshot(int(req.get("k", 32))))
                     continue
-                req = client.recv_json(frame)
-                if req.get("token") != token:
-                    client.send_json(wire.ERROR, {"msg": "bad token"})
-                    continue
-                client.send_json(
-                    wire.STATS,
-                    self.live.snapshot(int(req.get("k", 32))))
+                if frame.ftype == wire.HELLO and self.elastic:
+                    hello = client.recv_json(frame)
+                    wid = int(hello.get("wid", -1))
+                    if hello.get("token") != token:
+                        client.send_json(wire.ERROR, {"msg": "bad token"})
+                        continue
+                    if not (0 <= wid < self.cfg.n_workers):
+                        client.send_json(wire.ERROR,
+                                         {"msg": f"bad wid {wid}"})
+                        continue
+                    if wid in self.links or not self.membership.is_lost(wid):
+                        client.send_json(wire.ERROR, {
+                            "msg": f"wid {wid} is not rejoinable "
+                                   f"(state {self.membership.state(wid)})"})
+                        continue
+                    if not self.sync_p2p:
+                        client.send_json(wire.ERROR, {
+                            "msg": "rejoin is a p2p sync-plane feature"})
+                        continue
+                    conn.settimeout(self.timeout)
+                    keep = True
+                    self.events.put((wid, "rejoin_hello",
+                                     {"link": client,
+                                      "peer": hello.get("peer")}))
             except (socket.timeout, wire.WireError, OSError, ValueError):
                 pass
             finally:
-                if client is not None:
-                    client.close()
-                else:
-                    conn.close()
+                if not keep:
+                    if client is not None:
+                        client.close()
+                    else:
+                        conn.close()
 
     # -- eval ----------------------------------------------------------------
 
@@ -626,17 +779,26 @@ class MasterServer:
     # -- disciplines ---------------------------------------------------------
 
     def _send_weights(self, wid: int) -> int:
-        if self._down_stacked:
-            payload = np.concatenate(
-                [self.workers_w[wid], self.workers_v[wid]])
-            return self.links[wid].send_array(wire.WEIGHTS, payload,
-                                              wid=wid, segments=2)
-        return self.links[wid].send_array(wire.WEIGHTS, self.workers_w[wid],
-                                          wid=wid)
+        link = self.links.get(wid)
+        if link is None:                 # elastic: lost since we scheduled it
+            return 0
+        try:
+            if self._down_stacked:
+                payload = np.concatenate(
+                    [self.workers_w[wid], self.workers_v[wid]])
+                return link.send_array(wire.WEIGHTS, payload,
+                                       wid=wid, segments=2)
+            return link.send_array(wire.WEIGHTS, self.workers_w[wid],
+                                   wid=wid)
+        except (wire.WireError, OSError):
+            if self.elastic and self._serving:
+                return 0                 # its reader surfaces the loss
+            raise
 
     def serve(self) -> None:
         algo = self.cfg.algorithm
         self._t0 = time.perf_counter()
+        self._serving = True             # elastic: losses are now absorbed
         if self.sync_p2p:
             self._serve_sync_p2p()
         elif algo in SYNC:
@@ -652,23 +814,33 @@ class MasterServer:
 
     def _serve_original(self) -> None:
         """Round-robin with compute-in-turn: WEIGHTS go out only when the
-        turn arrives, so the wire itself serializes the whole pipeline."""
+        turn arrives, so the wire itself serializes the whole pipeline.
+        Elastic: the rotation runs over the LIVE roster each turn — a lost
+        worker simply drops out of the cycle, its turn is re-served."""
         e, cfg = self.easgd, self.cfg
         n_turns = -(-cfg.total_iters // self.tau)
-        for turn in range(n_turns):
-            j = turn % cfg.n_workers
+        turn = served = 0
+        while served < n_turns:
+            roster = sorted(self.links)
+            if not roster:
+                raise RuntimeError("elastic: every worker was lost")
+            j = roster[turn % len(roster)]
+            turn += 1
             t_down, t_up = self._t_msg_pair(j)
             deadline = time.monotonic() + t_down
             self._send_weights(j)
             if t_down:
                 sleep_until(deadline)            # W̄ down
             self._await("grad", {j})
+            if j not in self.links:              # lost while we waited
+                continue
             grad = self._absorb_upload(j)
             deadline = time.monotonic() + t_up
             easgd_flat.master_absorb_round_robin(
                 self.center, self.workers_w[j], self.workers_v[j], grad, e)
             if t_up:
                 sleep_until(deadline)            # W⁽ʲ⁾ up
+            served += 1
             self.iters += self.tau
             self._maybe_eval()
 
@@ -713,6 +885,10 @@ class MasterServer:
             self._send_weights(wid)
         while self.iters < cfg.total_iters:
             j, kind, _ = self._next_event(self.timeout)
+            if kind == "member_lost":    # elastic: its quota is re-absorbed
+                if not self.links:       # by arrival order naturally
+                    raise RuntimeError("elastic: every worker was lost")
+                continue
             assert kind == "grad", kind
             t_pair = sum(self._t_msg_pair(j))
             deadline = None
@@ -767,11 +943,21 @@ class MasterServer:
 
         sender = threading.Thread(target=_delayed_sender, daemon=True)
         sender.start()
+        lost_any = False
         try:
             for wid in self.links:
                 self._send_weights(wid)
             while any(d < t for d, t in zip(done, target)):
                 j, kind, _ = self._next_event(self.timeout)
+                if kind == "member_lost":
+                    # elastic: forgive the dead worker's remaining quota —
+                    # hogwild has no barrier to re-balance, the run just
+                    # ends those iterations short
+                    target[j] = done[j]
+                    lost_any = True
+                    if not self.links:
+                        raise RuntimeError("elastic: every worker was lost")
+                    continue
                 assert kind == "grad", kind
                 grad = self._absorb_upload(j)
                 deadline = time.monotonic() + t_pairs[j]
@@ -789,26 +975,57 @@ class MasterServer:
         finally:
             stop.set()
             sender.join(timeout=5)
-        self.iters = total                            # quota-exact by design
+        if not lost_any:
+            self.iters = total                        # quota-exact by design
+
+    def _rebuild_sync_plan(self, p: int) -> None:
+        """Elastic membership shrank the centralized sync family to ``p``
+        workers: re-resolve dense rounds, padding, bucket boundaries and
+        mailbox for P′ — the participation mask realized as geometry. The
+        workers are stateless request-reply clients here, so nothing ships
+        to them; only the master's exchange plan changes."""
+        self.rounds = comm_schedules.get(self.sched_name).rounds(
+            p, self.n * 8, self.cfg.net)
+        self.padded = self.n + (-self.n) % max(p, 1)
+        if getattr(self.cfg, "bucket_bytes", 0) > 0:
+            self.boundaries = comm_rounds.default_bucket_boundaries(
+                self._layer_sizes, self.padded, self.cfg.bucket_bytes)
+        self.mailbox = np.zeros((p + 1, self.padded))
+        epoch = self.membership.advance_epoch()
+        self.counters.gauge("epoch").value = epoch
+        if self.live is not None:
+            self.live.set_membership(sorted(self.links))
+        self._mark_event(-1, "reconfigure",
+                         f"epoch {epoch}: p={p} "
+                         f"survivors={sorted(self.links)} (centralized)")
 
     def _serve_sync(self) -> None:
         """Barriered rounds over links. sync_easgd's allreduce runs on the
         master's mailbox WHILE the workers compute (their gradient follows
         the WEIGHTS/WSTATE they just sent/received) — the §6.1.3 overlap is
-        real; sync_sgd's gradient exchange must wait for the GRADs."""
+        real; sync_sgd's gradient exchange must wait for the GRADs.
+
+        Elastic: each round runs over the live roster — on a loss the
+        surviving rows are packed densely, the rounds re-resolved for P′
+        and the mean taken over P′ (the participation mask). A worker lost
+        AFTER its state entered the mailbox still contributes to that one
+        exchange (its grad is simply skipped); it is out of the roster from
+        the next round on."""
         e, cfg = self.easgd, self.cfg
-        algo, P, n = cfg.algorithm, cfg.n_workers, self.n
-        all_wids = set(self.links)
-        n_rounds = self._n_sync_rounds()
+        algo, n = cfg.algorithm, self.n
+        plan_p = cfg.n_workers
         # the centralized exchange is one barriered pipeline: a slow link
         # slows the whole round, so link_slow stretches the shared pacing
         # by the worst factor (per-worker divergence needs p2p/async)
-        t_wire = self._t_sync_wire() * (max(self.cfg.link_slow)
-                                        if self.cfg.link_slow else 1.0)
+        t_factor = max(cfg.link_slow) if cfg.link_slow else 1.0
+        t_wire = self._t_sync_wire() * t_factor
         tr = self.tracer
         _pc = time.perf_counter
-        for _ in range(n_rounds):
-            for wid in self.links:
+        while self.iters < cfg.total_iters:
+            roster = sorted(self.links)
+            if not roster:
+                raise RuntimeError("elastic: every worker was lost")
+            for wid in roster:
                 self._send_weights(wid)
             if algo == "sync_easgd":
                 got_grad: set = set()
@@ -819,16 +1036,29 @@ class MasterServer:
                     # A fast worker's GRAD may arrive before a slow one's
                     # WSTATE, so grads are buffered while we collect.
                     got_w: set = set()
-                    while len(got_w) < P:
+                    need = set(roster)
+                    while not need <= got_w:
                         wid, kind, _ = self._next_event(self.timeout)
+                        if kind == "member_lost":
+                            need.discard(wid)
+                            got_grad.discard(wid)
+                            continue
                         if kind == "wstate":
                             got_w.add(wid)
                         else:
                             assert kind == "grad", kind
                             got_grad.add(wid)
-                    for i in range(P):
+                    for i in sorted(need):
                         self.workers_w[i] = self.wstate_bufs[i]
-                self.mailbox[:P, :n] = self.workers_w
+                roster = [w for w in roster if w in self.links]
+                P = len(roster)
+                if P == 0:
+                    continue             # everyone died this round
+                if P != plan_p:
+                    self._rebuild_sync_plan(P)
+                    plan_p = P
+                    t_wire = self._t_sync_wire() * t_factor
+                self.mailbox[:P, :n] = self.workers_w[roster]
                 deadline = time.monotonic() + t_wire
                 if tr is not None:
                     t0 = _pc()
@@ -838,13 +1068,14 @@ class MasterServer:
                     sleep_until(deadline)
                 if tr is not None:
                     tr.record(obs_trace.EXCHANGE, t0, (t0 := _pc()))
-                self._await("grad", all_wids - got_grad)
+                self._await("grad", set(roster) - got_grad)
                 if tr is not None:
                     tr.record(obs_trace.RECV_WAIT, t0, (t0 := _pc()))
-                for i in range(P):
-                    easgd_flat.worker_step(
-                        algo, self.workers_w[i], self.workers_v[i],
-                        self.grad_bufs[i], self.center, e)
+                for i in roster:
+                    if i in self.links:  # a late loss: skip its local step
+                        easgd_flat.worker_step(
+                            algo, self.workers_w[i], self.workers_v[i],
+                            self.grad_bufs[i], self.center, e)
                 easgd_flat.sync_master_easgd(
                     self.center, self.mailbox[0, :n] / P, P, e)
                 if tr is not None:
@@ -852,10 +1083,18 @@ class MasterServer:
             else:                                     # sync_sgd
                 if tr is not None:
                     t0 = _pc()
-                self._await("grad", all_wids)
+                self._await("grad", set(roster))
                 if tr is not None:
                     tr.record(obs_trace.RECV_WAIT, t0, (t0 := _pc()))
-                self.mailbox[:P, :n] = self.grad_bufs
+                roster = [w for w in roster if w in self.links]
+                P = len(roster)
+                if P == 0:
+                    continue
+                if P != plan_p:
+                    self._rebuild_sync_plan(P)
+                    plan_p = P
+                    t_wire = self._t_sync_wire() * t_factor
+                self.mailbox[:P, :n] = [self.grad_bufs[w] for w in roster]
                 deadline = time.monotonic() + t_wire
                 execute_rounds(self.mailbox, n, self.rounds, self.counters,
                                boundaries=self.boundaries, tracer=tr)
@@ -871,38 +1110,270 @@ class MasterServer:
             self.iters += P * self.tau
             self._maybe_eval()
 
+    def _p2p_iters_at(self, k: int) -> int:
+        """Total iterations once exchange round ``k`` completes, summed
+        across epochs: rounds before the epoch base ran at earlier P's."""
+        return (self._epoch_iters_base
+                + (k + 1 - self._epoch_round_base) * self._epoch_p
+                * self.tau)
+
+    def _p2p_center_report(self, tag: int, payload: np.ndarray) -> bool:
+        """Consume one tagged CENTER report. Tag ≥ 0 is an eval report
+        after exchange round ``tag``; −1 is the final center. Returns True
+        for the final report."""
+        n = self.n
+        self.center[:] = payload[:n]
+        if payload.size >= 2 * n:        # sync_sgd state: [center|vel]
+            self.master_vel[:] = payload[n:2 * n]
+        if tag >= 0:
+            self.iters = self._p2p_iters_at(tag)
+            self._maybe_eval(force=True)
+            return False
+        self.iters = self._p2p_iters_at(self._n_sync_rounds() - 1)
+        return True
+
     def _serve_sync_p2p(self) -> None:
         """The control plane of the p2p sync family: the workers execute
         the rounds among themselves (net/peer.py), so this loop only
-        consumes worker 0's CENTER reports (eval cadence precomputed in
-        ``_eval_rounds`` — both sides agree without extra traffic), each
-        worker's one final WSTATE, and the heartbeat/error machinery of
-        ``_next_event``. No WEIGHTS go out, no GRADs come back: the master
-        link moves Θ(N_center), not Θ(P·N) per round."""
-        P = self.cfg.n_workers
-        eval_rounds = self._eval_rounds()
-        per = P * self.tau
-        evals_done = 0
+        consumes the reporter's CENTER reports (tagged with the exchange
+        round in the header's wid field — reports and reconfigurations can
+        interleave, so the cadence can't be inferred from arrival order),
+        each worker's one final WSTATE, and the heartbeat/error machinery
+        of ``_next_event``. No WEIGHTS go out, no GRADs come back: the
+        master link moves Θ(N_center), not Θ(P·N) per round.
+
+        Under ``PSConfig.elastic`` this loop is also the membership driver:
+        a ``member_lost`` event freezes the superstep and runs
+        ``_reconfigure_p2p``; a respawned worker's HELLO (handed over by
+        the control acceptor) is admitted here and folded in by another
+        reconfiguration once its READY lands."""
+        self._epoch_members = set(self.links)
+        self._epoch_p = len(self.links)
         final_center = False
         wstates: set = set()
-        while not (final_center and len(wstates) == P):
+        self._pending_rejoin: list = []
+        while not (final_center and wstates >= set(self.links)):
             wid, kind, detail = self._next_event(self.timeout)
             if kind == "center":
-                self.center[:] = detail
-                if evals_done < len(eval_rounds):
-                    self.iters = (eval_rounds[evals_done] + 1) * per
-                    evals_done += 1
-                    self._maybe_eval(force=True)
-                else:                    # the final center update
-                    self.iters = self._n_sync_rounds() * per
-                    final_center = True
+                final_center |= self._p2p_center_report(*detail)
             elif kind == "wstate":
                 self.workers_w[wid] = self.wstate_bufs[wid]
                 wstates.add(wid)
+            elif kind == "member_lost":
+                if final_center:
+                    continue             # already past the last exchange
+                self._reconfigure_p2p()
+            elif kind == "rejoin_hello":
+                if final_center:
+                    detail["link"].close()
+                else:
+                    self._admit_rejoin(wid, detail["link"], detail["peer"])
+            elif kind == "ready":
+                # a respawned worker finished building: fold it in at the
+                # next epoch (the reconfigure ships it rounds + state)
+                self.membership.mark_rejoined(wid)
+                self._mark_event(wid, "worker_rejoined",
+                                 f"enters at epoch {self.membership.epoch + 1}")
+                self._reconfigure_p2p()
+            elif kind == "reconf_ack":
+                # a restarted reconfigure makes workers ack the same epoch
+                # twice (once per phase 1 they saw); the collection loop
+                # consumed one set, the leftovers are harmless latecomers
+                continue
             else:
                 raise RuntimeError(
                     f"protocol violation on the p2p control plane: "
-                    f"got {kind} from worker {wid}")
+                    f"got {kind} from worker {wid} ({detail!r})")
+
+    def _admit_rejoin(self, wid: int, link: Link, peer) -> None:
+        """Wire a respawned worker back in: register its link + reader and
+        send a rejoin WELCOME. The worker builds its problem and warms up
+        while the run keeps going; its READY triggers the reconfiguration
+        that actually folds it into the mesh."""
+        if not peer:
+            link.send_json(wire.ERROR,
+                           {"msg": "p2p rejoin needs a peer listener"})
+            link.close()
+            return
+        self.peer_addrs[wid] = list(peer)
+        self.links[wid] = link
+        # the ORIGINAL spawned process for this wid is a corpse that stays
+        # in self._procs; mark it reported forever so its exit code is
+        # never mistaken for a death of the respawn (an external process
+        # whose loss surfaces through its socket, not this poll)
+        self._proc_reported.add(wid)
+        self._mark_event(wid, "worker_rejoining")
+        link.send_json(wire.WELCOME, self._welcome_payload(wid, rejoin=True))
+        th = threading.Thread(target=self._reader, args=(wid, link),
+                              daemon=True)
+        th.start()
+        self._threads.append(th)
+
+    def _reconfigure_p2p(self) -> None:
+        """Freeze → re-resolve → rewire → resume (the membership tentpole's
+        master half).
+
+        Phase 1 ships the next epoch's full geometry — survivor roster,
+        rounds re-resolved for P′ and remapped onto the surviving wids, new
+        padding and bucket boundaries, peer directory — to every member.
+        Survivors stop at an exchange boundary (or fall out of the doomed
+        exchange), tear their mesh links down, and ack with the number of
+        exchange rounds they have fully completed. Phase 2 broadcasts the
+        agreed resume round — the MINIMUM over acks, every worker ahead of
+        it rolls back to its start-of-round snapshot so the new epoch's
+        first exchange runs over bitwise-agreeing replicas — plus the new
+        eval cadence; when a rejoiner is present, the lowest previous
+        survivor uploads its rolled-back state and the master relays it so
+        the rejoiner enters with the exact center (and velocity) bits.
+        Another loss mid-reconfigure restarts the procedure with the
+        smaller roster."""
+        cfg = self.cfg
+        while True:
+            prev = sorted(w for w in self._epoch_members if w in self.links)
+            roster = sorted(self.links)
+            if not prev:
+                raise RuntimeError(
+                    "elastic: no previous-epoch survivor holds the state — "
+                    "the run cannot continue")
+            p = len(roster)
+            epoch = self.membership.epoch + 1
+            padded = self.n + (-self.n) % p
+            rounds = comm_schedules.get(self.sched_name).rounds(
+                p, self.n * 8, cfg.net)
+            self.rounds = comm_rounds.remap_rounds(
+                rounds, ft_membership.dense_rank_map(roster))
+            self.padded = padded
+            if getattr(cfg, "bucket_bytes", 0) > 0:
+                self.boundaries = comm_rounds.default_bucket_boundaries(
+                    self._layer_sizes, padded, cfg.bucket_bytes)
+            joiners = [w for w in roster if w not in prev]
+            sync_wid = prev[0]
+            phase1 = {
+                "phase": 1, "epoch": epoch, "p": p,
+                "survivors": roster,
+                "rounds": comm_schedules.rounds_to_wire(self.rounds),
+                "padded": padded,
+                "peers": {str(w): self.peer_addrs[w] for w in roster},
+                "bucket_bounds": self.boundaries,
+                "n_rounds": self._n_sync_rounds(),
+                "sync_wid": sync_wid,
+                "reporter": roster[0],
+            }
+            try:
+                for w in roster:
+                    slow = cfg.link_slow_factor(w)
+                    self.links[w].send_json(wire.RECONFIGURE, {
+                        **phase1,
+                        "t_wire_s": slow * self._t_sync_wire(),
+                        "t_wire_bucket_s": (
+                            [slow * t for t in self._t_sync_wire_buckets()]
+                            if self.boundaries else []),
+                    }, wid=w)
+            except (wire.WireError, OSError) as exc:
+                # a member died under the broadcast: its reader will surface
+                # the loss; drain it below and restart with the new roster
+                self._mark_event(-1, "reconfigure_retry", repr(exc))
+            # -- collect acks (and absorb whatever else is in flight) -------
+            acks: dict[int, dict] = {}
+            restart = False
+            while set(acks) < set(roster):
+                wid, kind, detail = self._next_event(self.timeout)
+                if kind == "reconf_ack":
+                    if int(detail.get("epoch", -1)) == epoch:
+                        acks[wid] = detail
+                elif kind == "member_lost":
+                    restart = True
+                    break
+                elif kind == "center":
+                    self._p2p_center_report(*detail)   # pre-freeze report
+                elif kind == "wstate":
+                    self.workers_w[wid] = self.wstate_bufs[wid]
+                elif kind == "rejoin_hello":
+                    # stash: admitted after this reconfigure completes (the
+                    # serve loop re-enqueues it) — re-queuing here would
+                    # spin this very collection loop
+                    self._pending_rejoin.append((wid, detail))
+                elif kind == "ready":
+                    # an already-admitted rejoiner finished building while
+                    # this reconfigure was in flight: it is in the roster,
+                    # its ack follows
+                    self.membership.mark_rejoined(wid)
+                    self._mark_event(wid, "worker_rejoined",
+                                     f"enters at epoch {epoch}")
+                else:
+                    raise RuntimeError(
+                        f"protocol violation during reconfigure: "
+                        f"got {kind} from worker {wid}")
+            if restart:
+                continue
+            resume = min(int(acks[w]["round"]) for w in prev)
+            # -- phase 2: agreed resume round + new eval cadence ------------
+            per = p * self.tau
+            last = self._last_eval
+            base_iters = self._p2p_iters_at(resume - 1)
+            evals = []
+            for k in range(resume, self._n_sync_rounds()):
+                it = base_iters + (k + 1 - resume) * per
+                if it - last >= cfg.eval_every_iters:
+                    evals.append(k)
+                    last = it
+            phase2 = {"phase": 2, "epoch": epoch, "resume_round": resume,
+                      "eval_rounds": evals,
+                      "upload_state": bool(joiners)}
+            try:
+                for w in roster:
+                    self.links[w].send_json(wire.RECONFIGURE, phase2, wid=w)
+                if joiners:
+                    # the sync_wid uploads its rolled-back state; relay it
+                    # to every joiner so they enter with the exact bits
+                    state = None
+                    while state is None:
+                        wid, kind, detail = self._next_event(self.timeout)
+                        if kind == "center" and detail[0] == -2:
+                            state = detail[1]
+                        elif kind == "center":
+                            self._p2p_center_report(*detail)
+                        elif kind == "member_lost":
+                            restart = True
+                            break
+                        elif kind == "reconf_ack":
+                            continue     # stale duplicate from a restart
+                        elif kind == "wstate":
+                            self.workers_w[wid] = self.wstate_bufs[wid]
+                        elif kind == "rejoin_hello":
+                            self._pending_rejoin.append((wid, detail))
+                        else:
+                            raise RuntimeError(
+                                f"protocol violation waiting for the state "
+                                f"upload: got {kind} from worker {wid}")
+                    if restart:
+                        continue
+                    for w in joiners:
+                        # raw: exact-state transfer, never through a lossy
+                        # wire codec
+                        self.links[w].send_array(wire.CENTER, state,
+                                                 wid=-2, raw=True)
+            except (wire.WireError, OSError) as exc:
+                self._mark_event(-1, "reconfigure_retry", repr(exc))
+                continue
+            # -- bookkeeping: the epoch turns over --------------------------
+            self._epoch_iters_base = base_iters
+            self._epoch_round_base = resume
+            self._epoch_p = p
+            self._epoch_members = set(roster)
+            new_epoch = self.membership.advance_epoch()
+            assert new_epoch == epoch, (new_epoch, epoch)
+            if self.live is not None:
+                self.live.set_membership(roster)
+            self.counters.gauge("epoch").value = epoch
+            self._mark_event(
+                -1, "reconfigure",
+                f"epoch {epoch}: p={p} survivors={roster} "
+                f"resume_round={resume}")
+            for w, d in self._pending_rejoin:      # stashed mid-freeze
+                self.events.put((w, "rejoin_hello", d))
+            self._pending_rejoin.clear()
+            return
 
     # -- top level -----------------------------------------------------------
 
@@ -914,12 +1385,20 @@ class MasterServer:
             self.rendezvous(listener, token)
             if self.cfg.telemetry_on:
                 self._start_live(listener, token)
+            if self.cfg.telemetry_on or self.elastic:
+                # the rendezvous listener stays open: STATS for monitors,
+                # rejoin HELLOs for respawned workers
+                self._start_acceptor(listener, token)
             self.serve()
             total_time = time.perf_counter() - self._t0
             self._maybe_eval(force=True)
             self._draining = True        # BYEs are expected from here on
-            for link in self.links.values():
-                link.send_simple(wire.DONE)
+            for wid, link in list(self.links.items()):
+                try:
+                    link.send_simple(wire.DONE)
+                except (wire.WireError, OSError):
+                    if not self.elastic:
+                        raise            # elastic: its loss drains below
             self._await("bye", set(self.links),
                         ignore=("grad", "wstate", "center"))
         finally:
@@ -971,25 +1450,36 @@ class MasterServer:
             counters["peer_link_bytes"] = link_bytes
             counters["peer_wire_bytes"] = sum(link_bytes.values())
             counters["peer_messages"] = msgs
-            counters["sync_rounds"] = (
-                self.bye_stats.get(0, {}).get("sync_rounds", 0))
+            # representative per-worker stats come from the LOWEST reporting
+            # wid — under elastic membership worker 0 may not have survived
+            rep = (self.bye_stats[min(self.bye_stats)]
+                   if self.bye_stats else {})
+            counters["sync_rounds"] = rep.get("sync_rounds", 0)
             # overlap accounting: summed across workers (wall seconds of
             # comm-thread activity vs seconds the update path sat blocked
             # on the wire); per-bucket logical payload summed elementwise
             for key in ("comm_s", "exposed_s", "overlapped_s"):
                 counters[key] = sum(
                     st.get(key, 0.0) for st in self.bye_stats.values())
-            counters["n_buckets"] = (
-                self.bye_stats.get(0, {}).get("n_buckets", 1))
+            counters["n_buckets"] = rep.get("n_buckets", 1)
             bucket_bytes = [0] * counters["n_buckets"]
             for st in self.bye_stats.values():
                 for i, v in enumerate(st.get("bucket_send_bytes", [])):
-                    bucket_bytes[i] += int(v)
+                    if i < len(bucket_bytes):  # epochs can differ in buckets
+                        bucket_bytes[i] += int(v)
             counters["bucket_send_bytes"] = bucket_bytes
         health = None
         if self.live is not None:
             health = self.live.health()
             self.live.close()
+        if self.elastic:
+            # PSResult.health must name every death / rejoin / reconfigure
+            # even on a bare (telemetry-off) run — and always carries the
+            # final membership table + epoch
+            if health is None:
+                health = {"events": list(self._elastic_events)}
+            health["membership"] = self.membership.snapshot()
+            health["epoch"] = self.membership.epoch
         trace = self._collect_trace() if self.cfg.trace else None
         return PSResult(
             algorithm=self.cfg.algorithm, transport="tcp",
@@ -1040,8 +1530,13 @@ def run_ps_tcp(problem, easgd, cfg, eval_fn_override=None,
     listener.bind((cfg.tcp_host, cfg.tcp_port))
     listener.listen(cfg.n_workers + 2)
     port = listener.getsockname()[1]
+    env_extra = None
+    spec = ft_chaos.ChaosSpec.from_config(getattr(cfg, "chaos", None))
+    if spec is not None:
+        env_extra = {ft_chaos.ENV_VAR: spec.to_env()}
     procs = (spawn_local_workers(
         cfg.tcp_host, port, cfg.n_workers,
-        pallas=getattr(cfg, "update_backend", "numpy") == "pallas")
+        pallas=getattr(cfg, "update_backend", "numpy") == "pallas",
+        env_extra=env_extra)
         if cfg.spawn_workers else [])
     return master.run(listener, procs=procs)

@@ -79,12 +79,21 @@ STATS = 15          # live-telemetry snapshot request (obs.live): a monitor
 #                     rendezvous, sends {"token", "k"}, receives one JSON
 #                     LiveMonitor.snapshot(k) back, and the connection
 #                     closes — read-only, off the training links entirely
+RECONFIGURE = 16    # elastic membership (ft.membership): master → worker, a
+#                     JSON epoch directive — phase 1 carries the survivor
+#                     set, re-resolved rounds, peer directory and bucket
+#                     bounds; phase 2 carries {"epoch", "resume_round"} and
+#                     is followed by the authoritative CENTER array. The
+#                     designated sync worker acks phase 1 with its own
+#                     worker→master RECONFIGURE {"epoch", "round", "step"}
+#                     plus a CENTER(wid=-2) state upload.
 
 FRAME_NAMES = {HELLO: "HELLO", WELCOME: "WELCOME", READY: "READY",
                WEIGHTS: "WEIGHTS", GRAD: "GRAD", WSTATE: "WSTATE",
                HEARTBEAT: "HEARTBEAT", DONE: "DONE", BYE: "BYE",
                ERROR: "ERROR", SEGMENT: "SEGMENT", PEERS: "PEERS",
-               CENTER: "CENTER", CLOCK: "CLOCK", STATS: "STATS"}
+               CENTER: "CENTER", CLOCK: "CLOCK", STATS: "STATS",
+               RECONFIGURE: "RECONFIGURE"}
 
 CODEC_NONE = 0
 CODEC_SIGN_EF = 1
@@ -96,6 +105,56 @@ _COUNT_LOCK = threading.Lock()    # guards every counters-dict update (the
 
 class WireError(ConnectionError):
     """Framing violation or peer gone."""
+
+
+class DialError(ConnectionError):
+    """A bounded retry-with-backoff dial exhausted its deadline."""
+
+
+def dial_with_backoff(host, port, deadline_s=30.0, base_s=0.05, max_s=1.0,
+                      seed=None, refuse_fn=None):
+    """Dial ``(host, port)`` with jittered exponential backoff until
+    ``deadline_s`` elapses, then raise :class:`DialError` naming the target.
+
+    A staggered multi-host start means the listener may simply not exist yet
+    — ``ConnectionRefusedError``/timeouts are retried; anything else (bad
+    address family, unreachable network after the deadline) surfaces as
+    ``DialError`` with the last underlying error attached.
+
+    ``refuse_fn`` is the fault-injection hook (``ft.chaos``): called before
+    every attempt; returning True simulates a refused dial without touching
+    the socket, so the retry path is testable deterministically.
+    """
+    deadline = time.monotonic() + deadline_s
+    # deterministic per-target jitter stream: retry storms from P dialers
+    # de-synchronize without a global RNG (and without perturbing the run's
+    # seeded math)
+    rng = np.random.default_rng(
+        seed if seed is not None else (hash((host, int(port))) & 0xFFFFFFFF))
+    delay = base_s
+    attempt = 0
+    last_exc = None
+    while True:
+        attempt += 1
+        try:
+            if refuse_fn is not None and refuse_fn():
+                raise ConnectionRefusedError(
+                    f"chaos: dial to {host}:{port} refused by injection")
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            return socket.create_connection(
+                (host, int(port)), timeout=min(max(remaining, 0.01), 10.0))
+        except (ConnectionRefusedError, ConnectionResetError, OSError) as exc:
+            last_exc = exc
+            if time.monotonic() >= deadline:
+                break
+            sleep_s = min(delay, max_s) * (0.5 + float(rng.random()))
+            time.sleep(min(sleep_s, max(deadline - time.monotonic(), 0.0)))
+            delay *= 2.0
+    raise DialError(
+        f"dial to {host}:{port} failed after {attempt} attempts over "
+        f"{deadline_s:.1f}s: {last_exc!r}")
 
 
 class Frame:

@@ -47,9 +47,10 @@ from types import SimpleNamespace
 import numpy as np
 
 from repro.core import easgd_flat
+from repro.ft import chaos as ft_chaos
 from repro.ft.watchdog import Watchdog
 from repro.net import wire
-from repro.net.peer import PeerMesh
+from repro.net.peer import MeshAbort, PeerMesh
 from repro.net.wire import Link, sleep_until
 from repro.obs import clock as obs_clock
 from repro.obs import trace as obs_trace
@@ -57,15 +58,14 @@ from repro.obs import trace as obs_trace
 SYNC = easgd_flat.SYNC_FAMILY
 
 
-def _connect(host: str, port: int, timeout_s: float = 30.0) -> socket.socket:
-    deadline = time.monotonic() + timeout_s
-    while True:
-        try:
-            return socket.create_connection((host, port), timeout=10)
-        except OSError:
-            if time.monotonic() > deadline:
-                raise
-            time.sleep(0.2)
+def _connect(host: str, port: int, timeout_s: float = 30.0,
+             seed: int | None = None, refuse_fn=None) -> socket.socket:
+    """Dial the master with jittered exponential backoff and a hard
+    deadline (``wire.dial_with_backoff``) — a worker that starts before
+    the master's listener, or during a chaos dial-refuse window, absorbs
+    the gap instead of crashing the launch."""
+    return wire.dial_with_backoff(host, port, deadline_s=timeout_s,
+                                  seed=seed, refuse_fn=refuse_fn)
 
 
 def _build_problem(factory: str, kwargs):
@@ -91,7 +91,8 @@ def worker_loop(host: str, port: int, wid: int,
                 token: str = "repro-net", timeout_s: float = 600.0,
                 peer_host: str | None = None, peer_port: int = 0,
                 sync_plane: str = "auto",
-                heartbeat_file: str | None = None) -> None:
+                heartbeat_file: str | None = None,
+                rejoin: bool = False) -> None:
     # preemption plane: SIGTERM/SIGINT set a flag the train loops poll at
     # exchange boundaries — the worker then flushes its trace/telemetry in
     # a clean BYE instead of vanishing mid-frame. The optional heartbeat
@@ -99,7 +100,11 @@ def worker_loop(host: str, port: int, wid: int,
     # tell a hung interpreter from a slow one.
     wd = Watchdog(heartbeat_path=heartbeat_file, interval_s=2.0)
     wd.start_heartbeat()
-    link = Link(_connect(host, port))
+    # fault injection (ft.chaos): armed from REPRO_CHAOS, inert otherwise
+    chaos = ft_chaos.clock_from_env()
+    link = Link(_connect(host, port, timeout_s=min(timeout_s, 30.0),
+                         seed=wid,
+                         refuse_fn=lambda: chaos.refuse_dial(wid)))
     link.sock.settimeout(timeout_s)
     # the peer listener binds BEFORE HELLO so its port can ride in it
     # (sync_plane="master" skips it — no point advertising a dead port).
@@ -113,6 +118,10 @@ def worker_loop(host: str, port: int, wid: int,
     hello = {"wid": wid, "token": token}
     if mesh is not None:
         hello["peer"] = [peer_host or local_addr, mesh.port]
+    if rejoin:
+        # respawned mid-run: the master's control acceptor (not the
+        # rendezvous) answers this HELLO and folds us in at the next epoch
+        hello["rejoin"] = True
     link.send_json(wire.HELLO, hello, wid=wid)
     frame = link.recv_header()
     if frame.ftype == wire.ERROR:
@@ -198,7 +207,7 @@ def worker_loop(host: str, port: int, wid: int,
             _p2p_sync_loop(link, mesh, cfg, grad_fn,
                            np.asarray(w0, np.float64), wid, local_cfg,
                            tr=tr, telem=telem, bye_wrap=_bye_stats,
-                           watchdog=wd)
+                           watchdog=wd, chaos=chaos)
             return
     except BaseException as exc:                 # noqa: BLE001 — tell master
         try:
@@ -226,6 +235,7 @@ def worker_loop(host: str, port: int, wid: int,
                     {"preempted": True, "iters": telem["iters"]}), wid=wid)
                 _drain_after_bye(link)
                 return
+            chaos.maybe_fire(wid, step)          # deterministic fault point
             if tr is not None:
                 t0 = _pc()
             frame = link.recv_header()
@@ -291,7 +301,7 @@ def worker_loop(host: str, port: int, wid: int,
 def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
                    w0: np.ndarray, wid: int, local_cfg,
                    tr=None, telem=None, bye_wrap=None,
-                   watchdog=None) -> None:
+                   watchdog=None, chaos=None) -> None:
     """The p2p sync family: this worker executes its share of the
     registry's rounds over the peer mesh and advances its OWN center
     replica — bitwise in lockstep with every other worker and with the
@@ -309,7 +319,20 @@ def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
     bucketed exchange inline first (the paper's no-overlap baseline);
     ``update_backend="pallas"`` applies each bucket through the fused
     elastic-update kernel instead of easgd_flat (still bitwise — see
-    kernels/elastic_update.py for the ISA pin that makes it so)."""
+    kernels/elastic_update.py for the ISA pin that makes it so).
+
+    Under ``elastic`` (WELCOME flag, from ``PSConfig.elastic``) this loop
+    is also the worker half of the membership tentpole (ft.membership): a
+    control-reader thread owns the master link's inbound side and routes
+    RECONFIGURE/CENTER/DONE/ERROR into a queue; a peer death surfaces as a
+    failed exchange (``mesh.reset()`` cascades so every survivor falls out
+    fast), a pure join as a flag checked at the round boundary, and both
+    enter ``_recover`` — ack the freeze with the rounds completed, roll
+    back to the 2-deep start-of-round snapshot the master's agreed
+    ``resume_round`` names, rewire the mesh to the new epoch's geometry,
+    and continue in the same process. With ``elastic`` off none of this
+    machinery exists at runtime (no thread, no snapshots): the happy path
+    stays bitwise AND cost-identical to the pre-membership loop."""
     import queue as _queue
 
     from repro.comm.rounds import peer_pairs, rounds_from_wire
@@ -325,9 +348,16 @@ def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
     t_bucket = [float(x) for x in (cfg.get("t_wire_bucket_s") or [])]
     rounds = rounds_from_wire(cfg["rounds"])
     directory = {int(k): v for k, v in cfg["peers"].items()}
+    elastic = bool(cfg.get("elastic"))
+    rejoin = bool(cfg.get("rejoin"))
+    reporter = 0                   # lowest live wid sends CENTER reports
     mesh.codec = cfg.get("codec", "none")
-    mesh.connect(directory, peer_pairs(rounds))
-    mesh.set_rounds(rounds, padded, boundaries=bounds)
+    if not rejoin:
+        # a rejoiner holds off: the RECONFIGURE that folds it in names the
+        # epoch's actual geometry (the WELCOME's copy is already stale the
+        # moment the next membership event lands)
+        mesh.connect(directory, peer_pairs(rounds))
+        mesh.set_rounds(rounds, padded, boundaries=bounds)
 
     fused_easgd = fused_sgd = None
     if backend == "pallas":
@@ -343,6 +373,51 @@ def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
         _fk = importlib.import_module("repro.kernels.elastic_update")
         fused_easgd = _fk.fused_sync_easgd_update
         fused_sgd = _fk.fused_sync_sgd_update
+
+    # -- elastic control plane: ONE thread owns the master link's inbound
+    # side for the whole run (RECONFIGURE can land at any moment, so the
+    # main thread can never block on a direct recv) and routes frames into
+    # a queue the train loop and the recovery path consume from
+    ctrl_q: _queue.SimpleQueue = _queue.SimpleQueue()
+    pending_reconf = [0]           # phase-1s seen, not yet consumed (GIL-
+    ctrl_th = None                 # atomic int updates, no lock needed)
+
+    def _ctrl_reader():
+        try:
+            while True:
+                frame = link.recv_header()
+                if frame.ftype == wire.RECONFIGURE:
+                    payload = link.recv_json(frame)
+                    if payload.get("phase") == 1:
+                        pending_reconf[0] += 1
+                    ctrl_q.put(("reconf", payload))
+                elif frame.ftype == wire.CENTER:
+                    ctrl_q.put(("center", link.recv_array(frame)))
+                elif frame.ftype == wire.DONE:
+                    link.recv_discard(frame)
+                    ctrl_q.put(("done", None))
+                    return
+                elif frame.ftype == wire.ERROR:
+                    ctrl_q.put(("error", link.recv_json(frame)))
+                    return
+                else:
+                    link.recv_discard(frame)
+        except (wire.WireError, OSError):
+            ctrl_q.put(("dead", None))
+
+    def _ctrl_get():
+        kind, payload = ctrl_q.get()
+        if kind == "error":
+            raise RuntimeError(f"master error: {payload}")
+        if kind == "dead":
+            raise wire.WireError("master link died mid-run")
+        return kind, payload
+
+    if elastic:
+        # started BEFORE READY: a rejoiner's READY makes the master fire
+        # the folding RECONFIGURE immediately
+        ctrl_th = threading.Thread(target=_ctrl_reader, daemon=True)
+        ctrl_th.start()
     link.send_simple(wire.READY, wid=wid)        # mesh up, clock may start
 
     w = w0.copy()                  # same bits as the master's problem build
@@ -351,11 +426,14 @@ def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
     row = np.zeros(padded)         # this worker's mailbox row
     exc_box: list = []
     done_q: _queue.SimpleQueue = _queue.SimpleQueue()
-    n_buckets = mesh.n_buckets
-    # update slices: bucket spans clamped to the real row (beyond n is pad)
-    u_spans = [(a, min(b, n)) for a, b in zip(mesh.boundaries[:-1],
-                                              mesh.boundaries[1:])]
-    pace = t_bucket if len(t_bucket) == n_buckets else None
+    if rejoin:
+        n_buckets, u_spans, pace = 0, [], None   # set by the folding epoch
+    else:
+        n_buckets = mesh.n_buckets
+        # update slices: bucket spans clamped to the real row (past n: pad)
+        u_spans = [(a, min(b, n)) for a, b in zip(mesh.boundaries[:-1],
+                                                  mesh.boundaries[1:])]
+        pace = t_bucket if len(t_bucket) == n_buckets else None
     comm_s = exposed_s = 0.0                     # overlap accounting
     _pc = time.perf_counter
     tr_comm = obs_trace.tracer("comm", wid=wid) if tr is not None else None
@@ -456,85 +534,254 @@ def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
             tr.record(obs_trace.COMPUTE, t0, time.perf_counter())
         return g
 
+    # start-of-round snapshot ring, kept 2 deep (elastic only): the agreed
+    # resume round is the MIN over survivor acks, and the allreduce mesh
+    # bounds the completed-round spread to 1 (a worker finishes exchange k
+    # only once every peer has entered it), so rolling back ever needs at
+    # most the previous boundary
+    snaps: dict = {}
+    cur_epoch = 0
+
+    def _recover(rounds_done, step_now, failed, first_p1=None,
+                 joiner=False):
+        """Worker half of the two-phase reconfigure (see server.py's
+        ``_reconfigure_p2p``): tear the mesh down, ack phase 1 with the
+        rounds fully completed, adopt phase 2's resume round (rolling back
+        to its snapshot — or, for a joiner, the state the master relays),
+        rewire to the new epoch's geometry, and return (resume, step)."""
+        nonlocal P, padded, n_rounds, rounds, row, u_spans, n_buckets, \
+            pace, t_wire, t_bucket, eval_rounds, reporter, cur_epoch
+        p1 = first_p1
+        while True:
+            mesh.reset()                 # closes peer links: every survivor
+            exc_box.clear()              # still blocked in the doomed
+            while True:                  # exchange falls out right away
+                try:
+                    done_q.get_nowait()
+                except _queue.Empty:
+                    break
+            while p1 is None:
+                kind, payload = _ctrl_get()
+                if kind == "done":
+                    raise RuntimeError("master finished mid-reconfigure")
+                if kind == "reconf" and payload.get("phase") == 1:
+                    pending_reconf[0] -= 1
+                    p1 = payload
+            p2 = None
+            while p2 is None:
+                link.send_json(wire.RECONFIGURE,
+                               {"epoch": int(p1["epoch"]),
+                                "round": rounds_done,
+                                "step": step_now}, wid=wid)
+                while True:
+                    kind, payload = _ctrl_get()
+                    if kind == "done":
+                        raise RuntimeError(
+                            "master finished mid-reconfigure")
+                    if kind != "reconf":
+                        continue
+                    if payload.get("phase") == 1:
+                        # another loss mid-handshake: the master restarted
+                        # with a smaller roster — re-ack the fresh epoch
+                        pending_reconf[0] -= 1
+                        p1 = payload
+                        break
+                    if int(payload.get("epoch", -1)) == int(p1["epoch"]):
+                        p2 = payload
+                        break
+            resume = int(p2["resume_round"])
+            if pending_reconf[0] > 0:
+                # a fresh phase 1 is already queued (loss after phase 2
+                # went out) — don't wire a doomed mesh, restart instead
+                p1 = None
+                continue
+            # -- state: roll back, upload, or adopt -------------------------
+            if joiner:
+                arr = None
+                while arr is None:
+                    kind, payload = _ctrl_get()
+                    if kind == "center":     # the relayed sync_wid state
+                        arr = payload
+                    elif kind == "done":
+                        raise RuntimeError(
+                            "master finished mid-reconfigure")
+                center[:] = arr[:n]
+                vel[:] = arr[n:2 * n] if arr.size >= 2 * n else 0.0
+                w[:] = center
+                step_now = resume * tau  # the survivors' step at resume
+            else:
+                if failed or resume != rounds_done:
+                    try:
+                        sw, sv, sc, sstep = snaps[resume]
+                    except KeyError:
+                        raise RuntimeError(
+                            f"elastic: no snapshot for resume round "
+                            f"{resume} (have {sorted(snaps)})") from None
+                    w[:], vel[:], center[:] = sw, sv, sc
+                    step_now = sstep
+                if p2.get("upload_state") and wid == int(p1["sync_wid"]):
+                    # lowest previous survivor: ship the rolled-back state
+                    # so joiners enter with the exact center (and vel) bits
+                    state = (center if algo == "sync_easgd"
+                             else np.concatenate([center, vel]))
+                    link.send_array(wire.CENTER, state, wid=-2, raw=True)
+            # -- adopt the new epoch's geometry -----------------------------
+            cur_epoch = int(p1["epoch"])
+            P, padded = int(p1["p"]), int(p1["padded"])
+            n_rounds = int(p1["n_rounds"])
+            rounds = rounds_from_wire(p1["rounds"])
+            t_wire = float(p1.get("t_wire_s", 0.0))
+            t_bucket = [float(x) for x in (p1.get("t_wire_bucket_s") or [])]
+            eval_rounds = set(int(x) for x in p2["eval_rounds"])
+            reporter = int(p1["reporter"])
+            row = np.zeros(padded)
+            if resume < n_rounds:        # exchanges remain: rewire
+                new_dir = {int(x): a for x, a in p1["peers"].items()}
+                mesh.connect(new_dir, peer_pairs(rounds))
+                mesh.set_rounds(rounds, padded,
+                                boundaries=p1.get("bucket_bounds") or None)
+                n_buckets = mesh.n_buckets
+                u_spans = [(a, min(b, n))
+                           for a, b in zip(mesh.boundaries[:-1],
+                                           mesh.boundaries[1:])]
+                pace = t_bucket if len(t_bucket) == n_buckets else None
+            snaps.clear()                # pre-epoch snapshots are stale
+            return resume, step_now
+
     step = 0
-    for k in range(n_rounds):
-        if watchdog is not None and watchdog.should_stop.is_set():
-            # preempted between rounds: the mesh is only safe to leave at
-            # a round boundary (peers block on our segments mid-exchange)
-            stats = {"preempted": True, "iters": step}
-            if bye_wrap is not None:
-                stats = bye_wrap(stats)
-            link.send_json(wire.BYE, stats, wid=wid)
-            _drain_after_bye(link)
-            return
-        if tau > 1:
-            t0 = time.perf_counter()
-            for _ in range(tau - 1):             # τ−1 local-only steps
-                g = grad_fn(w, step, wid)
-                easgd_flat.local_step(algo, w, vel, g, local_cfg)
-                step += 1
-            if tr is not None:
-                tr.record(obs_trace.LOCAL_STEP, t0, time.perf_counter(),
-                          tau - 1)
-        if algo == "sync_easgd":
-            row[:n] = w                          # start-of-exchange weights
-            if overlap:
-                comm = threading.Thread(target=_exchange)
-                comm.start()                     # buckets fly while the
-                grad = _grad_traced(step)        # gradient computes
-                step += 1                        # (paper §6.1.3)
-                _drain(lambda b: _apply_easgd(b, grad))
-                _join_comm(comm)
-            else:
-                _exchange_inline()
-                grad = _grad_traced(step)
-                step += 1
-                _drain(lambda b: _apply_easgd(b, grad))
-            if exc_box:
-                raise exc_box[0]
-        else:                                    # sync_sgd: grads first, so
-            grad = _grad_traced(step)            # only the per-bucket master
-            step += 1                            # update overlaps (§5.1)
-            row[:n] = grad
-            if overlap:
-                comm = threading.Thread(target=_exchange)
-                comm.start()
-                _drain(_apply_sgd)
-                _join_comm(comm)
-            else:
-                _exchange_inline()
-                _drain(_apply_sgd)
-            if exc_box:
-                raise exc_box[0]
-            w[:] = center
-        if telem is not None:
-            telem["iters"] = step
-            telem["exposed_s"] = exposed_s
-            telem["comm_s"] = comm_s
-        if wid == 0 and k in eval_rounds:
-            # control-plane reports go RAW even under wire compression:
-            # these are one-shot exact-state transfers, not a stream error
-            # feedback could correct over time
-            link.send_array(wire.CENTER, center, wid=wid, raw=True)
-    if wid == 0:                                 # the final center update —
-        link.send_array(wire.CENTER, center, wid=wid,   # Θ(N), not Θ(P·N)
-                        raw=True)
-    link.send_array(wire.WSTATE, w, wid=wid, raw=True)  # final weights
-    stats = mesh.stats()
-    stats.update({"comm_s": comm_s, "exposed_s": exposed_s,
-                  "overlapped_s": max(0.0, comm_s - exposed_s),
-                  "overlap": overlap, "update_backend": backend})
-    if bye_wrap is not None:
-        stats = bye_wrap(stats)
-    while True:                                  # control plane: DONE → BYE
-        frame = link.recv_header()
-        if frame.ftype == wire.DONE:
-            link.recv_discard(frame)
-            link.send_json(wire.BYE, stats, wid=wid)
-            return
-        if frame.ftype == wire.ERROR:
-            raise RuntimeError(f"master error: {link.recv_json(frame)}")
-        link.recv_discard(frame)
+    k = 0
+    if rejoin:
+        # a respawn enters through recovery: ack round −1 (it is not a
+        # previous-epoch survivor, so its ack never constrains the resume
+        # round), adopt the relayed state, and start at the resume round
+        k, step = _recover(-1, 0, failed=False, joiner=True)
+    reported_final = False
+    while True:
+        while k < n_rounds:
+            if elastic:
+                snaps[k] = (w.copy(), vel.copy(), center.copy(), step)
+                snaps.pop(k - 2, None)
+                if pending_reconf[0] > 0:        # a join (no death) folds
+                    k, step = _recover(k, step, failed=False)  # in here,
+                    continue                     # at the round boundary
+            if watchdog is not None and watchdog.should_stop.is_set():
+                # preempted between rounds: the mesh is only safe to leave
+                # at a round boundary (peers block on our segments
+                # mid-exchange)
+                stats = {"preempted": True, "iters": step}
+                if bye_wrap is not None:
+                    stats = bye_wrap(stats)
+                link.send_json(wire.BYE, stats, wid=wid)
+                if ctrl_th is not None:
+                    ctrl_th.join(timeout=5.0)    # ends when master hangs up
+                else:
+                    _drain_after_bye(link)
+                return
+            if chaos is not None:
+                chaos.maybe_fire(wid, step)      # deterministic fault point
+            try:
+                if tau > 1:
+                    t0 = time.perf_counter()
+                    for _ in range(tau - 1):     # τ−1 local-only steps
+                        g = grad_fn(w, step, wid)
+                        easgd_flat.local_step(algo, w, vel, g, local_cfg)
+                        step += 1
+                    if tr is not None:
+                        tr.record(obs_trace.LOCAL_STEP, t0,
+                                  time.perf_counter(), tau - 1)
+                if algo == "sync_easgd":
+                    row[:n] = w                  # start-of-exchange weights
+                    if overlap:
+                        comm = threading.Thread(target=_exchange)
+                        comm.start()             # buckets fly while the
+                        grad = _grad_traced(step)    # gradient computes
+                        step += 1                # (paper §6.1.3)
+                        _drain(lambda b: _apply_easgd(b, grad))
+                        _join_comm(comm)
+                    else:
+                        _exchange_inline()
+                        grad = _grad_traced(step)
+                        step += 1
+                        _drain(lambda b: _apply_easgd(b, grad))
+                    if exc_box:
+                        raise exc_box[0]
+                else:                            # sync_sgd: grads first, so
+                    grad = _grad_traced(step)    # only the per-bucket
+                    step += 1                    # master update overlaps
+                    row[:n] = grad               # (§5.1)
+                    if overlap:
+                        comm = threading.Thread(target=_exchange)
+                        comm.start()
+                        _drain(_apply_sgd)
+                        _join_comm(comm)
+                    else:
+                        _exchange_inline()
+                        _drain(_apply_sgd)
+                    if exc_box:
+                        raise exc_box[0]
+                    w[:] = center
+                if telem is not None:
+                    telem["iters"] = step
+                    telem["exposed_s"] = exposed_s
+                    telem["comm_s"] = comm_s
+                if wid == reporter and k in eval_rounds:
+                    # control-plane reports go RAW even under wire
+                    # compression (one-shot exact-state transfers, not a
+                    # stream error feedback could correct over time) and
+                    # TAGGED with the exchange round: reports and
+                    # reconfigurations interleave, so the master can't
+                    # infer the cadence from arrival order
+                    link.send_array(wire.CENTER, center, wid=k, raw=True)
+            except (wire.WireError, OSError, MeshAbort):
+                if not elastic:
+                    raise
+                # a peer died: the exchange collapsed under us (mesh.reset
+                # on any survivor cascades the collapse) — freeze, ack the
+                # rounds completed, resume in the reconfigured epoch
+                k, step = _recover(k, step, failed=True)
+                continue
+            k += 1
+        # -- final reports: tagged center (−1) + this worker's weights ------
+        if wid == reporter and not reported_final:
+            link.send_array(wire.CENTER, center, wid=-1,    # Θ(N), not
+                            raw=True)                       # Θ(P·N)
+            reported_final = True
+        link.send_array(wire.WSTATE, w, wid=wid, raw=True)  # final weights
+        stats = mesh.stats()
+        stats.update({"comm_s": comm_s, "exposed_s": exposed_s,
+                      "overlapped_s": max(0.0, comm_s - exposed_s),
+                      "overlap": overlap, "update_backend": backend})
+        if elastic:
+            stats["epoch"] = cur_epoch
+        if bye_wrap is not None:
+            stats = bye_wrap(stats)
+        if not elastic:
+            while True:                          # control plane: DONE → BYE
+                frame = link.recv_header()
+                if frame.ftype == wire.DONE:
+                    link.recv_discard(frame)
+                    link.send_json(wire.BYE, stats, wid=wid)
+                    return
+                if frame.ftype == wire.ERROR:
+                    raise RuntimeError(
+                        f"master error: {link.recv_json(frame)}")
+                link.recv_discard(frame)
+        recovered = False
+        while not recovered:                     # elastic: DONE → BYE, via
+            kind, payload = _ctrl_get()          # the control thread
+            if kind == "done":
+                link.send_json(wire.BYE, stats, wid=wid)
+                return
+            if kind == "reconf" and payload.get("phase") == 1:
+                # a member died during the final drain, before the last
+                # CENTER landed: every exchange already completed
+                # everywhere (resume == n_rounds), but the reporter may
+                # have changed — recover, loop back, and re-report (the
+                # master folds duplicate reports idempotently)
+                pending_reconf[0] -= 1
+                k, step = _recover(k, step, failed=False, first_p1=payload)
+                reported_final = False
+                recovered = True
 
 
 def burn_main(spec_json: str, samples: int, wid: int) -> None:
@@ -561,7 +808,8 @@ def burn_main(spec_json: str, samples: int, wid: int) -> None:
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--connect", default=None, metavar="HOST:PORT")
-    ap.add_argument("--wid", type=int, required=True)
+    ap.add_argument("--wid", type=int, default=-1,
+                    help="worker id (default: from REPRO_CLUSTER_SPEC)")
     ap.add_argument("--token", default="repro-net")
     ap.add_argument("--timeout", type=float, default=600.0)
     ap.add_argument("--sync-plane", default="auto",
@@ -583,17 +831,41 @@ def main(argv=None):
                     help="calibration mode: measure this interpreter's "
                          "concurrent gradient rate instead of training")
     ap.add_argument("--samples", type=int, default=20)
+    ap.add_argument("--rejoin", action="store_true",
+                    help="rejoin a running elastic master mid-run (a "
+                         "respawn is a re-exec with REPRO_CLUSTER_SPEC "
+                         "set plus this flag)")
     args = ap.parse_args(argv)
     if args.burn is not None:
         burn_main(args.burn, args.samples, args.wid)
         return
+    # the declarative spec (server.cluster_spec_env) fills any connection
+    # detail the command line leaves out — a respawn needs no hand-crafted
+    # flags beyond --rejoin
+    spec = os.environ.get("REPRO_CLUSTER_SPEC")
+    if spec:
+        import json as _json
+        spec = _json.loads(spec)
+        if args.connect is None:
+            args.connect = f"{spec['host']}:{spec['port']}"
+        if args.wid < 0:
+            args.wid = int(spec["wid"])
+        if args.token == "repro-net" and "token" in spec:
+            args.token = spec["token"]
+        if args.sync_plane == "auto" and "sync_plane" in spec:
+            args.sync_plane = spec["sync_plane"]
+        if args.peer_port == 0 and "peer_port" in spec:
+            args.peer_port = int(spec["peer_port"])
     if args.connect is None:
-        ap.error("--connect is required (unless --burn)")
+        ap.error("--connect is required (unless --burn or "
+                 "REPRO_CLUSTER_SPEC is set)")
+    if args.wid < 0:
+        ap.error("--wid is required (unless REPRO_CLUSTER_SPEC names it)")
     host, port = args.connect.rsplit(":", 1)
     worker_loop(host, int(port), args.wid, token=args.token,
                 timeout_s=args.timeout, peer_host=args.peer_host,
                 peer_port=args.peer_port, sync_plane=args.sync_plane,
-                heartbeat_file=args.heartbeat_file)
+                heartbeat_file=args.heartbeat_file, rejoin=args.rejoin)
 
 
 if __name__ == "__main__":

@@ -164,6 +164,15 @@ class HealthDetector:
         self.flagged: dict = {}          # wid -> kind currently flagged
         self._step = 0
 
+    def set_n_workers(self, n_workers: int) -> None:
+        """Elastic membership changed P: the straggler mask requires a full
+        complement of rates, so the detector must learn the new P or it
+        would wait forever for the dead worker's heartbeat. Strike state
+        resets — the new epoch starts with a clean slate."""
+        self.n_workers = n_workers
+        self.policy.n_pods = n_workers
+        self._strike.clear()
+
     def observe(self, t: float, rates: dict, staleness: dict) -> list:
         """One detector pass. ``rates``: {wid: latest rate_ips or None};
         ``staleness``: {wid: seconds since last heartbeat}. Returns the
@@ -223,6 +232,9 @@ class LiveMonitor:
             n_workers, deadline_factor=deadline_factor,
             stale_after_s=stale_after_s or max(3.0 * hb_interval_s, 1.0))
         self.events: list = []
+        self._retired: set = set()       # wids no longer in the run — their
+        #                                  stale ring samples must not feed
+        #                                  the detector after an epoch change
         self.counters = counters         # metrics.Registry (health_events)
         self.meta = dict(meta or {})
         self.n_samples = 0
@@ -269,7 +281,8 @@ class LiveMonitor:
             for key, value in (gauges or {}).items():
                 self.store.record(AGG_WID, key, value, t)
             rates = {w: self.store.last(w, HealthDetector.RATE_METRIC)
-                     for w in self.store.wids() if w >= 0}
+                     for w in self.store.wids()
+                     if w >= 0 and w not in self._retired}
             if staleness and not rates:
                 rates = {w: None for w in staleness}
             events = self.detector.observe(t, rates, staleness) \
@@ -286,6 +299,16 @@ class LiveMonitor:
                 self._jsonl.flush()
         return events
 
+    def set_membership(self, active_wids) -> None:
+        """Elastic epoch change: the detector tracks the new P and retired
+        wids stop feeding it (their last ring samples would otherwise count
+        as live rates forever)."""
+        wids = sorted(int(w) for w in active_wids)
+        with self._lock:
+            self._retired = {w for w in self.store.wids()
+                             if w >= 0 and w not in wids}
+            self.detector.set_n_workers(len(wids))
+
     def mark_worker_event(self, wid: int, kind: str, detail: str = ""
                           ) -> dict:
         """Lifecycle events the wire observes directly (mid-run BYE, dead
@@ -295,6 +318,13 @@ class LiveMonitor:
             ev["detail"] = detail
         with self._lock:
             self._emit([ev])
+            if self._jsonl is not None:
+                # event-only record: the JSONL stream must name the death /
+                # recovery even if the run ends before the next sampler tick
+                # (launch/monitor --from-jsonl folds bare event lines in)
+                json.dump({"t": ev["t"], "events": [ev]}, self._jsonl)
+                self._jsonl.write("\n")
+                self._jsonl.flush()
         return ev
 
     # -- reads ---------------------------------------------------------------

@@ -155,6 +155,20 @@ class PSConfig:
     #                                  detection (tcp + emulate_net only;
     #                                  clock-plane only, the math is
     #                                  untouched)
+    # -- elastic membership (ft.membership) ---------------------------------
+    elastic: bool = False            # tcp only: a worker death/preemption
+    #                                  becomes a membership transition + a
+    #                                  RECONFIGURE epoch instead of a dead
+    #                                  run; rejoining workers are admitted
+    #                                  mid-run. Off (default): failures
+    #                                  raise exactly as before, and the
+    #                                  happy path runs zero extra frames
+    chaos: Optional[dict] = None     # deterministic fault injection
+    #                                  (ft.chaos.ChaosSpec fields as a
+    #                                  dict: wid / kill_at_iter / signal
+    #                                  "kill"|"term" / dial_refuse_s) —
+    #                                  serialized to the spawned workers'
+    #                                  REPRO_CHAOS env; tcp only
 
     def __post_init__(self):
         assert self.algorithm in ALGORITHMS, self.algorithm
@@ -197,6 +211,15 @@ class PSConfig:
                 f"link_slow needs one factor per worker "
                 f"({len(self.link_slow)} != {self.n_workers})")
             assert all(f >= 1.0 for f in self.link_slow), self.link_slow
+        assert not self.elastic or self.transport == "tcp", (
+            "elastic membership reconfigures real links — only the tcp "
+            f"transport has them (transport='{self.transport}')")
+        if self.chaos is not None:
+            assert self.transport == "tcp", (
+                "chaos injection targets spawned tcp worker processes "
+                f"(transport='{self.transport}')")
+            from repro.ft.chaos import ChaosSpec
+            ChaosSpec.from_config(self.chaos)   # validates the fields
 
     @property
     def telemetry_on(self) -> bool:

@@ -165,10 +165,15 @@ def test_live_monitor_counts_events_and_streams_jsonl(tmp_path):
     assert snap["gauges"]["iters"] == 21.0
     assert snap["workers"][2]["rate_ips"][-1][1] == 1.0
     lines = [json.loads(x) for x in open(path)]
-    assert len(lines) == 3          # eager run-header + 2 samples
+    # eager run-header + 2 samples + the eagerly-flushed event record
+    # (lifecycle events must reach the stream even if the run ends before
+    # the sampler's next tick — ft.membership reads them post-mortem)
+    assert len(lines) == 4
     assert lines[0]["meta"] == {"algorithm": "unit"} \
         and "workers" not in lines[0]
     assert lines[1]["workers"]["0"]["rate_ips"] == 10.0
+    assert lines[3]["events"][0]["kind"] == "worker_left" \
+        and "workers" not in lines[3]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,347 @@
+"""repro.ft.membership — elastic fault-tolerant membership, bottom-up.
+
+ 1. Units: the membership state machine (transitions, epochs, survivor
+    sets), dense-rank round remapping, the flat-row elastic scale ops,
+    the bounded retry dial, and deterministic chaos injection.
+ 2. The failure matrix, end-to-end on real worker processes: SIGKILL
+    mid-run shrinks P=4→P=3 through a RECONFIGURE epoch; SIGTERM is a
+    clean ``preempted`` departure; a respawned worker rejoins and the run
+    re-expands to the next epoch; a chaos-refused HELLO dial is absorbed
+    by the backoff bitwise-invisibly.
+ 3. The honest boundary: ``elastic=False`` (default) keeps every failure
+    a hard error, exactly as before this module existed.
+"""
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import ps
+from repro.comm import rounds as comm_rounds
+from repro.core import costmodel
+from repro.core.easgd import EASGDConfig
+from repro.ft import chaos as ft_chaos
+from repro.ft import elastic_scale, membership
+from repro.net import server as net_server
+from repro.net import wire
+
+CFG = EASGDConfig(eta=0.05, rho=0.07, mu=0.9)
+NET = costmodel.Network("tiny-emu", 5e-3, 1e-9)
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+# ---------------------------------------------------------------------------
+# (1a) the state machine
+# ---------------------------------------------------------------------------
+
+def test_membership_lifecycle_and_epochs():
+    t = membership.MembershipTable(3)
+    assert all(t.state(w) == membership.JOINED for w in range(3))
+    for w in range(3):
+        t.mark_ready(w)
+    assert t.survivors() == [0, 1, 2] and t.joiners() == []
+
+    t.mark_dead(1, "socket drop")
+    assert t.is_lost(1) and not t.is_lost(0)
+    assert t.survivors() == [0, 2]
+    assert t.advance_epoch() == 1
+
+    # a respawn re-enters as JOINED and only becomes ACTIVE at the NEXT
+    # completed reconfiguration — it never computes in the current epoch
+    t.mark_rejoined(1)
+    assert t.state(1) == membership.JOINED
+    assert t.joiners() == [1] and t.survivors() == [0, 2]
+    assert t.members[1].epoch == t.epoch + 1
+    assert t.advance_epoch() == 2
+    assert t.survivors() == [0, 1, 2]
+
+    snap = t.snapshot()
+    assert snap["epoch"] == 2
+    assert snap["members"] == {0: "active", 1: "active", 2: "active"}
+    assert any(tr["from"] == "dead" and tr["to"] == "joined"
+               for tr in snap["transitions"])
+
+
+def test_membership_suspect_and_left_paths():
+    t = membership.MembershipTable(2)
+    t.mark_ready(0), t.mark_ready(1)
+    t.mark_suspect(0)
+    # a suspect stays in the survivor set (benefit of the doubt) and is
+    # rehabilitated by the next epoch
+    assert t.state(0) == membership.SUSPECT
+    assert t.survivors() == [0, 1]
+    t.advance_epoch()
+    assert t.state(0) == membership.ACTIVE
+    t.mark_left(1, "preempted")
+    assert t.state(1) == membership.LEFT and t.is_lost(1)
+    # suspect only demotes ACTIVE members — a LEFT worker stays LEFT
+    t.mark_suspect(1)
+    assert t.state(1) == membership.LEFT
+
+
+def test_dense_rank_map_and_remap_rounds():
+    assert membership.dense_rank_map([0, 1, 3]) == {0: 0, 1: 1, 2: 3}
+    rounds = [[comm_rounds.Message(0, 1, frac=0.5, chunk=0, chunks=2),
+               comm_rounds.Message(2, comm_rounds.MASTER)],
+              [comm_rounds.Message(2, 0, op="set")]]
+    out = comm_rounds.remap_rounds(rounds, {0: 0, 1: 1, 2: 3})
+    assert [(m.src, m.dst) for m in out[0]] == [(0, 1),
+                                                (3, comm_rounds.MASTER)]
+    assert out[1][0].src == 3 and out[1][0].dst == 0
+    # everything but the endpoints is untouched — the remapped structure
+    # prices and executes exactly like the dense one
+    assert (out[0][0].frac, out[0][0].chunk, out[0][0].chunks) == (0.5, 0, 2)
+    assert out[1][0].op == "set"
+
+
+def test_elastic_scale_flat_rows():
+    rng = np.random.RandomState(0)
+    w, v = rng.randn(3, 8), rng.randn(3, 8)
+    center = rng.randn(8)
+    w2, v2 = elastic_scale.pod_leave_rows(w, v, 1)
+    assert w2.shape == (2, 8)
+    np.testing.assert_array_equal(w2, w[[0, 2]])
+    np.testing.assert_array_equal(v2, v[[0, 2]])
+    w3, v3 = elastic_scale.pod_join_rows(w2, v2, center)
+    assert w3.shape == (3, 8)
+    np.testing.assert_array_equal(w3[-1], center)   # seeded FROM the center
+    np.testing.assert_array_equal(v3[-1], 0.0)      # with zero momentum
+
+
+# ---------------------------------------------------------------------------
+# (1b) the bounded retry dial
+# ---------------------------------------------------------------------------
+
+def test_dial_backoff_raises_after_deadline():
+    port = _free_port()                    # nothing listens here
+    t0 = time.monotonic()
+    with pytest.raises(wire.DialError, match=str(port)):
+        wire.dial_with_backoff("127.0.0.1", port, deadline_s=0.3, seed=0)
+    assert time.monotonic() - t0 >= 0.25   # it actually kept retrying
+
+
+def test_dial_backoff_survives_late_listener():
+    """A staggered multi-host start: the listener exists only after the
+    worker already began dialing — the retry must absorb the gap."""
+    srv = socket.socket()
+    srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    srv.bind(("127.0.0.1", 0))             # bound but NOT listening: refused
+    port = srv.getsockname()[1]
+    th = threading.Timer(0.3, srv.listen)
+    th.start()
+    try:
+        conn = wire.dial_with_backoff("127.0.0.1", port, deadline_s=10.0,
+                                      seed=1)
+        conn.close()
+    finally:
+        th.join()
+        srv.close()
+
+
+def test_dial_backoff_refuse_fn_window():
+    srv = socket.socket()
+    srv.bind(("127.0.0.1", 0))
+    srv.listen()
+    port = srv.getsockname()[1]
+    attempts = [0]
+
+    def refuse():
+        attempts[0] += 1
+        return attempts[0] <= 3            # first 3 attempts refused
+
+    try:
+        conn = wire.dial_with_backoff("127.0.0.1", port, deadline_s=10.0,
+                                      seed=2, refuse_fn=refuse)
+        conn.close()
+    finally:
+        srv.close()
+    assert attempts[0] == 4                # retried through the window
+
+
+# ---------------------------------------------------------------------------
+# (1c) chaos injection
+# ---------------------------------------------------------------------------
+
+def test_chaos_spec_roundtrip_and_validation():
+    spec = ft_chaos.ChaosSpec(wid=2, kill_at_iter=10, signal="term",
+                              dial_refuse_s=0.5)
+    assert ft_chaos.ChaosSpec.from_env({ft_chaos.ENV_VAR: spec.to_env()}) \
+        == spec
+    assert ft_chaos.ChaosSpec.from_env({}) is None
+    assert ft_chaos.ChaosSpec.from_config(None) is None
+    assert ft_chaos.ChaosSpec.from_config(spec) is spec
+    assert ft_chaos.ChaosSpec.from_config({"wid": 1}) \
+        == ft_chaos.ChaosSpec(wid=1)
+    with pytest.raises(AssertionError):
+        ft_chaos.ChaosSpec(wid=0, signal="segv")
+    with pytest.raises(AssertionError):
+        ft_chaos.ChaosSpec(wid=0, dial_refuse_s=-1.0)
+
+
+def test_chaos_clock_noop_and_refuse_window():
+    clock = ft_chaos.clock_from_env({})    # no spec: always a no-op clock
+    clock.maybe_fire(0, 10**9)             # must not signal anything
+    assert not clock.refuse_dial(0)
+
+    armed = ft_chaos.ChaosClock(ft_chaos.ChaosSpec(wid=1, dial_refuse_s=0.1))
+    assert armed.refuse_dial(1)            # inside the window
+    assert not armed.refuse_dial(0)        # wrong worker
+    time.sleep(0.15)
+    assert not armed.refuse_dial(1)        # window elapsed
+    armed.maybe_fire(1, 50)                # kill_at_iter=-1: never fires
+
+
+def test_config_gates():
+    with pytest.raises(AssertionError, match="elastic"):
+        ps.PSConfig(algorithm="sync_easgd", transport="thread", elastic=True)
+    with pytest.raises(AssertionError, match="chaos"):
+        ps.PSConfig(algorithm="sync_easgd", transport="process",
+                    chaos={"wid": 0})
+    with pytest.raises(AssertionError, match="segv"):
+        ps.PSConfig(algorithm="sync_easgd", transport="tcp",
+                    chaos={"wid": 0, "signal": "segv"})
+
+
+def test_ft_modules_are_jax_free(subproc):
+    """The elastic plane rides the thin TCP worker's startup path — it must
+    not drag jax in (membership/chaos/flat-row scale ops are numpy-only)."""
+    subproc("""
+        import sys
+        import repro.ft.membership
+        import repro.ft.chaos
+        import repro.ft.elastic_scale
+        import repro.net.worker
+        assert "jax" not in sys.modules, "elastic plane pulled jax in"
+    """, n_devices=1)
+
+
+# ---------------------------------------------------------------------------
+# (2) the failure matrix — real worker processes, deterministic chaos
+# ---------------------------------------------------------------------------
+
+def _ecfg(algo="sync_easgd", P=4, iters=240, **kw):
+    kw.setdefault("eval_every_iters", 10**9)
+    kw.setdefault("schedule", "ring")
+    kw.setdefault("sync_plane", "p2p")
+    return ps.PSConfig(algorithm=algo, n_workers=P, total_iters=iters,
+                       transport="tcp", elastic=True, **kw)
+
+
+def test_elastic_sigkill_shrinks_p2p_run():
+    """SIGKILL mid-run: the p2p sync plane freezes, reconfigures onto the
+    3 survivors, and completes — loss comparable to a clean P=3 run."""
+    res = ps.run_ps(ps.NUMPY_MLP, CFG, _ecfg(
+        chaos={"wid": 2, "kill_at_iter": 20, "signal": "kill"}))
+    kinds = [e["kind"] for e in res.health["events"]]
+    assert "worker_dead" in kinds and "reconfigure" in kinds
+    assert res.health["epoch"] >= 1
+    assert res.health["membership"]["members"][2] == "dead"
+    assert res.health["membership"]["members"][0] == "active"
+    assert np.isfinite(res.final_metric)
+    clean = ps.run_ps(ps.NUMPY_MLP, CFG, ps.PSConfig(
+        algorithm="sync_easgd", n_workers=3, total_iters=180,
+        transport="tcp", schedule="ring", sync_plane="p2p",
+        eval_every_iters=10**9))
+    # different gradient streams after the reconfigure — same training, so
+    # a loose tolerance, not bitwise
+    assert abs(res.final_metric - clean.final_metric) < 0.35
+
+
+def test_elastic_sigterm_is_clean_departure():
+    """SIGTERM: the watchdog converts it to a mid-run BYE — the membership
+    table records LEFT/preempted, not DEAD, and the run still completes."""
+    res = ps.run_ps(ps.NUMPY_MLP, CFG, _ecfg(
+        chaos={"wid": 1, "kill_at_iter": 20, "signal": "term"}))
+    evs = {e["kind"]: e for e in res.health["events"]}
+    assert "worker_left" in evs and evs["worker_left"]["wid"] == 1
+    assert evs["worker_left"]["detail"] == "preempted"
+    assert "reconfigure" in evs
+    assert res.health["membership"]["members"][1] == "left"
+    assert np.isfinite(res.final_metric)
+
+
+def test_elastic_master_plane_absorbs_kill():
+    """The centralized async plane: a dead worker's mailbox slot is simply
+    dropped; the survivors absorb the remaining iterations by arrival."""
+    res = ps.run_ps(ps.NUMPY_MLP, CFG, ps.PSConfig(
+        algorithm="async_easgd", n_workers=3, total_iters=120,
+        transport="tcp", schedule="ring", eval_every_iters=10**9,
+        elastic=True, chaos={"wid": 1, "kill_at_iter": 10, "signal": "kill"}))
+    kinds = [e["kind"] for e in res.health["events"]]
+    assert "worker_dead" in kinds
+    assert res.health["membership"]["members"][1] == "dead"
+    assert res.total_iters == 120          # survivors absorbed the quota
+    assert np.isfinite(res.final_metric)
+
+
+def test_elastic_respawn_rejoins_next_epoch():
+    """The full lifecycle: SIGKILL at epoch 0 → survivors reconfigure to
+    epoch 1 at P=3 → an external respawn (re-exec from REPRO_CLUSTER_SPEC)
+    rejoins → epoch 2 re-expands to P=4 and everyone finishes ACTIVE."""
+    port = _free_port()
+    cfg = _ecfg(iters=600, tcp_port=port, emulate_net=NET,
+                chaos={"wid": 2, "kill_at_iter": 10, "signal": "kill"})
+    procs: list = []
+
+    def _respawn():
+        env = net_server.worker_env()
+        env["REPRO_CLUSTER_SPEC"] = net_server.cluster_spec_env(
+            "worker", 2, "127.0.0.1", port)
+        procs.append(subprocess.Popen(
+            [sys.executable, "-m", "repro.net.worker", "--rejoin"],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+            text=True))
+
+    timer = threading.Timer(1.2, _respawn)
+    timer.start()
+    try:
+        res = ps.run_ps(ps.NUMPY_MLP, CFG, cfg)
+    finally:
+        timer.cancel()
+    assert procs, "respawn timer never fired"
+    out, _ = procs[0].communicate(timeout=60)
+    assert procs[0].returncode == 0, out
+    kinds = [e["kind"] for e in res.health["events"]]
+    assert kinds.count("reconfigure") == 2     # shrink, then re-expand
+    assert "worker_rejoined" in kinds
+    assert res.health["epoch"] == 2
+    assert res.health["membership"]["members"] \
+        == {0: "active", 1: "active", 2: "active", 3: "active"}
+    assert np.isfinite(res.final_metric)
+
+
+def test_chaos_dial_refuse_absorbed_bitwise():
+    """A refused HELLO dial window (staggered start) is retried away by
+    the backoff — the deterministic run's math is untouched, bitwise."""
+    def _det(**kw):
+        cfg = ps.PSConfig(algorithm="sync_easgd", n_workers=2,
+                          total_iters=40, transport="tcp",
+                          schedule="round_robin", deterministic=True,
+                          eval_every_iters=10**9, **kw)
+        return ps.run_ps(ps.NUMPY_MLP, CFG, cfg)
+    a = _det()
+    b = _det(chaos={"wid": 1, "dial_refuse_s": 0.4})
+    np.testing.assert_array_equal(a.center, b.center)
+    np.testing.assert_array_equal(a.workers, b.workers)
+
+
+# ---------------------------------------------------------------------------
+# (3) the honest boundary: elastic off keeps failures fatal
+# ---------------------------------------------------------------------------
+
+def test_kill_without_elastic_stays_fatal():
+    with pytest.raises(RuntimeError, match="worker"):
+        ps.run_ps(ps.NUMPY_MLP, CFG, ps.PSConfig(
+            algorithm="sync_easgd", n_workers=2, total_iters=200,
+            transport="tcp", schedule="ring", sync_plane="p2p",
+            eval_every_iters=10**9,
+            chaos={"wid": 1, "kill_at_iter": 10, "signal": "kill"}))
