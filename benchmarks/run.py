@@ -40,6 +40,10 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<name>.json per module at repo root")
+    ap.add_argument("--real", action="store_true",
+                    help="forward real=True to modules whose main() takes "
+                         "it (fig6_8, table4: execute on the repro.ps "
+                         "runtime instead of modeling only)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -54,7 +58,12 @@ def main() -> None:
         ok = True
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            mod.main(quick=args.quick)
+            kw = {}
+            if args.real:
+                import inspect
+                if "real" in inspect.signature(mod.main).parameters:
+                    kw["real"] = True
+            mod.main(quick=args.quick, **kw)
             print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
         except Exception:
             ok = False

@@ -50,6 +50,10 @@ class ExchangePlan:
     overlap: bool = True
     axis_name: str | None = None
     n_total: int = 1
+    # two-level fabric for PRICING only (the traced collective is
+    # topology-blind — XLA owns placement); None keeps every cost path
+    # bitwise-identical to the flat model
+    topology: costmodel.Topology | None = None
 
     # -- traced exchange (inside shard_map when axis_name is bound) ---------
     def allreduce_sum(self, x):
@@ -109,9 +113,14 @@ class ExchangePlan:
 
     def cost_s(self, n_elements: int, net: costmodel.Network,
                p: int | None = None) -> float:
-        """α–β time of one exchange of ``n_elements`` packed fp32 elements."""
-        return self.schedule.cost(self.wire_bytes(n_elements),
-                                  p if p is not None else self.n_total, net)
+        """α–β time of one exchange of ``n_elements`` packed fp32 elements.
+        With a plan ``topology`` the rounds are priced per link class
+        (cost_topo); otherwise the flat closed form on ``net``."""
+        nb = self.wire_bytes(n_elements)
+        np_ = p if p is not None else self.n_total
+        if self.topology is not None and not self.topology.uniform:
+            return self.schedule.cost_topo(nb, np_, self.topology)
+        return self.schedule.cost(nb, np_, net)
 
     def visible_cost_s(self, n_elements: int, net: costmodel.Network,
                        t_compute: float, p: int | None = None) -> float:
@@ -124,12 +133,15 @@ class ExchangePlan:
 
 def make_plan(schedule: str = "psum", compression: str = "none",
               overlap: bool = True, axis_name: str | None = None,
-              n_total: int = 1) -> ExchangePlan:
+              n_total: int = 1,
+              topology: costmodel.Topology | None = None) -> ExchangePlan:
     """Resolve names through the registries and compose a plan.
 
     Fails fast (clear ValueError) when a pow2-only schedule is composed
     with a non-power-of-two participant count — otherwise the constraint
-    would only surface as an assert buried in shard_map tracing.
+    would only surface as an assert buried in shard_map tracing. (The
+    shard_map impls really do need pow2; the rounds-level topology lift
+    applies to the byte-stream runtimes, not the traced collective.)
     """
     sched = (schedules_lib.get(schedule) if isinstance(schedule, str)
              else schedule)
@@ -141,4 +153,5 @@ def make_plan(schedule: str = "psum", compression: str = "none",
             f"schedule '{sched.name}' needs a power-of-two participant "
             f"count, got {n_total} — use ring/psum/round_robin instead")
     return ExchangePlan(schedule=sched, compression=comp, overlap=overlap,
-                        axis_name=axis_name, n_total=n_total)
+                        axis_name=axis_name, n_total=n_total,
+                        topology=topology)

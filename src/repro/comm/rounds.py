@@ -69,7 +69,7 @@ class Message:
         return self.frac * n_bytes
 
 
-def round_robin_rounds(p, n_bytes=0.0, net=None):
+def round_robin_rounds(p, n_bytes=0.0, net=None, topology=None):
     """2·p serialized master↔worker messages: gather (add into the master,
     rank order — the same summation order as ``np.mean`` over workers, which
     the DES↔real bitwise cross-check relies on), then broadcast."""
@@ -78,7 +78,7 @@ def round_robin_rounds(p, n_bytes=0.0, net=None):
     return gather + bcast
 
 
-def tree_rounds(p, n_bytes=0.0, net=None):
+def tree_rounds(p, n_bytes=0.0, net=None, topology=None):
     rounds = []
     d = 1
     while d < p:
@@ -93,7 +93,7 @@ def tree_rounds(p, n_bytes=0.0, net=None):
     return rounds
 
 
-def butterfly_rounds(p, n_bytes=0.0, net=None):
+def butterfly_rounds(p, n_bytes=0.0, net=None, topology=None):
     rounds = []
     d = 1
     while d < p:
@@ -102,7 +102,7 @@ def butterfly_rounds(p, n_bytes=0.0, net=None):
     return rounds
 
 
-def ring_rounds(p, n_bytes=0.0, net=None):
+def ring_rounds(p, n_bytes=0.0, net=None, topology=None):
     rounds = []
     for s in range(p - 1):      # reduce-scatter
         rounds.append([Message(r, (r + 1) % p, frac=1.0 / p,
@@ -115,10 +115,19 @@ def ring_rounds(p, n_bytes=0.0, net=None):
     return rounds
 
 
-def psum_rounds(p, n_bytes=0.0, net=None):
+def psum_rounds(p, n_bytes=0.0, net=None, topology=None):
     """psum is 'whatever a tuned library picks': butterfly when the α–β
-    model says latency-bound (and p is a power of two), else ring."""
+    model says latency-bound (and p is a power of two), else ring. On a
+    NON-uniform topology the closed forms lie (they price one link class),
+    so the two candidates are priced round-by-round over the actual links."""
     net = net or costmodel.TPU_ICI
+    if topology is not None and not topology.uniform:
+        if p & (p - 1) == 0:
+            btf = butterfly_rounds(p)
+            if t_rounds(btf, n_bytes, topology=topology) \
+                    <= t_rounds(ring_rounds(p), n_bytes, topology=topology):
+                return btf
+        return ring_rounds(p)
     if p & (p - 1) == 0 and costmodel.t_butterfly_allreduce(n_bytes, p, net) \
             <= costmodel.t_ring_allreduce(n_bytes, p, net):
         return butterfly_rounds(p)
@@ -135,22 +144,112 @@ def _inner_size(p: int) -> int:
     return 1 << ((log2p + 1) // 2)
 
 
-def hierarchical_rounds(p, n_bytes=0.0, net=None):
-    m = _inner_size(p)
+def topology_group(p: int, topology=None) -> int:
+    """Group size for the hierarchical schedule: the topology's slot count
+    when it actually tiles p (groups = hosts, so the inner ring stays on
+    intra-host links and only the outer butterfly crosses hosts); otherwise
+    the flat near-square split — which keeps default rounds byte-identical
+    to before topologies existed (tests pin this)."""
+    if topology is not None and topology.hosts > 1 and topology.p == p:
+        return topology.slots
+    return _inner_size(p)
+
+
+def hierarchical_rounds(p, n_bytes=0.0, net=None, topology=None, group=None):
+    """Grouped ring × butterfly (paper §6.2): ring reduce-scatter +
+    all-gather inside each group of ``m`` ranks, then a recursive-doubling
+    butterfly across the ``p // m`` groups. ``m`` comes from the topology
+    (slots-per-host) when one is given, so the ring rides intra-host links
+    and only ⌈log2 hosts⌉ rounds cross hosts. Any ``m ≥ 1`` works — the
+    ring has no power-of-two needs — but the GROUP COUNT must be a power
+    of two for the butterfly, which is how non-pow2 p (e.g. 24 = 4 hosts
+    × 6 slots) becomes schedulable."""
+    m = int(group) if group is not None else topology_group(p, topology)
+    if m < 1 or p % m != 0:
+        raise ValueError(
+            f"hierarchical group size {m} does not tile p={p}")
+    groups = p // m
+    if groups & (groups - 1) != 0:
+        raise ValueError(
+            f"hierarchical needs a power-of-two group count, got "
+            f"{groups} groups of {m} for p={p}")
     rounds = []
     for s in range(m - 1):      # inner grouped-ring reduce-scatter
         rounds.append([Message(g * m + j, g * m + (j + 1) % m, frac=1.0 / m,
                                chunk=(j - s) % m, chunks=m, op="add")
-                       for g in range(p // m) for j in range(m)])
+                       for g in range(groups) for j in range(m)])
     for s in range(m - 1):      # inner grouped-ring all-gather
         rounds.append([Message(g * m + j, g * m + (j + 1) % m, frac=1.0 / m,
                                chunk=(j + 1 - s) % m, chunks=m, op="set")
-                       for g in range(p // m) for j in range(m)])
-    d = m                       # outer butterfly across groups
-    while d < p:
-        rounds.append([Message(i, i ^ d, op="add") for i in range(p)])
-        d *= 2
+                       for g in range(groups) for j in range(m)])
+    d = 1                       # outer butterfly across groups: rank g*m+j
+    while d < groups:           # partners with (g^d)*m+j — for pow2 m this
+        rounds.append([Message(g * m + j, (g ^ d) * m + j, op="add")
+                       for g in range(groups) for j in range(m)])
+        d *= 2                  # is byte-identical to the old i ^ (d*m) form
     return rounds
+
+
+# ---------------------------------------------------------------------------
+# pricing rounds over a (possibly heterogeneous) fabric
+# ---------------------------------------------------------------------------
+
+def _link_net(m: Message, net, topology):
+    return topology.link(m.src, m.dst) if topology is not None else net
+
+
+def t_rounds(rounds, n_bytes: float, net=None, topology=None,
+             wid: int | None = None) -> float:
+    """α–β time of a round structure with PER-MESSAGE link pricing: each
+    round costs the max over its messages of ``link.α + frac·n·link.β``,
+    rounds serialize. With a ``topology`` each message rides its own link
+    class; without one every message rides ``net`` — in which case this is
+    bitwise-equal to the closed ``cost_from_rounds`` formula (α + max_frac
+    ·n·β: the max is attained at the max-frac message and the float ops
+    match). ``wid`` restricts to messages touching that worker — its OWN
+    pacing deadline on a heterogeneous mesh, where an intra-host pair
+    finishes its segment early and waits on cross-host peers at the
+    blocking recv rather than by sleeping."""
+    net = net or costmodel.TPU_ICI
+    total = 0.0
+    for rnd in rounds:
+        worst = None
+        for m in rnd:
+            if wid is not None and m.src != wid and m.dst != wid:
+                continue
+            link = _link_net(m, net, topology)
+            t = link.alpha + m.frac * n_bytes * link.beta
+            if worst is None or t > worst:
+                worst = t
+        if worst is not None:
+            total += worst
+    return total
+
+
+def t_rounds_buckets(rounds, n_elements: int, boundaries, net=None,
+                     topology=None, wid: int | None = None) -> list[float]:
+    """Per-bucket wire time of the bucketed VIEW of ``rounds``, with the
+    same per-message link pricing as ``t_rounds``: bucket b pays, for every
+    round it appears in, the max over its clipped messages of
+    ``link.α + clipped_bytes·link.β``. The f64 payload of a clipped span
+    (a, b) is (b − a)·8 bytes — exactly what the SEGMENT frame moves."""
+    net = net or costmodel.TPU_ICI
+    out = []
+    for plan in bucket_rounds(rounds, n_elements, boundaries):
+        t = 0.0
+        for rnd in plan:
+            worst = None
+            for m, (a, b) in rnd:
+                if wid is not None and m.src != wid and m.dst != wid:
+                    continue
+                link = _link_net(m, net, topology)
+                tm = link.alpha + (b - a) * 8 * link.beta
+                if worst is None or tm > worst:
+                    worst = tm
+            if worst is not None:
+                t += worst
+        out.append(t)
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -46,6 +46,9 @@ from repro.comm.rounds import (       # noqa: F401 — re-exported: one
     round_robin_rounds,
     rounds_from_wire,
     rounds_to_wire,
+    t_rounds,
+    t_rounds_buckets,
+    topology_group,
     tree_rounds,
 )
 from repro.utils.jaxcompat import axis_size, shard_map
@@ -280,20 +283,27 @@ class Schedule:
         return self.cost_fn(n_bytes, p, net)
 
     def rounds(self, p: int, n_bytes: float = 0.0,
-               net: costmodel.Network = costmodel.TPU_ICI) -> list:
+               net: costmodel.Network = costmodel.TPU_ICI,
+               topology: costmodel.Topology | None = None) -> list:
         """The exchange as explicit message rounds (empty for p ≤ 1).
 
         The repro.ps runtime executes exactly these over its transports;
         ``cost_from_rounds`` prices them and equals ``cost`` (pinned by
-        tests) — one structure, run AND simulated.
+        tests) — one structure, run AND simulated. A ``topology`` shapes
+        topology-aware builders (hierarchical groups by host) and lifts
+        the flat pow2 gate for hierarchical — any p with a power-of-two
+        GROUP count resolves there; the builder itself rejects the rest.
         """
         if p <= 1 or self.rounds_fn is None:
             return []
-        if self.pow2_only and p & (p - 1) != 0:
+        if self.pow2_only and p & (p - 1) != 0 and not (
+                self.name == "hierarchical" and topology is not None):
             raise ValueError(
                 f"schedule '{self.name}' needs a power-of-two participant "
                 f"count, got {p} — its round structure would address "
                 f"nonexistent ranks (use ring/round_robin instead)")
+        if topology is not None:
+            return self.rounds_fn(p, n_bytes, net, topology=topology)
         return self.rounds_fn(p, n_bytes, net)
 
     def cost_from_rounds(self, n_bytes: float, p: int,
@@ -303,6 +313,23 @@ class Schedule:
         messages fly concurrently); rounds are serialized."""
         return sum(net.alpha + max(m.frac for m in rnd) * n_bytes * net.beta
                    for rnd in self.rounds(p, n_bytes, net))
+
+    def cost_topo(self, n_bytes: float, p: int,
+                  topology: costmodel.Topology | None = None) -> float:
+        """α–β time of one exchange on a two-level fabric: the schedule's
+        own rounds, priced message-by-message over the topology's link
+        classes (``comm.rounds.t_rounds``). A missing or uniform topology
+        degrades to the closed-form ``cost`` on the intra network — same
+        floats, so homogeneous callers stay bitwise-equal to today."""
+        if topology is None or topology.uniform:
+            net = topology.intra if topology is not None else \
+                costmodel.TPU_ICI
+            return self.cost(n_bytes, p, net)
+        if p <= 1:
+            return 0.0
+        return t_rounds(
+            self.rounds(p, n_bytes, topology.intra, topology=topology),
+            n_bytes, net=topology.intra, topology=topology)
 
     def bytes_from_rounds(self, n_bytes: float, p: int,
                           net: costmodel.Network = costmodel.TPU_ICI
@@ -371,13 +398,40 @@ register(Schedule(
 # ---------------------------------------------------------------------------
 
 def choose(n_bytes: float, p: int,
-           net: costmodel.Network = costmodel.TPU_ICI) -> str:
+           net: costmodel.Network = costmodel.TPU_ICI,
+           topology: costmodel.Topology | None = None,
+           profile: costmodel.LinkProfile | None = None) -> str:
     """α–β-model-driven schedule choice (paper Table 2 reasoning):
     latency-bound small buffers → butterfly; bandwidth-bound → ring.
     butterfly is pow2-only, so a non-power-of-two group always gets ring
-    (valid for any p) — the chooser never proposes an unrunnable schedule."""
+    (valid for any p) — the chooser never proposes an unrunnable schedule.
+
+    With a ``topology`` (or a measured ``profile``, which carries one) the
+    candidates are priced link-by-link via ``cost_topo``: ``hierarchical``
+    joins the candidate set whenever its rounds resolve on that topology,
+    and wins exactly when confining full-size traffic to ⌈log2 hosts⌉
+    cross-host rounds beats the flat schedules' cross-host α bill — the
+    paper's §6.2 regime. Candidate order (butterfly, ring, hierarchical)
+    breaks ties, so hierarchical is only picked on a STRICT improvement
+    and a uniform topology reproduces today's flat choice bitwise."""
+    if profile is not None and topology is None:
+        topology = profile.topology
     if p <= 1:
         return "psum"
+    if topology is not None and not topology.uniform:
+        cands = ["butterfly"] if p & (p - 1) == 0 else []
+        cands.append("ring")
+        try:
+            get("hierarchical").rounds(p, n_bytes, topology.intra,
+                                       topology=topology)
+        except ValueError:
+            pass
+        else:
+            cands.append("hierarchical")
+        return min(cands,
+                   key=lambda nm: get(nm).cost_topo(n_bytes, p, topology))
+    if topology is not None:
+        net = topology.intra
     if p & (p - 1) == 0 and get("butterfly").cost(n_bytes, p, net) <= \
             get("ring").cost(n_bytes, p, net):
         return "butterfly"

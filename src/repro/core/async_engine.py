@@ -50,6 +50,11 @@ class SimConfig:
     eval_every_s: float = 0.0        # 0: eval on schedule below
     eval_every_iters: int = 100
     seed: int = 0
+    # two-level fabric (hosts × slots): when set and non-uniform, sync
+    # exchanges are priced per link class (cost_topo) so the DES charges
+    # the same heterogeneous wire the paced runtime sleeps on; None keeps
+    # every charge bitwise-identical to the flat ``net`` model
+    topology: Optional[costmodel.Topology] = None
 
 
 @dataclasses.dataclass
@@ -95,8 +100,11 @@ class PSEngine:
         from the SHARED ``repro.comm`` registry, so the simulator charges
         exactly what the registered schedule's real implementation moves."""
         sched = comm_schedules.get(schedule or self.sim.schedule)
-        return sched.cost(self.nbytes, p if p is not None
-                          else self.sim.n_workers, self.sim.net)
+        pp = p if p is not None else self.sim.n_workers
+        topo = self.sim.topology
+        if topo is not None and not topo.uniform:
+            return sched.cost_topo(self.nbytes, pp, topo)
+        return sched.cost(self.nbytes, pp, self.sim.net)
 
     # -- algorithms -----------------------------------------------------------
     def run(self, algorithm: str, total_iters: int,

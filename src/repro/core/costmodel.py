@@ -46,6 +46,119 @@ PS_WIRE = Network("emulated PS wire (Ethernet-class, model-scaled)",
                   50e-6, 1.0 / 9e6)
 
 
+# ---------------------------------------------------------------------------
+# heterogeneous fabrics: hosts × slots topologies and measured link profiles
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A two-level fabric: ``hosts`` nodes of ``slots`` workers each, worker
+    i living on host ``i // slots`` (block placement — worker ids are dense
+    per host, which is what launch/cluster's --hosts rendezvous produces).
+    Links within a host pay the ``intra`` α–β; links that cross hosts — or
+    touch the master endpoint, which sits outside every host — pay
+    ``cross``. The degenerate 1-host topology prices every link ``intra``
+    and must reproduce today's flat costs bitwise (tests pin this)."""
+
+    hosts: int
+    slots: int
+    intra: Network = PS_WIRE
+    cross: Network = PS_WIRE
+
+    @property
+    def p(self) -> int:
+        return self.hosts * self.slots
+
+    def host_of(self, wid: int) -> int:
+        """Host index of a worker; the master (negative wid) is its own
+        pseudo-host so master links price as cross-host when hosts > 1."""
+        return -1 if wid < 0 else wid // self.slots
+
+    def link(self, i: int, j: int) -> Network:
+        """The network class the (i, j) link rides."""
+        if self.hosts <= 1:
+            return self.intra
+        return (self.intra if self.host_of(i) == self.host_of(j)
+                else self.cross)
+
+    @property
+    def uniform(self) -> bool:
+        """True when every link prices identically — the topology adds no
+        information over a flat ``Network`` and cost paths must stay
+        bitwise-equal to the flat formulas."""
+        return self.hosts <= 1 or self.intra == self.cross
+
+    def to_wire(self) -> dict:
+        """JSON-safe form (WELCOME ships this to workers)."""
+        return {"hosts": self.hosts, "slots": self.slots,
+                "intra": [self.intra.name, self.intra.alpha,
+                          self.intra.beta],
+                "cross": [self.cross.name, self.cross.alpha,
+                          self.cross.beta]}
+
+    @staticmethod
+    def from_wire(d: dict) -> "Topology":
+        return Topology(hosts=int(d["hosts"]), slots=int(d["slots"]),
+                        intra=Network(*d["intra"]),
+                        cross=Network(*d["cross"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkProfile:
+    """Per-link-class α–β as *measured* on a live mesh (``ps.calibrate``
+    learns one from clock-probe RTTs plus a short pairwise burst), in the
+    same two-level shape the chooser prices. ``source`` names where the
+    numbers came from ('analytic', 'measured:thread', 'measured:tcp');
+    ``detail`` carries the raw observations for the bench records."""
+
+    topology: Topology
+    source: str = "analytic"
+    detail: dict = dataclasses.field(default_factory=dict)
+
+    def to_wire(self) -> dict:
+        return {"topology": self.topology.to_wire(), "source": self.source,
+                "detail": dict(self.detail)}
+
+    @staticmethod
+    def from_wire(d: dict) -> "LinkProfile":
+        return LinkProfile(topology=Topology.from_wire(d["topology"]),
+                           source=str(d.get("source", "analytic")),
+                           detail=dict(d.get("detail", {})))
+
+
+def emulated_topology(hosts: int, slots: int, intra: Network = PS_WIRE,
+                      cross_alpha_x: float = 20.0,
+                      cross_beta_x: float = 4.0) -> Topology:
+    """The canonical emulated two-level fabric: intra-host links are the
+    PS wire; cross-host links stretch α by ``cross_alpha_x`` and β by
+    ``cross_beta_x`` (defaults: 1 ms / ~2.25 MB/s — an oversubscribed
+    Ethernet uplink against the paper's in-rack fabric). At these defaults
+    hierarchical's single cross-host butterfly beats flat schedules from
+    P = 16 up on 8-slot hosts, which is exactly the regime §6.2 claims."""
+    if hosts < 1 or slots < 1:
+        raise ValueError(f"topology needs hosts, slots >= 1, "
+                         f"got {hosts}x{slots}")
+    if cross_alpha_x == 1.0 and cross_beta_x == 1.0:
+        cross = intra        # exactly uniform: link class carries no info
+    else:
+        cross = Network(
+            f"{intra.name} [cross-host {cross_alpha_x:g}xA "
+            f"{cross_beta_x:g}xB]",
+            intra.alpha * cross_alpha_x, intra.beta * cross_beta_x)
+    return Topology(hosts=hosts, slots=slots, intra=intra, cross=cross)
+
+
+def t_hierarchical_two_level(n: float, topo: Topology) -> float:
+    """Closed-form two-level hierarchical all-reduce cost on ``topo``:
+    a bandwidth-optimal ring inside each host (slots participants, intra
+    links) plus a recursive-doubling butterfly across hosts (full-size
+    messages, cross links). The rounds-level pricing in comm.rounds is the
+    authoritative number; this is the analytic cross-check."""
+    inner = t_ring_allreduce(n, topo.slots, topo.intra)
+    outer = t_butterfly_allreduce(n, topo.hosts, topo.cross)
+    return inner + outer
+
+
 @dataclasses.dataclass(frozen=True)
 class Chip:
     name: str

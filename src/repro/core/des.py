@@ -160,7 +160,9 @@ def weak_scaling_efficiency(n_nodes: int, *, t_compute: float,
                             net: costmodel.Network,
                             jitter_sigma: float = 0.0,
                             overlap: bool = True,
-                            schedule: str = "psum") -> float:
+                            schedule: str = "psum",
+                            topology: costmodel.Topology | None = None
+                            ) -> float:
     """Weak scaling: per-node work constant; per-step time = slowest node
     (synchronous) + packed all-reduce. With lognormal per-node jitter σ the
     expected max over N nodes grows ≈ σ·√(2 ln N) — at cluster scale the
@@ -168,8 +170,14 @@ def weak_scaling_efficiency(n_nodes: int, *, t_compute: float,
     is <1% here). ``jitter_sigma`` is calibrated from a measured 2-node
     efficiency and then PREDICTS the rest of the curve. ``schedule`` is a
     ``repro.comm`` registry name (default ``psum``: what a tuned library
-    picks — min of butterfly/ring)."""
-    t_comm = comm_schedules.get(schedule).cost(weight_bytes, n_nodes, net)
+    picks — min of butterfly/ring). With a non-uniform ``topology`` the
+    exchange is priced per link class (``cost_topo``) — the analytic half
+    of the Table-4 curve then shares its fabric with the measured one."""
+    if topology is not None and not topology.uniform:
+        t_comm = comm_schedules.get(schedule).cost_topo(
+            weight_bytes, n_nodes, topology)
+    else:
+        t_comm = comm_schedules.get(schedule).cost(weight_bytes, n_nodes, net)
     straggle = jitter_sigma * math.sqrt(2 * math.log(n_nodes)) \
         if n_nodes > 1 else 0.0
     tn = t_compute * (1 + straggle) + t_comm * (0.0 if overlap else 1.0)

@@ -90,6 +90,18 @@ def main(argv=None):
     ap.add_argument("--emulate", default="none", choices=["wire", "none"],
                     help="'wire': deadline-pace every message under "
                          "costmodel.PS_WIRE on top of the real socket")
+    ap.add_argument("--topology", default=None, metavar="HOSTSxSLOTS",
+                    help="sync family: emulate a two-level fabric (e.g. 2x8; "
+                         "HOSTSxSLOTS must equal --workers). Cross-host "
+                         "links pace at --cross-alpha-x/--cross-beta-x "
+                         "times the intra-host wire; '--schedule auto' then "
+                         "chooses per link class from a measured profile. "
+                         "Replaces --emulate wire")
+    ap.add_argument("--cross-alpha-x", type=float, default=20.0,
+                    help="cross-host latency multiplier for --topology")
+    ap.add_argument("--cross-beta-x", type=float, default=4.0,
+                    help="cross-host inverse-bandwidth multiplier for "
+                         "--topology")
     ap.add_argument("--hosts", default=None,
                     help="comma-separated worker hosts; master binds "
                          "0.0.0.0:--port and waits for them to join "
@@ -174,6 +186,31 @@ def main(argv=None):
         ap.error("--elastic reconfigures real links (tcp only)")
     easgd = EASGDConfig(eta=args.eta, rho=args.rho, mu=0.9, tau=args.tau)
     emulate = costmodel.PS_WIRE if args.emulate == "wire" else None
+    topology = None
+    if args.topology:
+        from repro.core.easgd_flat import SYNC_FAMILY as _SYNC_T
+        try:
+            t_hosts, t_slots = (int(x)
+                                for x in args.topology.lower().split("x"))
+        except ValueError:
+            ap.error(f"--topology wants HOSTSxSLOTS (e.g. 2x8), got "
+                     f"'{args.topology}'")
+        if t_hosts * t_slots != args.workers:
+            ap.error(f"--topology {t_hosts}x{t_slots} does not tile "
+                     f"--workers {args.workers}")
+        if args.transport not in ("thread", "tcp"):
+            ap.error("--topology needs --transport thread or tcp")
+        bad = [a for a in algos if a not in _SYNC_T]
+        if bad:
+            ap.error(f"--topology prices the sync-family exchange; {bad} "
+                     f"are not sync algorithms")
+        if args.elastic:
+            ap.error("--topology and --elastic are not yet composed (an "
+                     "epoch's survivors no longer tile the declared grid)")
+        topology = costmodel.emulated_topology(
+            t_hosts, t_slots, cross_alpha_x=args.cross_alpha_x,
+            cross_beta_x=args.cross_beta_x)
+        emulate = None  # topology REPLACES the global emulated wire
     multi_host = bool(args.hosts)
     # --port pins the rendezvous listener even on localhost (so a monitor
     # knows where to connect); without it localhost stays ephemeral
@@ -190,6 +227,7 @@ def main(argv=None):
         tcp_port=port,
         spawn_workers=not multi_host,
         sync_plane=args.sync_plane,
+        topology=topology,
         bucket_bytes=args.bucket_bytes, overlap=not args.no_overlap,
         update_backend=args.update_backend,
         trace=args.trace or bool(args.trace_dir),

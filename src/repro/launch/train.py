@@ -56,12 +56,35 @@ def run_ps_mode(args) -> list:
         raise SystemExit("--sync-plane p2p needs --transport tcp (the p2p "
                          "data plane is worker↔worker sockets)")
     problem = zoo.resolve(args.model)
+    topology = None
+    if args.topology:
+        from repro.core.easgd_flat import SYNC_FAMILY as _SYNC_T
+        try:
+            hosts, slots = (int(x) for x in args.topology.lower().split("x"))
+        except ValueError:
+            raise SystemExit(f"--topology wants HOSTSxSLOTS (e.g. 2x8), "
+                             f"got '{args.topology}'")
+        if hosts * slots != args.ps_workers:
+            raise SystemExit(f"--topology {hosts}x{slots} does not tile "
+                             f"--ps-workers {args.ps_workers}")
+        if args.transport not in ("thread", "tcp"):
+            raise SystemExit("--topology needs --transport thread or tcp "
+                             "(per-link pacing lives on those planes)")
+        topology = costmodel.emulated_topology(
+            hosts, slots, cross_alpha_x=args.cross_alpha_x,
+            cross_beta_x=args.cross_beta_x)
+        algos = [a for a in algos if a in _SYNC_T]
+        if not algos:
+            raise SystemExit("--topology prices the sync-family exchange — "
+                             "pick a sync_* algorithm (or 'all')")
+        net = None      # topology REPLACES the global emulated wire
     base = ps.PSConfig(
         algorithm=algos[0], n_workers=args.ps_workers,
         transport=args.transport, schedule=args.schedule or "ring",
         total_iters=args.ps_iters, eval_every_iters=args.ps_eval_every,
         emulate_net=net, wire_compression=wire_codec,
         bucket_bytes=args.bucket_bytes, overlap=not args.no_overlap,
+        topology=topology,
         trace=args.trace or bool(args.trace_dir),
         trace_dir=args.trace_dir)
     cal = ps.calibrate(problem, base)
@@ -161,6 +184,20 @@ def main(argv=None):
                     help="tcp sync family: 'p2p' executes Schedule.rounds "
                          "over direct worker↔worker links (the master "
                          "becomes control plane — see repro.net.peer)")
+    ap.add_argument("--topology", default=None, metavar="HOSTSxSLOTS",
+                    help="ps sync family: emulate a two-level fabric (e.g. "
+                         "2x8 = 2 hosts x 8 slots; HOSTSxSLOTS must equal "
+                         "--ps-workers). Cross-host links cost "
+                         "--cross-alpha-x/--cross-beta-x times the "
+                         "intra-host wire; pacing, schedule choice "
+                         "(--schedule auto) and byte counters all become "
+                         "per-link-class. Replaces --emulate")
+    ap.add_argument("--cross-alpha-x", type=float, default=20.0,
+                    help="cross-host latency multiplier for --topology "
+                         "(default 20)")
+    ap.add_argument("--cross-beta-x", type=float, default=4.0,
+                    help="cross-host inverse-bandwidth multiplier for "
+                         "--topology (default 4)")
     ap.add_argument("--emulate", default="wire", choices=["wire", "none"],
                     help="ps wire emulation: 'wire' sleeps each message's "
                          "α+nβ under costmodel.PS_WIRE (paper's regime); "

@@ -162,6 +162,11 @@ class PeerMesh:
         #                                  thread out of a doomed exchange
         self.tracer = None               # obs.trace.Tracer from the worker's
         #                                  comm thread (None = tracing off)
+        self.host_of = None              # wid -> host id (set by the worker
+        #                                  when WELCOME ships a topology):
+        #                                  stats() then labels each peer link
+        #                                  intra/cross so BYE reports carry
+        #                                  the link class, not just the wid
 
     # -- mesh setup ----------------------------------------------------------
 
@@ -466,6 +471,10 @@ class PeerMesh:
             "peer_links": {
                 str(peer): {"messages": c["messages"].value,
                             "wire_bytes": c["wire_bytes"].value,
+                            **({"link": ("intra" if self.host_of(peer)
+                                         == self.host_of(self.wid)
+                                         else "cross")}
+                               if self.host_of is not None else {}),
                             **({"ef_ratio": r}
                                if (peer in self.links
                                    and (r := self.links[peer].ef_ratio()))

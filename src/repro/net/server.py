@@ -57,7 +57,7 @@ import numpy as np
 
 from repro.comm import rounds as comm_rounds
 from repro.comm import schedules as comm_schedules
-from repro.core import easgd_flat
+from repro.core import costmodel, easgd_flat
 from repro.core.compression import sign_ef_wire_nbytes
 from repro.ft import chaos as ft_chaos
 from repro.ft import membership as ft_membership
@@ -67,7 +67,8 @@ from repro.obs import live as obs_live
 from repro.obs import metrics as obs_metrics
 from repro.obs import report as obs_report
 from repro.obs import trace as obs_trace
-from repro.ps.runtime import PSResult, execute_rounds
+from repro.ps.runtime import (PSResult, execute_rounds,
+                              measured_link_profile)
 
 SYNC = easgd_flat.SYNC_FAMILY
 DEFAULT_TOKEN = "repro-net"
@@ -181,9 +182,20 @@ class MasterServer:
         self.n = self.w0.size
         P = cfg.n_workers
         self.tau = max(int(getattr(easgd, "tau", 1)), 1)
-        self.sched_name = cfg.resolved_schedule(self.n * 8)
+        # heterogeneous fabric: the topology prices every pacing sleep per
+        # link class; with schedule="auto" and no profile supplied, measure
+        # one NOW (short pairwise burst over the real substrate) so the
+        # choice below ranks candidates on the fabric the run actually has
+        self.topology = getattr(cfg, "topology", None)
+        self.profile = getattr(cfg, "link_profile", None)
+        if (self.topology is not None and self.profile is None
+                and cfg.schedule == "auto"):
+            self.profile = measured_link_profile(cfg)
+        self.sched_name = cfg.resolved_schedule(self.n * 8,
+                                                profile=self.profile)
         self.rounds = (comm_schedules.get(self.sched_name)
-                       .rounds(P, self.n * 8, cfg.net)
+                       .rounds(P, self.n * 8, cfg.net,
+                               topology=self.topology)
                        if cfg.algorithm in SYNC else [])
         self.sync_p2p = (cfg.algorithm in SYNC
                          and getattr(cfg, "sync_plane", "master") == "p2p")
@@ -310,6 +322,17 @@ class MasterServer:
         math are untouched — the DETECTOR must find it, not the iterates)."""
         codec = self.cfg.wire_compression
         slow = self.cfg.link_slow_factor(wid) if wid is not None else 1.0
+        if self.topology is not None:
+            # master links ride the topology's class for (MASTER, wid):
+            # cross-host whenever hosts > 1 — the master is its own box
+            link = self.topology.link(comm_rounds.MASTER,
+                                      0 if wid is None else wid)
+            return (slow * costmodel.t_msg(
+                        wire_payload_nbytes(self._down_elems(), codec),
+                        link),
+                    slow * costmodel.t_msg(
+                        wire_payload_nbytes(self._up_elems(), codec),
+                        link))
         return (slow * self.cfg.t_msg_emulated(
                     wire_payload_nbytes(self._down_elems(), codec)),
                 slow * self.cfg.t_msg_emulated(
@@ -320,19 +343,31 @@ class MasterServer:
     def _n_sync_rounds(self) -> int:
         return -(-self.cfg.total_iters // (self.cfg.n_workers * self.tau))
 
-    def _t_sync_wire(self) -> float:
+    def _t_sync_wire(self, wid: int | None = None) -> float:
         """Emulated α–β time of one full exchange: the rounds serialize,
-        each costs α + max_frac·n·β (its messages fly concurrently)."""
+        each costs α + max_frac·n·β (its messages fly concurrently). With
+        a topology each message is priced over ITS link class, and ``wid``
+        restricts to that worker's own segments — its personal deadline on
+        a heterogeneous mesh (intra-host pairs finish early and wait on
+        cross-host peers at the blocking recv, not by sleeping)."""
+        if self.topology is not None:
+            return comm_rounds.t_rounds(self.rounds, self.n * 8,
+                                        topology=self.topology, wid=wid)
         return sum(
             self.cfg.t_msg_emulated(max(m.frac for m in rnd) * self.n * 8)
             for rnd in self.rounds)
 
-    def _t_sync_wire_buckets(self) -> list:
+    def _t_sync_wire_buckets(self, wid: int | None = None) -> list:
         """Per-bucket emulated wire time: under bucketing each round
         fragments into per-bucket frames, so bucket b pays α + its own
         max clipped span·β for every round it appears in. Σ_b can exceed
         ``_t_sync_wire`` (more frames ⇒ more α) — that extra latency is
-        exactly what the overlap pipeline is for."""
+        exactly what the overlap pipeline is for. Topology/``wid`` as in
+        ``_t_sync_wire``: per-link-class, per-worker SEGMENT pacing."""
+        if self.topology is not None:
+            return comm_rounds.t_rounds_buckets(
+                self.rounds, self.padded, self.boundaries,
+                topology=self.topology, wid=wid)
         plans = comm_rounds.bucket_rounds(self.rounds, self.padded,
                                           self.boundaries)
         out = []
@@ -375,10 +410,14 @@ class MasterServer:
             "eta": e.eta, "mu": e.mu, "rho": e.rho,
             "codec": cfg.wire_compression,
             "warmup": 2,
-            "hb_interval_s": cfg.hb_interval_s,
+            "hb_interval_s": cfg.hb_interval_eff_s(),
             "trace": bool(cfg.trace),
             "trace_dir": cfg.trace_dir,
         }
+        if self.topology is not None:
+            welcome["topology"] = self.topology.to_wire()
+        if self.profile is not None:
+            welcome["link_profile"] = self.profile.to_wire()
         if self.sync_p2p:
             # a link_slow worker paces ITS exchange deadlines slower —
             # the mesh is lockstep, so its lag surfaces in every
@@ -392,14 +431,17 @@ class MasterServer:
                 "rounds": comm_schedules.rounds_to_wire(self.rounds),
                 "n_rounds": self._n_sync_rounds(),
                 "eval_rounds": self._eval_rounds(),
-                "t_wire_s": slow * self._t_sync_wire(),
+                "t_wire_s": slow * self._t_sync_wire(
+                    wid if self.topology is not None else None),
                 "peers": {str(w): a for w, a in self.peer_addrs.items()},
                 "bucket_bounds": self.boundaries,
                 "overlap": getattr(cfg, "overlap", True),
                 "update_backend": getattr(cfg, "update_backend",
                                           "numpy"),
                 "t_wire_bucket_s": ([slow * t for t in
-                                     self._t_sync_wire_buckets()]
+                                     self._t_sync_wire_buckets(
+                                         wid if self.topology is not None
+                                         else None)]
                                     if self.boundaries else []),
                 "elastic": self.elastic,
             })
@@ -588,17 +630,17 @@ class MasterServer:
                             for l in self.links.values())
                 cell = self.counters.gauge("hb_staleness_max_s")
                 cell.value = max(cell.value, round(worst, 3))
+            hb_timeout = self.cfg.hb_timeout_eff_s()
             stale = [w for w, l in self.links.items()
-                     if time.monotonic() - l.last_seen
-                     > self.cfg.hb_timeout_s]
+                     if time.monotonic() - l.last_seen > hb_timeout]
             if stale:
                 if absorb:
                     return self._member_lost(
                         stale[0], "dead",
-                        f"silent for more than {self.cfg.hb_timeout_s}s")
+                        f"silent for more than {hb_timeout}s")
                 raise RuntimeError(
                     f"worker(s) {stale} silent for more than "
-                    f"{self.cfg.hb_timeout_s}s (heartbeats stopped)")
+                    f"{hb_timeout}s (heartbeats stopped)")
             try:
                 wid, kind, detail = self.events.get(timeout=0.5)
             except queue.Empty:
@@ -663,7 +705,7 @@ class MasterServer:
         self.counters.counter("health_events")
         self.live = obs_live.LiveMonitor(
             cfg.n_workers, deadline_factor=cfg.straggler_factor,
-            hb_interval_s=cfg.hb_interval_s,
+            hb_interval_s=cfg.hb_interval_eff_s(),
             jsonl_path=cfg.telemetry_jsonl,
             counters=self.counters,
             meta={"algorithm": cfg.algorithm, "transport": "tcp",
@@ -1450,6 +1492,19 @@ class MasterServer:
             counters["peer_link_bytes"] = link_bytes
             counters["peer_wire_bytes"] = sum(link_bytes.values())
             counters["peer_messages"] = msgs
+            if self.topology is not None and self.topology.hosts > 1:
+                # per-link-class totals: how many bytes stayed on fast
+                # intra-host links vs crossed hosts — hierarchical's whole
+                # point is driving cross_host_bytes down
+                intra_b = cross_b = 0
+                for key, v in link_bytes.items():
+                    i, j = (int(x) for x in key.split("-"))
+                    if self.topology.host_of(i) == self.topology.host_of(j):
+                        intra_b += int(v)
+                    else:
+                        cross_b += int(v)
+                counters["intra_host_bytes"] = intra_b
+                counters["cross_host_bytes"] = cross_b
             # representative per-worker stats come from the LOWEST reporting
             # wid — under elastic membership worker 0 may not have survived
             rep = (self.bye_stats[min(self.bye_stats)]
@@ -1516,6 +1571,15 @@ class MasterServer:
         return merged
 
 
+def accept_backlog(n_workers: int) -> int:
+    """Rendezvous listen() backlog: every worker dials within the same
+    spawn burst, so at P = 64 a backlog of P + 2 overflows the SYN queue
+    the moment the accept loop blocks on a slow HELLO and late dialers
+    see connection-refused. Floor of 16 keeps small runs unchanged in
+    behavior; + 8 leaves room for monitor/STATS dials on top of P."""
+    return max(16, n_workers + 8)
+
+
 def run_ps_tcp(problem, easgd, cfg, eval_fn_override=None,
                join_timeout_s: float = 600.0):
     """The tcp transport's ``run_ps``: bind, spawn localhost workers (unless
@@ -1528,7 +1592,7 @@ def run_ps_tcp(problem, easgd, cfg, eval_fn_override=None,
     listener = socket.socket()
     listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
     listener.bind((cfg.tcp_host, cfg.tcp_port))
-    listener.listen(cfg.n_workers + 2)
+    listener.listen(accept_backlog(cfg.n_workers))
     port = listener.getsockname()[1]
     env_extra = None
     spec = ft_chaos.ChaosSpec.from_config(getattr(cfg, "chaos", None))

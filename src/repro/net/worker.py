@@ -352,6 +352,13 @@ def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
     rejoin = bool(cfg.get("rejoin"))
     reporter = 0                   # lowest live wid sends CENTER reports
     mesh.codec = cfg.get("codec", "none")
+    topo_wire = cfg.get("topology")
+    if topo_wire and int(topo_wire.get("hosts", 1)) > 1:
+        # two-level fabric: label this worker's peer links intra/cross in
+        # the BYE stats (pacing itself needs nothing here — the master
+        # ships per-wid t_wire_s already priced for OUR links)
+        slots = int(topo_wire["slots"])
+        mesh.host_of = lambda w: -1 if w < 0 else w // slots
     if not rejoin:
         # a rejoiner holds off: the RECONFIGURE that folds it in names the
         # epoch's actual geometry (the WELCOME's copy is already stale the
@@ -751,6 +758,8 @@ def _p2p_sync_loop(link: Link, mesh: PeerMesh, cfg: dict, grad_fn,
         stats.update({"comm_s": comm_s, "exposed_s": exposed_s,
                       "overlapped_s": max(0.0, comm_s - exposed_s),
                       "overlap": overlap, "update_backend": backend})
+        if mesh.host_of is not None:
+            stats["host"] = mesh.host_of(wid)
         if elastic:
             stats["epoch"] = cur_epoch
         if bye_wrap is not None:

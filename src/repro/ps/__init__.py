@@ -13,7 +13,8 @@ must stay importable without paying the jax import — that is what keeps
 repro.net TCP worker processes starting in well under a second.
 """
 _RUNTIME = ("Calibration", "PSConfig", "PSResult", "calibrate",
-            "calibrate_sim", "execute_rounds", "run_ps", "run_vs_des")
+            "calibrate_sim", "execute_rounds", "measured_link_profile",
+            "run_ps", "run_vs_des")
 _PROBLEMS = ("NUMPY_MLP", "NUMPY_MLP_LARGE", "NUMPY_MLP_MED", "JAX_MLP",
              "ProblemSpec", "make_numpy_mlp", "make_jax_mlp", "spec")
 _TRANSPORT = ("TRANSPORTS", "get_transport")

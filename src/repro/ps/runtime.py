@@ -169,6 +169,20 @@ class PSConfig:
     #                                  "kill"|"term" / dial_refuse_s) —
     #                                  serialized to the spawned workers'
     #                                  REPRO_CHAOS env; tcp only
+    # -- heterogeneous fabric (topology-aware scale-out) --------------------
+    topology: Optional[costmodel.Topology] = None    # hosts × slots link
+    #                                  model: it REPLACES emulate_net for
+    #                                  the sync family — every pacing sleep
+    #                                  (master rounds, p2p segment
+    #                                  deadlines) prices each message over
+    #                                  ITS link class (fast intra-host /
+    #                                  slow cross-host), and schedule="auto"
+    #                                  ranks candidates per-topology
+    link_profile: Optional[costmodel.LinkProfile] = None     # a MEASURED
+    #                                  per-link-class profile (ps.
+    #                                  measured_link_profile / calibrate):
+    #                                  when set, "auto" choice prices over
+    #                                  it instead of the nominal topology
 
     def __post_init__(self):
         assert self.algorithm in ALGORITHMS, self.algorithm
@@ -220,6 +234,27 @@ class PSConfig:
                 f"(transport='{self.transport}')")
             from repro.ft.chaos import ChaosSpec
             ChaosSpec.from_config(self.chaos)   # validates the fields
+        if self.topology is not None:
+            assert self.algorithm in SYNC, (
+                "a topology prices the sync family's exchange rounds — "
+                f"algorithm '{self.algorithm}' has none")
+            assert self.topology.p == self.n_workers, (
+                f"topology is {self.topology.hosts}x{self.topology.slots}="
+                f"{self.topology.p} slots but n_workers={self.n_workers}")
+            assert self.transport in ("thread", "tcp"), (
+                f"topology pacing exists on the thread and tcp planes "
+                f"(transport='{self.transport}')")
+            assert self.emulate_net is None, (
+                "topology REPLACES emulate_net: per-link pacing and the "
+                "global emulated wire would double-charge the clock")
+            assert not self.elastic, (
+                "topology-aware pacing + elastic membership are not yet "
+                "composed (an epoch's survivors no longer tile the "
+                "declared hosts x slots grid)")
+        if self.link_profile is not None:
+            assert self.topology is not None, (
+                "link_profile rides a topology — set PSConfig.topology to "
+                "the fabric the profile was measured on")
 
     @property
     def telemetry_on(self) -> bool:
@@ -233,10 +268,39 @@ class PSConfig:
             return 1.0
         return float(self.link_slow[wid])
 
-    def resolved_schedule(self, n_bytes: float) -> str:
-        if self.schedule == "auto":
-            return comm_schedules.choose(n_bytes, self.n_workers, self.net)
-        return comm_schedules.get(self.schedule).name
+    def resolved_schedule(self, n_bytes: float,
+                          profile: Optional[costmodel.LinkProfile] = None
+                          ) -> str:
+        """Schedule name for an n-byte exchange. "auto" ranks candidates
+        over, in preference order: an explicitly passed measured
+        ``profile``, ``self.link_profile``, the nominal ``self.topology``,
+        else the flat ``self.net`` — exactly today's choice when no
+        topology is in play."""
+        if self.schedule != "auto":
+            return comm_schedules.get(self.schedule).name
+        prof = profile if profile is not None else self.link_profile
+        if prof is not None:
+            return comm_schedules.choose(n_bytes, self.n_workers,
+                                         profile=prof)
+        if self.topology is not None:
+            return comm_schedules.choose(n_bytes, self.n_workers,
+                                         topology=self.topology)
+        return comm_schedules.choose(n_bytes, self.n_workers, self.net)
+
+    def hb_interval_eff_s(self, p: Optional[int] = None) -> float:
+        """Heartbeat period scaled with mesh size: P links at a fixed 2 s
+        period flood the master's reader threads and trip false hb_stale
+        verdicts at high P. Scale by max(1, P/16) — every P ≤ 16 config
+        keeps EXACTLY its configured period (tests pin this), P = 64 beats
+        4× slower."""
+        pp = self.n_workers if p is None else p
+        return self.hb_interval_s * max(1.0, pp / 16.0)
+
+    def hb_timeout_eff_s(self, p: Optional[int] = None) -> float:
+        """Staleness threshold that scales WITH the interval: never below
+        the configured timeout, and at least 12 effective periods so a
+        scaled-up interval cannot outrun its own deadline."""
+        return max(self.hb_timeout_s, 12.0 * self.hb_interval_eff_s(p))
 
     def t_msg_emulated(self, n_bytes: float) -> float:
         """Per-message emulated wire time (0 without emulation)."""
@@ -370,10 +434,16 @@ def _comm_executor(ctx: PSContext) -> None:
     _pc = time.perf_counter
     # emulated wire: the message rounds serialize, so one exchange costs
     # Σ (α + max_frac·n·β) on top of the real copies — paced as a single
-    # absolute deadline per exchange to be robust to oversleep
-    t_wire = sum(
-        ctx.cfg.t_msg_emulated(max(m.frac for m in rnd) * ctx.n * 8)
-        for rnd in ctx.rounds)
+    # absolute deadline per exchange to be robust to oversleep. With a
+    # topology each round is priced over its own link classes instead of
+    # one global wire (comm.rounds.t_rounds)
+    if ctx.cfg.topology is not None:
+        t_wire = comm_rounds.t_rounds(ctx.rounds, ctx.n * 8,
+                                      topology=ctx.cfg.topology)
+    else:
+        t_wire = sum(
+            ctx.cfg.t_msg_emulated(max(m.frac for m in rnd) * ctx.n * 8)
+            for rnd in ctx.rounds)
     try:
         for _ in range(n_rounds):
             if tr is not None:
@@ -717,7 +787,8 @@ def run_ps(problem, easgd: EASGDConfig, cfg: PSConfig,
     w0 = np.asarray(w0, np.float64)
     n, P = w0.size, cfg.n_workers
     sched_name = cfg.resolved_schedule(n * 8)
-    rounds = (comm_schedules.get(sched_name).rounds(P, n * 8, cfg.net)
+    rounds = (comm_schedules.get(sched_name)
+              .rounds(P, n * 8, cfg.net, topology=cfg.topology)
               if cfg.algorithm in SYNC else [])
     padded = n + (-n) % max(P, 1)
 
@@ -918,10 +989,16 @@ class Calibration:
     alpha: float
     link_alpha: float = 0.0
     link_beta: float = 0.0
+    profile: Optional[costmodel.LinkProfile] = None   # measured per-link-
+    #                                  class α–β (cfg.topology runs only):
+    #                                  what comm.choose consumes at build
+    #                                  time and WELCOME ships to workers
 
     def sim_config(self, algorithm: str, schedule: str,
                    eval_every_iters: int = 200, seed: int = 0,
-                   net: Optional[costmodel.Network] = None) -> SimConfig:
+                   net: Optional[costmodel.Network] = None,
+                   topology: Optional[costmodel.Topology] = None
+                   ) -> SimConfig:
         """The DES's per-worker compute time depends on the concurrency
         discipline: original_easgd serializes the whole pipeline (one
         worker computes at a time, at full-core speed — and that is
@@ -934,12 +1011,21 @@ class Calibration:
             t_compute = self.t_grad_serial
         else:
             t_compute = self.t_grad_concurrent
+        if topology is None and self.profile is not None:
+            topology = self.profile.topology
         if net is None:
-            net = (costmodel.Network("tcp-link", self.link_alpha,
-                                     self.link_beta)
-                   if self.transport == "tcp" and self.link_alpha
-                   else costmodel.Network("shm", self.alpha,
-                                          self.t_axpy / (self.n * 8)))
+            if topology is not None:
+                # topology runs pace on the declared link classes (the
+                # measured profile = declared + physical floor), so the
+                # DES must charge intra — the raw loopback link would
+                # undercharge a UNIFORM topology by the whole emulation
+                net = topology.intra
+            else:
+                net = (costmodel.Network("tcp-link", self.link_alpha,
+                                         self.link_beta)
+                       if self.transport == "tcp" and self.link_alpha
+                       else costmodel.Network("shm", self.alpha,
+                                              self.t_axpy / (self.n * 8)))
         return SimConfig(
             n_workers=self.n_workers,
             net=net,
@@ -948,7 +1034,8 @@ class Calibration:
             compute_jitter=0.0,
             t_update_per_byte=self.t_axpy / (self.n * 8),
             eval_every_iters=eval_every_iters,
-            seed=seed)
+            seed=seed,
+            topology=topology)
 
 
 def _tcp_concurrent_rate(problem, P: int, samples: int) -> float:
@@ -1062,10 +1149,75 @@ def calibrate(problem, cfg: PSConfig, samples: int = 10) -> Calibration:
         # this is what the DES charges when no wire is emulated
         from repro.net.wire import measure_link
         link_alpha, link_beta = measure_link(cfg.tcp_host)
+    profile = None
+    if cfg.topology is not None:
+        profile = measured_link_profile(
+            cfg, base=(link_alpha, link_beta) if link_alpha else None)
     return Calibration(n=n, n_workers=P, transport=cfg.transport,
                        t_grad_serial=t_serial, t_grad_concurrent=t_concurrent,
                        t_axpy=t_axpy, alpha=alpha,
-                       link_alpha=link_alpha, link_beta=link_beta)
+                       link_alpha=link_alpha, link_beta=link_beta,
+                       profile=profile)
+
+
+def measured_link_profile(cfg: PSConfig, counters=None,
+                          base: Optional[tuple] = None
+                          ) -> costmodel.LinkProfile:
+    """Learn a per-link-class α–β profile from the live machinery.
+
+    The physical floor comes from a short pairwise burst over the real
+    substrate — ``net.wire.measure_link`` frames small-RTT + one-way-bulk
+    probes through the actual repro.net framing for tcp, a timed memcpy
+    for the thread plane (its 'wire' is shared memory). A traced run's
+    ``counters['link_alpha_s']`` (clock-probe rtt/2 per master link)
+    overrides the burst α when present. The floor composes ADDITIVELY
+    with the emulated topology classes: pacing sleeps ride on top of real
+    transfer, so measured-α + class-α is the honest per-message estimate
+    (an upper bound when the OS overlaps them). ``base`` short-circuits
+    the burst with an already-measured (α, β) pair."""
+    topo = cfg.topology
+    assert topo is not None, "measured_link_profile needs cfg.topology"
+    detail: dict = {}
+    if base is not None:
+        alpha0, beta0 = base
+        source = f"measured:{cfg.transport}"
+    elif cfg.transport == "tcp":
+        from repro.net.wire import measure_link
+        alpha0, beta0 = measure_link(cfg.tcp_host, reps=12,
+                                     big_bytes=1_000_000)
+        source = "measured:tcp"
+    else:
+        buf, src = np.zeros(1 << 17), np.ones(1 << 17)
+        np.copyto(buf, src)                       # warm pages
+        t0 = time.perf_counter()
+        for _ in range(8):
+            np.copyto(buf, src)
+        beta0 = (time.perf_counter() - t0) / 8 / buf.nbytes
+        tiny_d, tiny_s = np.zeros(64), np.ones(64)
+        t0 = time.perf_counter()
+        for _ in range(100):
+            np.copyto(tiny_d, tiny_s)
+        alpha0 = (time.perf_counter() - t0) / 100
+        source = "measured:thread"
+    detail["alpha0_s"] = float(alpha0)
+    detail["beta0_s_per_byte"] = float(beta0)
+    probes = (counters or {}).get("link_alpha_s")
+    if isinstance(probes, dict) and probes:
+        vals = sorted(probes.values())
+        alpha0 = float(vals[len(vals) // 2])
+        detail["alpha0_s"] = alpha0
+        detail["alpha0_source"] = "clock-probe rtt/2 median"
+    intra = costmodel.Network(f"{topo.intra.name} +measured",
+                              topo.intra.alpha + alpha0,
+                              topo.intra.beta + beta0)
+    cross = (intra if topo.cross == topo.intra else
+             costmodel.Network(f"{topo.cross.name} +measured",
+                               topo.cross.alpha + alpha0,
+                               topo.cross.beta + beta0))
+    measured = costmodel.Topology(hosts=topo.hosts, slots=topo.slots,
+                                  intra=intra, cross=cross)
+    return costmodel.LinkProfile(topology=measured, source=source,
+                                 detail=detail)
 
 
 def calibrate_sim(problem, cfg: PSConfig, samples: int = 10,
@@ -1074,7 +1226,7 @@ def calibrate_sim(problem, cfg: PSConfig, samples: int = 10,
     algorithm/schedule."""
     cal = calibrate(problem, cfg, samples=samples)
     return cal.sim_config(
-        cfg.algorithm, cfg.resolved_schedule(cal.n * 8),
+        cfg.algorithm, cfg.resolved_schedule(cal.n * 8, profile=cal.profile),
         eval_every_iters=eval_every_iters or cfg.eval_every_iters,
         seed=cfg.seed)
 
@@ -1091,12 +1243,17 @@ def run_vs_des(problem, easgd: EASGDConfig, cfg: PSConfig,
         cal = calibrate(problem, cfg)
     built = problem.build() if hasattr(problem, "build") else problem
     w0, grad_fn, eval_fn = built
+    sched_name = cfg.resolved_schedule(cal.n * 8, profile=cal.profile)
     sim = cal.sim_config(
-        cfg.algorithm, cfg.resolved_schedule(cal.n * 8),
+        cfg.algorithm, sched_name,
         eval_every_iters=cfg.eval_every_iters, seed=cfg.seed,
         net=cfg.emulate_net)
     des = PSEngine(grad_fn, eval_fn, np.asarray(w0, np.float64), easgd,
                    sim).run(cfg.algorithm, total_iters=cfg.total_iters)
+    if cal.profile is not None and cfg.link_profile is None:
+        # the measured run must consume the SAME profile the chooser and
+        # the DES just priced — build-time choice, not a fresh guess
+        cfg = dataclasses.replace(cfg, link_profile=cal.profile)
     res = run_ps(problem, easgd, cfg)
     meas = res.total_time_s / max(res.total_iters, 1)
     pred = des.total_time_s / max(des.total_iters, 1)
@@ -1114,4 +1271,7 @@ def run_vs_des(problem, easgd: EASGDConfig, cfg: PSConfig,
         "curve_real": [(round(t, 4), it, e) for t, it, e in res.history],
         "curve_des": [(round(t, 4), it, e) for t, it, e in des.history],
     }
+    if cal.profile is not None:
+        record["profile_source"] = cal.profile.source
+        record["profile_detail"] = dict(cal.profile.detail)
     return res, des, record
